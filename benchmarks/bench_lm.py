@@ -1,0 +1,56 @@
+"""Benchmark: LM substrate step times on reduced configs (CPU baseline).
+
+Not TPU numbers — these keep the framework honest (catch regressions in
+the train/serve step structure) and calibrate the per-arch smoke shapes.
+TPU projections live in EXPERIMENTS.md §Roofline from the dry-run.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.smoke import reduced
+from repro.data import DataConfig, make_batch
+from repro.models import init_cache, init_params
+from repro.serve import make_decode_step, make_prefill_step
+from repro.train import AdamWConfig, init_train_state, make_train_step
+
+ARCHS = ["smollm-360m", "qwen2-moe-a2.7b", "jamba-1.5-large-398b",
+         "rwkv6-7b", "minicpm3-4b", "musicgen-medium"]
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def rows():
+    out = []
+    for name in ARCHS:
+        cfg = reduced(get_config(name))
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        B, S = 2, 64
+        batch = {k: jnp.asarray(v) for k, v in make_batch(
+            cfg, DataConfig(), step=0, shard=0, batch=B,
+            seq_len=S).items()}
+        opt = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=100)
+        step = jax.jit(make_train_step(cfg, opt, remat="none"))
+        state = init_train_state(params, opt)
+        us = _time(lambda s: step(s, batch)[0], state)
+        tokens = B * S
+        out.append((f"train_step/{name}-smoke", us,
+                    f"{tokens / us * 1e6:.0f}tok/s"))
+
+        serve_batch = {k: v for k, v in batch.items() if k != "labels"}
+        prefill = jax.jit(make_prefill_step(cfg, max_len=S + 8))
+        us = _time(lambda p: prefill(p, serve_batch), params)
+        out.append((f"prefill/{name}-smoke", us,
+                    f"{tokens / us * 1e6:.0f}tok/s"))
+    return out

@@ -1,0 +1,54 @@
+"""Benchmark: SNP transition step throughput vs. system size.
+
+The paper's §5 evaluates simulation speed on one 3-neuron system; this
+harness sweeps system size (the paper's future-work axis: "very large
+systems with equally large matrices") and frontier width, comparing the
+pure-jnp reference semantics against the fused Pallas kernel (interpret
+mode on CPU — kernel numbers are correctness+structure proxies, not TPU
+wall-times; TPU projections come from the dry-run roofline).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compile_system
+from repro.core.generators import random_system, scaled_pi
+from repro.kernels.snp_step import snp_step, snp_step_ref
+
+
+def _time(fn, *args, reps=5, **kw):
+    fn(*args, **kw)  # compile
+    jax.block_until_ready(fn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def rows():
+    out = []
+    rng = np.random.default_rng(0)
+    for m, rpn, B, T in [(3, 2, 64, 16), (30, 2, 64, 16),
+                         (128, 2, 128, 32), (512, 2, 128, 32),
+                         (2048, 2, 64, 32)]:
+        system = (scaled_pi(m // 3) if m <= 30
+                  else random_system(m, rpn, min(0.2, 8 / m), seed=1))
+        comp = compile_system(system)
+        cfgs = jnp.asarray(
+            rng.integers(0, 4, size=(B, comp.num_neurons)), jnp.int32)
+        us_ref = _time(snp_step_ref, cfgs, comp, T)
+        expansions = B * T
+        out.append((f"snp_step_ref/m{comp.num_neurons}_n{comp.num_rules}"
+                    f"_B{B}_T{T}", us_ref,
+                    f"{expansions / us_ref:.1f}exp/us"))
+        if comp.num_neurons <= 512:
+            us_k = _time(snp_step, cfgs, comp, max_branches=T,
+                         block_b=8, block_t=16, block_n=128)
+            out.append((f"snp_step_pallas/m{comp.num_neurons}"
+                        f"_n{comp.num_rules}_B{B}_T{T}", us_k,
+                        f"interp={us_k / us_ref:.1f}x_ref"))
+    return out

@@ -1,0 +1,42 @@
+"""Benchmark: full computation-tree exploration (paper §5 run + Fig. 4).
+
+Measures end-to-end BFS throughput (configurations discovered per second)
+on the paper's Π, scaled copies of it, and random systems — the direct
+analog of the paper's simulation runs, where the entire host/device loop is
+the measured quantity.
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import compile_system, explore, paper_pi
+from repro.core.generators import nd_chain, random_system, scaled_pi
+
+
+def rows():
+    out = []
+    cases = [
+        ("pi", compile_system(paper_pi(True)),
+         dict(max_steps=16, frontier_cap=128, visited_cap=2048,
+              max_branches=16)),
+        ("pi_x4", compile_system(scaled_pi(4)),
+         dict(max_steps=6, frontier_cap=512, visited_cap=16384,
+              max_branches=64)),
+        ("random_64n", compile_system(random_system(64, 2, 0.08, seed=5)),
+         dict(max_steps=8, frontier_cap=512, visited_cap=16384,
+              max_branches=64)),
+        ("nd_chain_6", compile_system(nd_chain(6)),
+         dict(max_steps=8, frontier_cap=512, visited_cap=8192,
+              max_branches=64)),
+    ]
+    for name, comp, kw in cases:
+        explore(comp, **kw)  # warm compile
+        t0 = time.perf_counter()
+        res = explore(comp, **kw)
+        dt = time.perf_counter() - t0
+        us = dt * 1e6
+        out.append((f"explore/{name}", us / max(res.steps, 1),
+                    f"{res.num_discovered}cfg@{res.steps}lvl,"
+                    f"{res.num_discovered / dt:.0f}cfg/s"))
+    return out

@@ -1,0 +1,49 @@
+"""Distributed SNP exploration: shard the computation-tree search over
+many devices (hash-partitioned frontier + visited set, all_to_all
+exchange).
+
+Run with fake devices on CPU:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/explore_distributed.py
+"""
+
+import time
+
+import jax
+
+from repro.core import compile_system, explore
+from repro.core.distributed import explore_distributed
+from repro.core.generators import random_system, scaled_pi
+
+
+def main():
+    ndev = len(jax.devices())
+    print(f"devices: {ndev}")
+
+    print("\n-- paper's Π scaled x8 (24 neurons, 40 rules) --")
+    comp = compile_system(scaled_pi(8))
+    t0 = time.time()
+    res = explore_distributed(comp, max_steps=6, frontier_cap=256,
+                              visited_cap=8192, max_branches=64)
+    print(f"distributed: {res.num_discovered} configs in "
+          f"{res.steps} levels, {time.time()-t0:.2f}s "
+          f"(overflow: {res.branch_overflow})")
+
+    print("\n-- random 64-neuron system --")
+    comp = compile_system(random_system(64, 2, 0.08, seed=5))
+    t0 = time.time()
+    res = explore_distributed(comp, max_steps=8,
+                              frontier_cap=8192 // ndev,
+                              visited_cap=65536 // ndev, max_branches=64)
+    single = explore(comp, max_steps=8, frontier_cap=8192,
+                     visited_cap=65536, max_branches=64)
+    agree = ({tuple(r) for r in res.configs}
+             == {tuple(r) for r in single.configs})
+    print(f"distributed {res.num_discovered} vs single "
+          f"{single.num_discovered}; sets agree: {agree} "
+          f"(overflow d={res.frontier_overflow} s={single.frontier_overflow})")
+
+
+if __name__ == "__main__":
+    main()

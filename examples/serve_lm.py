@@ -1,0 +1,22 @@
+"""Batched serving example: prefill a request batch, greedy-decode a
+continuation, for any assigned architecture (reduced configs on CPU).
+
+    PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py --arch musicgen-medium
+"""
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--smoke", "--batch", "4",
+                "--prompt-len", "32", "--gen", "16"])
+
+
+if __name__ == "__main__":
+    main()

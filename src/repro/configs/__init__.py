@@ -1,0 +1,29 @@
+"""Architecture registry: one module per assigned arch + the paper's SNP
+workloads.  ``get_config(name)`` / ``list_archs()`` are the public API."""
+
+from .base import ArchConfig, SHAPES, ShapeSpec, get_config, list_archs, shape_for
+
+_LOADED = False
+
+
+def _load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from . import (  # noqa: F401
+        command_r_35b,
+        grok1_314b,
+        jamba15_large,
+        minicpm3_4b,
+        minicpm_2b,
+        musicgen_medium,
+        qwen2_moe_a2_7b,
+        qwen2_vl_7b,
+        rwkv6_7b,
+        smollm_360m,
+    )
+
+
+__all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "get_config", "list_archs",
+           "shape_for"]

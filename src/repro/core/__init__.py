@@ -1,0 +1,25 @@
+"""Core SNP-system engine: the paper's contribution as a composable module.
+
+Public API:
+
+* :class:`repro.core.system.SNPSystem`, :class:`repro.core.system.Rule` —
+  system specification (paper Definition 1).
+* :func:`repro.core.matrix.compile_system` — matrix encoding (paper §2.2).
+* :mod:`repro.core.semantics` — batched applicability / spiking-vector
+  enumeration / transition (paper eq. 2, Alg. 2).
+* :func:`repro.core.engine.explore` — computation-tree BFS (paper Alg. 1).
+* :mod:`repro.core.distributed` — multi-chip exploration (shard_map).
+* :mod:`repro.core.generators` — synthetic system families for scaling.
+"""
+
+from .engine import ExploreResult, emission_gaps, explore, run_trace, successor_set
+from .matrix import CompiledSNP, compile_system
+from .semantics import applicability, branch_info, next_configs, spiking_vectors
+from .system import Rule, SNPSystem, paper_pi
+
+__all__ = [
+    "SNPSystem", "Rule", "paper_pi",
+    "CompiledSNP", "compile_system",
+    "applicability", "branch_info", "next_configs", "spiking_vectors",
+    "explore", "ExploreResult", "successor_set", "emission_gaps", "run_trace",
+]

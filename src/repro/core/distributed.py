@@ -1,0 +1,241 @@
+"""Multi-chip SNP computation-tree exploration (shard_map).
+
+The paper runs on one GPU; at fleet scale both the frontier and the visited
+set must shard.  The scheme (DESIGN.md §2):
+
+* **hash ownership** — configuration with hash ``h`` is owned by device
+  ``h mod n_dev``.  Ownership decides (a) which visited-shard a config is
+  deduped against and (b) which frontier-shard expands it.  Uniform hashing
+  doubles as load balancing: each BFS level spreads across chips in
+  expectation regardless of tree shape.
+* **expand locally, exchange by owner** — each device expands its frontier
+  shard (the same fused math as the single-chip engine; Pallas kernel on
+  TPU), bins successors by owner, and exchanges them with one tiled
+  ``all_to_all``.  Received candidates are deduped against the *local*
+  visited shard only — no global synchronization beyond the one collective.
+* **static capacities** — per-destination send slots, frontier and visited
+  shards are fixed-size; every overflow is detected and psum-reported.
+  Dropped candidates are simply *not marked visited*, so they are
+  regenerated and explored later: soundness is preserved (same argument as
+  the single-chip engine).
+
+The per-step program is one jit(shard_map(...)) over a 1-D device axis —
+on the production mesh this is the flattened ``(pod, data, model)`` axes
+(SNP exploration is pure data parallelism; the model axes contribute their
+devices to the frontier partition).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .engine import ExploreResult
+from .hashing import SENTINEL, config_hash
+from .matrix import CompiledSNP, compile_system
+from .semantics import next_configs
+from .system import SNPSystem
+
+__all__ = ["explore_distributed"]
+
+
+def _device_step(comp, frontier, frontier_valid, visited_hi, visited_lo,
+                 archive, archive_n, flags, *, axis, max_branches, send_cap):
+    """Per-device body (runs under shard_map over ``axis``)."""
+    ndev = jax.lax.axis_size(axis)
+    me = jax.lax.axis_index(axis)
+    F, m = frontier.shape
+    T = max_branches
+    K = F * T
+    C = send_cap
+
+    # --- expand local frontier -------------------------------------------
+    out = next_configs(frontier, comp, T)
+    cand = out.configs.reshape(K, m)
+    valid = (out.valid & frontier_valid[:, None]).reshape(K)
+    branch_ovf = jnp.any(out.overflow & frontier_valid)
+
+    # --- bin successors by hash owner and exchange ------------------------
+    hi, lo = config_hash(cand)
+    owner = jnp.where(valid, (hi % np.uint32(ndev)).astype(jnp.int32), ndev)
+    order = jnp.argsort(owner, stable=True)
+    owner_sorted = owner[order]
+    counts = jnp.bincount(jnp.minimum(owner, ndev), length=ndev + 1)[:ndev]
+    group_start = jnp.cumsum(counts) - counts
+    pos = jnp.arange(K, dtype=jnp.int32) - jnp.where(
+        owner_sorted < ndev, group_start[jnp.minimum(owner_sorted, ndev - 1)], 0)
+    send_ovf = jnp.any(counts > C)
+    slot = jnp.where(
+        (owner_sorted < ndev) & (pos < C),
+        owner_sorted * C + pos,
+        ndev * C,  # dropped
+    )
+    send_cfg = jnp.zeros((ndev * C, m), jnp.int32).at[slot].set(
+        cand[order], mode="drop")
+    send_val = jnp.zeros((ndev * C,), jnp.int32).at[slot].set(
+        (owner_sorted < ndev).astype(jnp.int32), mode="drop")
+    # ship the (8-byte) hashes with the payload: rehashing the received
+    # candidates costs ~m*4 bytes of elementwise traffic per config, the
+    # wire cost of sending them is negligible (§Perf cell C)
+    send_hi = jnp.zeros((ndev * C,), jnp.uint32).at[slot].set(
+        hi[order], mode="drop")
+    send_lo = jnp.zeros((ndev * C,), jnp.uint32).at[slot].set(
+        lo[order], mode="drop")
+
+    recv_cfg = jax.lax.all_to_all(send_cfg, axis, 0, 0, tiled=True)
+    recv_val = jax.lax.all_to_all(send_val, axis, 0, 0, tiled=True)
+    rhi = jax.lax.all_to_all(send_hi, axis, 0, 0, tiled=True)
+    rlo = jax.lax.all_to_all(send_lo, axis, 0, 0, tiled=True)
+    R = ndev * C
+
+    # --- dedup received candidates against the local visited shard --------
+    rvalid = recv_val == 1
+    rhi = jnp.where(rvalid, rhi, SENTINEL)
+    rlo = jnp.where(rvalid, rlo, SENTINEL)
+    V = visited_hi.shape[0]
+    all_hi = jnp.concatenate([visited_hi, rhi])
+    all_lo = jnp.concatenate([visited_lo, rlo])
+    payload = jnp.concatenate(
+        [jnp.full((V,), R, jnp.int32), jnp.arange(R, dtype=jnp.int32)])
+    is_cand = jnp.concatenate(
+        [jnp.zeros((V,), jnp.int32), rvalid.astype(jnp.int32)])
+    s_hi, s_lo, s_cand, s_payload = jax.lax.sort(
+        (all_hi, all_lo, is_cand, payload), num_keys=3)
+    eq_prev = jnp.concatenate([
+        jnp.zeros((1,), bool),
+        (s_hi[1:] == s_hi[:-1]) & (s_lo[1:] == s_lo[:-1])])
+    new_sorted = (s_cand == 1) & ~eq_prev
+    new_mask = jnp.zeros((R,), bool).at[s_payload].set(new_sorted, mode="drop")
+
+    n_new = jnp.sum(new_mask, dtype=jnp.int32)
+    sel = jnp.argsort(~new_mask, stable=True)[:F]
+    n_ins = jnp.minimum(n_new, F)
+    ins = jnp.arange(F) < n_ins
+    next_frontier = recv_cfg[sel]
+    frontier_ovf = n_new > F
+
+    ins_hi = jnp.where(ins, rhi[sel], SENTINEL)
+    ins_lo = jnp.where(ins, rlo[sel], SENTINEL)
+    visited_n = jnp.sum(visited_hi != SENTINEL) + jnp.sum(
+        (visited_hi == SENTINEL) & (visited_lo != SENTINEL))
+    m_hi, m_lo = jax.lax.sort(
+        (jnp.concatenate([visited_hi, ins_hi]),
+         jnp.concatenate([visited_lo, ins_lo])), num_keys=2)
+    visited_ovf = (visited_n + n_ins) > V
+
+    arch_idx = jnp.where(ins, archive_n + jnp.arange(F), archive.shape[0])
+    archive = archive.at[arch_idx].set(next_frontier, mode="drop")
+    archive_n = jnp.minimum(archive_n + n_ins, archive.shape[0])
+
+    flags = flags | jnp.stack([branch_ovf | send_ovf, frontier_ovf,
+                               visited_ovf])
+    total_new = jax.lax.psum(n_ins, axis)
+    return (next_frontier, ins, m_hi[:V], m_lo[:V], archive, archive_n,
+            flags, total_new)
+
+
+def explore_distributed(
+    system: SNPSystem | CompiledSNP,
+    *,
+    mesh: Optional[Mesh] = None,
+    max_steps: int = 64,
+    frontier_cap: int = 64,       # per device
+    visited_cap: int = 2048,      # per device
+    max_branches: int = 32,
+    send_cap: Optional[int] = None,   # per (src,dst) pair
+    init: Optional[Sequence[int]] = None,
+) -> ExploreResult:
+    """Hash-partitioned multi-device BFS.  Semantics identical to
+    :func:`repro.core.engine.explore`; scaling is linear in devices for
+    frontier/visited capacity and expansion FLOPs."""
+    comp = system if isinstance(system, CompiledSNP) else compile_system(system)
+    if mesh is None:
+        devs = np.array(jax.devices())
+        mesh = Mesh(devs, ("x",))
+        axis = "x"
+    else:
+        axis = mesh.axis_names[0] if len(mesh.axis_names) == 1 else None
+        if axis is None:
+            # flatten all axes of an N-d mesh into one exploration axis
+            devs = mesh.devices.reshape(-1)
+            mesh = Mesh(devs, ("x",))
+            axis = "x"
+    ndev = mesh.devices.size
+    m = comp.num_neurons
+    F, V, T = frontier_cap, visited_cap, max_branches
+    C = send_cap if send_cap is not None else max(16, (F * T) // max(ndev, 1))
+
+    c0 = comp.init_config if init is None else jnp.asarray(init, jnp.int32)
+    hi0, lo0 = config_hash(c0)
+    owner0 = int(np.asarray(hi0)) % ndev
+
+    # global state, sharded on the leading device axis
+    shard = NamedSharding(mesh, P(axis))
+    repl = NamedSharding(mesh, P())
+
+    frontier = np.zeros((ndev * F, m), np.int32)
+    fvalid = np.zeros((ndev * F,), bool)
+    vhi = np.full((ndev * V,), int(SENTINEL), np.uint32)
+    vlo = np.full((ndev * V,), int(SENTINEL), np.uint32)
+    archive = np.zeros((ndev * V, m), np.int32)
+    arch_n = np.zeros((ndev,), np.int32)
+    frontier[owner0 * F] = np.asarray(c0)
+    fvalid[owner0 * F] = True
+    vhi[owner0 * V] = int(np.asarray(hi0))
+    vlo[owner0 * V] = int(np.asarray(lo0))
+    archive[owner0 * V] = np.asarray(c0)
+    arch_n[owner0] = 1
+    flags = np.zeros((ndev, 3), bool)
+
+    state = (
+        jax.device_put(frontier, shard), jax.device_put(fvalid, shard),
+        jax.device_put(vhi, shard), jax.device_put(vlo, shard),
+        jax.device_put(archive, shard), jax.device_put(arch_n, shard),
+        jax.device_put(flags, shard),
+    )
+
+    step_fn = jax.jit(
+        jax.shard_map(
+            functools.partial(_device_step, axis=axis, max_branches=T,
+                              send_cap=C),
+            mesh=mesh,
+            in_specs=(P(), P(axis), P(axis), P(axis), P(axis), P(axis),
+                      P(axis), P(axis)),
+            out_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis),
+                       P(axis), P()),
+        ),
+        static_argnames=(),
+    )
+
+    steps = 0
+    drained = False
+    for _ in range(max_steps):
+        (f, fv, hi, lo, arc, an, fl, total_new) = step_fn(comp, *state)
+        # shard_map flattens per-device scalars: archive_n comes back (ndev,)
+        state = (f, fv, hi, lo, arc, an, fl)
+        steps += 1
+        if int(total_new) == 0:
+            drained = True
+            break
+
+    frontier, fvalid, vhi, vlo, archive, arch_n, flags = state
+    arch_n = np.asarray(arch_n)
+    archive = np.asarray(archive)
+    configs = np.concatenate([
+        archive[d * V: d * V + int(arch_n[d])] for d in range(ndev)
+    ]) if arch_n.sum() else np.zeros((0, m), np.int32)
+    flags = np.asarray(flags).reshape(ndev, 3).any(axis=0)
+    return ExploreResult(
+        configs=configs,
+        num_discovered=int(arch_n.sum()),
+        steps=steps,
+        exhausted=drained and not flags.any(),
+        branch_overflow=bool(flags[0]),
+        frontier_overflow=bool(flags[1]),
+        visited_overflow=bool(flags[2]),
+    )

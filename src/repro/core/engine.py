@@ -1,0 +1,317 @@
+"""Breadth-first exploration of an SNP system's computation tree.
+
+Implements Algorithm 1 of the paper as a single-device, fully on-device
+loop: each jitted step expands the whole frontier, hashes every successor,
+dedups against the visited set (sort-based, exactly-once emission), and
+compacts the new configurations into the next frontier.  The host only sees
+a handful of scalars per step — the paper's host/device ping-pong (strings
+to Python, vectors back) is gone (DESIGN.md §2).
+
+Static-shape discipline: the frontier capacity ``F``, branch fan-out cap
+``T`` and visited/archive capacity ``V`` are compile-time constants; all
+overflow conditions are detected and reported, never silently dropped:
+
+* ``branch_overflow``   — some config had Ψ > T (only its first T branches
+  were explored);
+* ``frontier_overflow`` — more than F new configs in one step.  The excess
+  are *not* marked visited, so they are re-generated and expanded later:
+  exploration stays sound, only the "discovered" count may double-count;
+* ``visited_overflow``  — visited set is full; same soundness argument.
+
+The multi-chip version (hash-partitioned visited set, all_to_all exchange)
+lives in :mod:`repro.core.distributed`.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hashing import SENTINEL, config_hash
+from .matrix import CompiledSNP, compile_system
+from .semantics import next_configs
+from .system import SNPSystem
+
+__all__ = ["ExploreState", "ExploreResult", "explore", "successor_set",
+           "emission_gaps", "run_trace"]
+
+
+class ExploreState(NamedTuple):
+    frontier: jnp.ndarray       # (F, m) int32
+    frontier_n: jnp.ndarray     # () int32 — valid prefix length
+    visited_hi: jnp.ndarray     # (V,) uint32, sorted (with lo) lexicographically
+    visited_lo: jnp.ndarray     # (V,) uint32
+    visited_n: jnp.ndarray      # () int32
+    archive: jnp.ndarray        # (V, m) int32 — discovery order
+    archive_n: jnp.ndarray      # () int32
+    step: jnp.ndarray           # () int32
+    branch_overflow: jnp.ndarray    # () bool
+    frontier_overflow: jnp.ndarray  # () bool
+    visited_overflow: jnp.ndarray   # () bool
+
+
+@dataclass(frozen=True)
+class ExploreResult:
+    configs: np.ndarray         # (n_discovered, m) in discovery order
+    num_discovered: int
+    steps: int
+    exhausted: bool             # True => tree fully explored (no overflow, frontier drained)
+    branch_overflow: bool
+    frontier_overflow: bool
+    visited_overflow: bool
+
+    def as_strings(self) -> List[str]:
+        """Configs in the paper's ``allGenCk`` 'a-b-c' string format."""
+        return ["-".join(str(int(v)) for v in row) for row in self.configs]
+
+
+def _init_state(comp: CompiledSNP, frontier_cap: int, visited_cap: int,
+                init: Optional[jnp.ndarray] = None) -> ExploreState:
+    m = comp.num_neurons
+    c0 = comp.init_config if init is None else jnp.asarray(init, jnp.int32)
+    frontier = jnp.zeros((frontier_cap, m), jnp.int32).at[0].set(c0)
+    hi0, lo0 = config_hash(c0)
+    vhi = jnp.full((visited_cap,), SENTINEL, jnp.uint32).at[0].set(hi0)
+    vlo = jnp.full((visited_cap,), SENTINEL, jnp.uint32).at[0].set(lo0)
+    archive = jnp.zeros((visited_cap, m), jnp.int32).at[0].set(c0)
+    false = jnp.asarray(False)
+    return ExploreState(
+        frontier=frontier, frontier_n=jnp.asarray(1, jnp.int32),
+        visited_hi=vhi, visited_lo=vlo, visited_n=jnp.asarray(1, jnp.int32),
+        archive=archive, archive_n=jnp.asarray(1, jnp.int32),
+        step=jnp.asarray(0, jnp.int32),
+        branch_overflow=false, frontier_overflow=false, visited_overflow=false,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("max_branches",))
+def _explore_step(state: ExploreState, comp: CompiledSNP,
+                  max_branches: int) -> ExploreState:
+    F, m = state.frontier.shape
+    V = state.visited_hi.shape[0]
+    T = max_branches
+
+    live = jnp.arange(F) < state.frontier_n
+    out = next_configs(state.frontier, comp, T)
+
+    cand = out.configs.reshape(F * T, m)
+    cand_valid = (out.valid & live[:, None]).reshape(F * T)
+    branch_ovf = jnp.any(out.overflow & live)
+
+    hi, lo = config_hash(cand)
+    hi = jnp.where(cand_valid, hi, SENTINEL)
+    lo = jnp.where(cand_valid, lo, SENTINEL)
+
+    # --- sort-based dedup: visited entries and candidates in one keyspace.
+    K = F * T
+    all_hi = jnp.concatenate([state.visited_hi, hi])
+    all_lo = jnp.concatenate([state.visited_lo, lo])
+    # candidates carry their index as payload; visited carry K (dropped).
+    payload = jnp.concatenate(
+        [jnp.full((V,), K, jnp.int32), jnp.arange(K, dtype=jnp.int32)]
+    )
+    is_cand = jnp.concatenate(
+        [jnp.zeros((V,), jnp.int32), cand_valid.astype(jnp.int32)]
+    )
+    # Keys: (hi, lo, 1-is_cand ... ) — visited first within equal hashes so a
+    # candidate equal to a visited entry sees eq_prev=True.  Sorting
+    # (hi, lo, ~cand) keeps visited (0) ahead of candidates (1).
+    s_hi, s_lo, s_cand, s_payload = jax.lax.sort(
+        (all_hi, all_lo, is_cand, payload), num_keys=3
+    )
+    eq_prev = jnp.concatenate([
+        jnp.zeros((1,), bool),
+        (s_hi[1:] == s_hi[:-1]) & (s_lo[1:] == s_lo[:-1]),
+    ])
+    new_sorted = (s_cand == 1) & ~eq_prev
+    # scatter back to candidate order (payload == K for visited -> dropped)
+    new_mask = (
+        jnp.zeros((K,), bool).at[s_payload].set(new_sorted, mode="drop")
+    )
+
+    n_new = jnp.sum(new_mask, dtype=jnp.int32)
+    # new candidates first (stable), then everything else
+    order = jnp.argsort(jnp.logical_not(new_mask), stable=True)
+    n_ins = jnp.minimum(n_new, F)  # only these become frontier AND visited
+    take = jnp.arange(F)
+    sel = order[:F]
+    next_frontier = cand[sel]
+    ins_mask = take < n_ins
+
+    # --- visited merge (entries beyond capacity fall off the sorted tail)
+    ins_hi = jnp.where(ins_mask, hi[sel], SENTINEL)
+    ins_lo = jnp.where(ins_mask, lo[sel], SENTINEL)
+    m_hi, m_lo = jax.lax.sort(
+        (jnp.concatenate([state.visited_hi, ins_hi]),
+         jnp.concatenate([state.visited_lo, ins_lo])),
+        num_keys=2,
+    )
+    visited_n = jnp.minimum(state.visited_n + n_ins, V)
+    visited_ovf = state.visited_overflow | (state.visited_n + n_ins > V)
+
+    # --- archive append in discovery order
+    arch_idx = jnp.where(ins_mask, state.archive_n + take, V)
+    archive = state.archive.at[arch_idx].set(next_frontier, mode="drop")
+    archive_n = jnp.minimum(state.archive_n + n_ins, V)
+
+    return ExploreState(
+        frontier=next_frontier,
+        frontier_n=n_ins,
+        visited_hi=m_hi[:V], visited_lo=m_lo[:V], visited_n=visited_n,
+        archive=archive, archive_n=archive_n,
+        step=state.step + 1,
+        branch_overflow=state.branch_overflow | branch_ovf,
+        frontier_overflow=state.frontier_overflow | (n_new > F),
+        visited_overflow=visited_ovf,
+    )
+
+
+def explore(
+    system: SNPSystem | CompiledSNP,
+    *,
+    max_steps: int = 64,
+    frontier_cap: int = 256,
+    visited_cap: int = 4096,
+    max_branches: int = 64,
+    init: Optional[Sequence[int]] = None,
+) -> ExploreResult:
+    """BFS-explore the computation tree (paper Algorithm 1).
+
+    Stops when the frontier drains (both paper stopping criteria are
+    subsumed: dead configs — including the zero vector — produce no
+    successors, and already-seen configs are never re-inserted) or after
+    ``max_steps`` levels.
+    """
+    comp = system if isinstance(system, CompiledSNP) else compile_system(system)
+    init_arr = None if init is None else jnp.asarray(init, jnp.int32)
+    state = _init_state(comp, frontier_cap, visited_cap, init_arr)
+    steps = 0
+    drained = False
+    for _ in range(max_steps):
+        state = _explore_step(state, comp, max_branches)
+        steps += 1
+        if int(state.frontier_n) == 0:
+            drained = True
+            break
+    n = int(state.archive_n)
+    ovf = (bool(state.branch_overflow), bool(state.frontier_overflow),
+           bool(state.visited_overflow))
+    return ExploreResult(
+        configs=np.asarray(state.archive[:n]),
+        num_discovered=n,
+        steps=steps,
+        exhausted=drained and not any(ovf),
+        branch_overflow=ovf[0],
+        frontier_overflow=ovf[1],
+        visited_overflow=ovf[2],
+    )
+
+
+# ---------------------------------------------------------------------------
+# Small-system utilities (host-driven, used by tests & the paper repro)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("max_branches",))
+def _succ_one(config, comp, max_branches):
+    out = next_configs(config, comp, max_branches)
+    return out.configs, out.valid, out.emissions, out.overflow
+
+
+def successor_set(
+    comp: CompiledSNP, config: Sequence[int], max_branches: int = 64
+) -> List[Tuple[Tuple[int, ...], int]]:
+    """Distinct (successor, emission) pairs of one configuration."""
+    c = jnp.asarray(config, jnp.int32)
+    cfgs, valid, emis, ovf = _succ_one(c, comp, max_branches)
+    if bool(ovf):
+        raise ValueError("branch overflow; raise max_branches")
+    seen, out = set(), []
+    for i in np.nonzero(np.asarray(valid))[0]:
+        key = (tuple(int(v) for v in cfgs[i]), int(emis[i]))
+        if key not in seen:
+            seen.add(key)
+            out.append(key)
+    return out
+
+
+def emission_gaps(
+    comp: CompiledSNP, *, max_time: int, max_gap: int,
+    max_branches: int = 64,
+) -> set[int]:
+    """All gaps between the first two environment emissions, over every
+    computation path of length <= ``max_time``.
+
+    The number computed by an SNP generator is exactly this gap (paper §2.1);
+    for the paper's Π in exact mode the result must be {2, 3, ...} ∩ bound.
+    BFS over *augmented* states (config, elapsed-since-first-emission) keeps
+    the search polynomial even though the path count is exponential.
+    """
+    # phase A: no emission yet; phase B: (config, elapsed) since 1st emission
+    init = tuple(int(v) for v in np.asarray(comp.init_config))
+    phase_a: set = {init}
+    phase_b: set = set()
+    gaps: set[int] = set()
+    for _ in range(max_time):
+        new_a: set = set()
+        new_b: set = set()
+        for cfg in phase_a:
+            for nxt, emis in successor_set(comp, cfg, max_branches):
+                if emis > 0:
+                    new_b.add((nxt, 0))
+                else:
+                    new_a.add(nxt)
+        for cfg, elapsed in phase_b:
+            if elapsed + 1 > max_gap:
+                continue
+            for nxt, emis in successor_set(comp, cfg, max_branches):
+                if emis > 0:
+                    gaps.add(elapsed + 1)
+                else:
+                    new_b.add((nxt, elapsed + 1))
+        phase_a, phase_b = new_a, new_b
+        if not phase_a and not phase_b:
+            break
+    return gaps
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "max_branches", "policy"))
+def _trace_scan(comp, c0, key, steps, max_branches, policy):
+    def body(carry, _):
+        cfg, key = carry
+        out = next_configs(cfg, comp, max_branches)
+        n_valid = jnp.sum(out.valid, dtype=jnp.int32)
+        if policy == "random":
+            key, sub = jax.random.split(key)
+            idx = jax.random.randint(sub, (), 0, jnp.maximum(n_valid, 1))
+        else:
+            idx = jnp.asarray(0, jnp.int32)
+        has = n_valid > 0
+        nxt = jnp.where(has, out.configs[idx], cfg)
+        emis = jnp.where(has, out.emissions[idx], 0)
+        return (nxt, key), (nxt, emis, has)
+    (_, _), (cfgs, emis, alive) = jax.lax.scan(
+        body, (c0, key), None, length=steps)
+    return cfgs, emis, alive
+
+
+def run_trace(
+    system: SNPSystem | CompiledSNP, *, steps: int,
+    policy: str = "first", seed: int = 0, max_branches: int = 64,
+):
+    """Single-path simulation (deterministic or uniformly random branch).
+
+    Returns (configs (steps, m), emissions (steps,), alive (steps,)).
+    Useful as the 'serving' mode of the engine: one trajectory, spike train
+    out.
+    """
+    comp = system if isinstance(system, CompiledSNP) else compile_system(system)
+    if policy not in ("first", "random"):
+        raise ValueError(f"unknown policy {policy!r}")
+    key = jax.random.PRNGKey(seed)
+    return _trace_scan(comp, comp.init_config, key, steps, max_branches, policy)

@@ -1,0 +1,128 @@
+"""Synthetic SNP-system families for scaling benchmarks and stress tests.
+
+The paper evaluates on the single 3-neuron Π; to measure how the engine
+scales with system size (neurons, rules, synapse density, nondeterministic
+width) we need parameterized families, all valid SNPSystems:
+
+* ``ring``            — deterministic m-neuron ring, one a->a rule each.
+* ``nd_chain``        — k neurons with two applicable rules each: Ψ = 2^k
+                        branching, worst-case enumeration stress.
+* ``random_system``   — Erdős–Rényi synapse graph with random rules;
+                        branching statistically controlled.
+* ``counter``         — b-bit binary counter: long deterministic runs with
+                        a known exact trajectory (2^b distinct configs).
+* ``scaled_pi``       — k disjoint copies of the paper's Π fused into one
+                        system: tree = product of k independent Π trees;
+                        lets us grow the paper's own workload.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Tuple
+
+from .system import Rule, SNPSystem
+
+__all__ = ["ring", "nd_chain", "random_system", "counter", "scaled_pi"]
+
+
+def ring(m: int, produce: int = 1) -> SNPSystem:
+    rules = tuple(
+        Rule(neuron=i, consume=1, produce=produce, regex_base=1, covering=True)
+        for i in range(m)
+    )
+    syn = tuple((i, (i + 1) % m) for i in range(m))
+    init = tuple(1 if i == 0 else 0 for i in range(m))
+    return SNPSystem(m, init, rules, syn, output_neuron=m - 1,
+                     name=f"ring-{m}")
+
+
+def nd_chain(k: int) -> SNPSystem:
+    """Every neuron holds 1 spike and may either relay or forget: Ψ = 2^k."""
+    rules = []
+    for i in range(k):
+        rules.append(Rule(neuron=i, consume=1, produce=1, regex_base=1,
+                          covering=True))
+        rules.append(Rule(neuron=i, consume=1, produce=0, regex_base=1,
+                          covering=True))
+    syn = tuple((i, i + 1) for i in range(k - 1))
+    return SNPSystem(k, (1,) * k, tuple(rules), syn, output_neuron=k - 1,
+                     name=f"nd-chain-{k}")
+
+
+def random_system(
+    m: int,
+    rules_per_neuron: int = 2,
+    synapse_prob: float = 0.25,
+    max_spikes: int = 3,
+    seed: int = 0,
+) -> SNPSystem:
+    rng = random.Random(seed)
+    rules = []
+    for i in range(m):
+        for _ in range(rules_per_neuron):
+            consume = rng.randint(1, max_spikes)
+            base = rng.randint(consume, max_spikes)
+            rules.append(Rule(
+                neuron=i, consume=consume,
+                produce=rng.choice([0, 1, 1, 2]),
+                regex_base=base,
+                regex_period=rng.choice([0, 0, 1]),
+                covering=rng.random() < 0.5,
+            ))
+    syn = tuple(
+        (i, j) for i in range(m) for j in range(m)
+        if i != j and rng.random() < synapse_prob
+    )
+    init = tuple(rng.randint(0, max_spikes) for _ in range(m))
+    return SNPSystem(m, init, tuple(rules), syn, output_neuron=m - 1,
+                     name=f"random-{m}x{rules_per_neuron}-s{seed}")
+
+
+def counter(bits: int) -> SNPSystem:
+    """A deterministic b-bit ripple counter.
+
+    Neuron i holds bit i as {1,2} spikes (1=0, 2=1) plus carry neurons; built
+    from simple threshold rules, used for long deterministic trajectories.
+    Simplified: neuron i fires into i+1 every 2^i steps via spike recycling.
+    """
+    # period-doubling chain: neuron i relays every second received spike.
+    rules = []
+    for i in range(bits):
+        # at 2 spikes: spike forward and keep going; at 1: hold (no rule)
+        rules.append(Rule(neuron=i, consume=2, produce=1, regex_base=2,
+                          covering=False))
+    syn = tuple((i, i + 1) for i in range(bits - 1))
+    init = (2,) + (0,) * (bits - 1)
+    # a pacemaker neuron 0 self-feeding is not allowed (no self-synapse);
+    # instead neuron 0 consumes its initial 2 spikes once -> single wave.
+    return SNPSystem(bits, init, tuple(rules), syn, output_neuron=bits - 1,
+                     name=f"counter-{bits}")
+
+
+def scaled_pi(copies: int, covering: bool = True) -> SNPSystem:
+    """``copies`` disjoint instances of the paper's Π as one system.
+
+    Computation tree size grows as (paper tree)^copies; neuron/rule counts
+    grow linearly — the natural 'bigger Π' the paper's future-work section
+    asks for ("very large systems with equally large matrices").
+    """
+    from .system import paper_pi
+
+    base = paper_pi(covering=covering)
+    m0 = base.num_neurons
+    rules = []
+    syn = []
+    init: Tuple[int, ...] = ()
+    for c in range(copies):
+        off = c * m0
+        for r in base.rules:
+            rules.append(Rule(neuron=r.neuron + off, consume=r.consume,
+                              produce=r.produce, regex_base=r.regex_base,
+                              regex_period=r.regex_period,
+                              covering=r.covering))
+        syn += [(i + off, j + off) for (i, j) in base.synapses]
+        init = init + tuple(base.initial_spikes)
+    return SNPSystem(copies * m0, init, tuple(rules), tuple(syn),
+                     output_neuron=copies * m0 - 1,
+                     name=f"pi-x{copies}")

@@ -1,0 +1,70 @@
+"""64-bit configuration hashing (2 x uint32 lanes) for on-device dedup.
+
+The paper dedups configurations with a host-side Python list of strings.
+At fleet scale the visited set must live on device and shard across chips,
+so configurations are hashed to 64 bits: a murmur3-style finalizer applied
+per element, folded with two independent polynomial accumulators.  Collision
+probability for ``N`` distinct configs is ~``N^2 / 2^65`` (≈ 5e-7 for ten
+million configs).  The host-side exact archive (``ExploreResult.archive``)
+lets tests cross-validate hash dedup on small systems.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["config_hash", "SENTINEL"]
+
+# Sorts after every real hash; used for invalid / empty slots.
+SENTINEL = np.uint32(0xFFFFFFFF)
+
+_GOLDEN = np.uint32(0x9E3779B9)
+_P1 = np.uint32(0x01000193)  # FNV prime
+_P2 = np.uint32(0x85EBCA77)
+
+
+def _fmix32(x: jnp.ndarray) -> jnp.ndarray:
+    x = x ^ (x >> 16)
+    x = x * np.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * np.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _pow_vector(p: np.uint32, m: int) -> np.ndarray:
+    """[p^(m-1), ..., p^1, p^0] mod 2^32 (computed exactly in Python ints)."""
+    out = np.empty(m, dtype=np.uint64)
+    acc = 1
+    for i in range(m - 1, -1, -1):
+        out[i] = acc
+        acc = (acc * int(p)) % (1 << 32)
+    return out.astype(np.uint32)
+
+
+def config_hash(configs: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Hash int32 configs (..., m) to two uint32 lanes (hi, lo).
+
+    Pure function of the config values; wraparound uint32 arithmetic.
+    Per-element mixing is a single multiply + shift-xor (the full murmur
+    finalizer runs only on the two accumulators): hashing is ~half of the
+    SNP step's HBM traffic at scale, and the two independent polynomial
+    lanes with position salts already give 2^-64-grade collision behavior
+    (EXPERIMENTS.md §Perf cell C, iteration 2).
+    """
+    m = configs.shape[-1]
+    x = configs.astype(jnp.uint32)
+    pos = (np.arange(m, dtype=np.uint64) * int(_GOLDEN) % (1 << 32)).astype(
+        np.uint32
+    )
+    y = (x + pos) * np.uint32(0x85EBCA6B)
+    y = y ^ (y >> 16)
+    p1 = jnp.asarray(_pow_vector(_P1, m))
+    p2 = jnp.asarray(_pow_vector(_P2, m))
+    h1 = jnp.sum(y * p1, axis=-1, dtype=jnp.uint32)
+    h2 = jnp.sum((y ^ _GOLDEN) * p2, axis=-1, dtype=jnp.uint32)
+    hi = _fmix32(h1 ^ np.uint32(m))
+    m_mix = np.uint32((m * int(_GOLDEN)) % (1 << 32))
+    lo = _fmix32(h2 + m_mix)
+    return hi, lo

@@ -1,0 +1,87 @@
+"""Matrix encoding of an SNP system (paper §2.2), as JAX-ready arrays.
+
+``compile_system`` lowers an :class:`~repro.core.system.SNPSystem` into a
+:class:`CompiledSNP` — a pytree of device arrays holding the spiking
+transition matrix ``M_Π`` plus per-rule metadata, with rules **sorted by
+owning neuron** so per-neuron segment operations are contiguous.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .system import SNPSystem
+
+__all__ = ["CompiledSNP", "compile_system"]
+
+
+class CompiledSNP(NamedTuple):
+    """Device-array encoding of an SNP system.
+
+    Shapes: ``m`` neurons, ``n`` rules (sorted by neuron).
+    """
+
+    M: jnp.ndarray              # (n, m) int32 — spiking transition matrix
+    rule_neuron: jnp.ndarray    # (n,)  int32 — owning neuron of each rule
+    consume: jnp.ndarray        # (n,)  int32
+    produce: jnp.ndarray        # (n,)  int32
+    regex_base: jnp.ndarray     # (n,)  int32
+    regex_period: jnp.ndarray   # (n,)  int32 (0 => single word)
+    covering: jnp.ndarray       # (n,)  bool
+    neuron_onehot: jnp.ndarray  # (n, m) int8 — rule->neuron incidence
+    env_produce: jnp.ndarray    # (n,)  int32 — spikes emitted to environment
+    init_config: jnp.ndarray    # (m,)  int32 — C_0
+    rule_order: Tuple[int, ...]  # original rule index per sorted position
+
+    @property
+    def num_rules(self) -> int:
+        return self.M.shape[0]
+
+    @property
+    def num_neurons(self) -> int:
+        return self.M.shape[1]
+
+
+def compile_system(system: SNPSystem) -> CompiledSNP:
+    m, n = system.num_neurons, system.num_rules
+    if n == 0:
+        raise ValueError("system has no rules")
+
+    # Stable sort rules by neuron, remembering the original total order so
+    # spiking vectors can be reported in the paper's ordering.
+    order = sorted(range(n), key=lambda i: system.rules[i].neuron)
+    rules = [system.rules[i] for i in order]
+
+    syn = set(system.synapses)
+    M = np.zeros((n, m), dtype=np.int32)
+    for i, r in enumerate(rules):
+        M[i, r.neuron] = -r.consume
+        if r.produce > 0:
+            for j in range(m):
+                if (r.neuron, j) in syn:
+                    M[i, j] = r.produce
+
+    rule_neuron = np.array([r.neuron for r in rules], dtype=np.int32)
+    env_produce = np.array(
+        [r.produce if r.neuron == system.output_neuron else 0 for r in rules],
+        dtype=np.int32,
+    )
+    onehot = np.zeros((n, m), dtype=np.int8)
+    onehot[np.arange(n), rule_neuron] = 1
+
+    return CompiledSNP(
+        M=jnp.asarray(M),
+        rule_neuron=jnp.asarray(rule_neuron),
+        consume=jnp.asarray([r.consume for r in rules], dtype=jnp.int32),
+        produce=jnp.asarray([r.produce for r in rules], dtype=jnp.int32),
+        regex_base=jnp.asarray([r.regex_base for r in rules], dtype=jnp.int32),
+        regex_period=jnp.asarray([r.regex_period for r in rules], dtype=jnp.int32),
+        covering=jnp.asarray([r.covering for r in rules], dtype=bool),
+        neuron_onehot=jnp.asarray(onehot),
+        env_produce=jnp.asarray(env_produce),
+        init_config=jnp.asarray(system.initial_spikes, dtype=jnp.int32),
+        rule_order=tuple(order),
+    )

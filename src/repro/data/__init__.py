@@ -1,0 +1,5 @@
+"""Deterministic shardable resumable data pipeline."""
+
+from .pipeline import DataConfig, data_iterator, dedup_batch, make_batch
+
+__all__ = ["DataConfig", "make_batch", "data_iterator", "dedup_batch"]

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+* :mod:`repro.kernels.snp_step` — the paper's transition (decode + S·M + C).
+* :mod:`repro.kernels.flash_attn` — flash attention for LM prefill.
+
+Each kernel ships a ``kernel.py`` (pl.pallas_call + BlockSpec), an
+``ops.py`` jit'd public wrapper, and a ``ref.py`` pure-jnp oracle; tests
+sweep shapes/dtypes and assert allclose (exact, for integer workloads)
+against the oracle in interpret mode.
+"""

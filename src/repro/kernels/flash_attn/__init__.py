@@ -1,0 +1,7 @@
+"""Flash attention (Pallas TPU): online-softmax tiled attention w/ GQA."""
+
+from .kernel import flash_attention_pallas
+from .ops import flash_attention
+from .ref import attention_ref
+
+__all__ = ["flash_attention", "flash_attention_pallas", "attention_ref"]

@@ -1,0 +1,217 @@
+"""Memory-light attention in pure JAX: flash-style chunking with a custom
+VJP whose backward pass is *also* chunked.
+
+Motivation (EXPERIMENTS.md §Perf): the XLA einsum attention materializes
+the (B, H, Sq, Skv) score tensor in f32 — at 4k-32k sequence lengths that
+single tensor dominates the dry-run memory roofline term for every
+full-attention cell.  This implementation never materializes more than one
+(block_q × Skv) panel per step:
+
+* forward: ``lax.scan`` over query blocks; inside, one pass over K/V with
+  running (max, sumexp, acc) — saves only O and the logsumexp rows,
+* backward: recomputes score panels per query block from (q, k, L) and
+  accumulates dq/dk/dv — O(S·d) residuals instead of O(S²).
+
+On TPU the Pallas kernel (kernel.py) is the forward of choice; this module
+is the portable/bwd-complete path the train step uses, and doubles as the
+Pallas kernel's memory-behavior twin at the HLO level.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_attention"]
+
+_NEG = -1e30
+
+
+def _blockwise_fwd(q, k, v, kv_len, causal, block_q, block_k, scale):
+    """Returns (out (B,H,Sq,D), lse (B,H,Sq))."""
+    B, H, Sq, D = q.shape
+    Dv = v.shape[-1]
+    Skv = k.shape[2]
+    nq = Sq // block_q
+    nk = Skv // block_k
+
+    jk = jnp.arange(Skv)
+    kv_mask = jk[None, :] < kv_len[:, None]              # (B, Skv)
+
+    def one_q_block(carry, qi):
+        q_blk = jax.lax.dynamic_slice_in_dim(q, qi * block_q, block_q, 2)
+        q_blk = q_blk.astype(jnp.float32) * scale
+        iq = qi * block_q + jnp.arange(block_q)
+
+        def one_k_block(state, ki):
+            m, l, acc = state
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * block_k,
+                                                 block_k, 2)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * block_k,
+                                                 block_k, 2)
+            mask_blk = jax.lax.dynamic_slice_in_dim(kv_mask, ki * block_k,
+                                                    block_k, 1)
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_blk,
+                           k_blk.astype(jnp.float32))
+            msk = mask_blk[:, None, None, :]
+            if causal:
+                jkk = ki * block_k + jnp.arange(block_k)
+                msk = msk & (jkk[None, None, None, :]
+                             <= iq[None, None, :, None])
+            s = jnp.where(msk, s, _NEG)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(msk, p, 0.0)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, H, block_q), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, H, block_q), jnp.float32)
+        a0 = jnp.zeros((B, H, block_q, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(one_k_block, (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = jnp.where(l[..., None] > 0,
+                        acc / jnp.maximum(l[..., None], 1e-30), 0.0)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return carry, (out.astype(q.dtype), lse)
+
+    _, (outs, lses) = jax.lax.scan(one_q_block, (), jnp.arange(nq))
+    # outs: (nq, B, H, bq, Dv) -> (B, H, Sq, Dv)
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, H, Sq, Dv)
+    lse = jnp.moveaxis(lses, 0, 2).reshape(B, H, Sq)
+    return out, lse
+
+
+def _pad_to(x, target, axis):
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _chunked(q, k, v, kv_len, causal, block_q, block_k):
+    out, _ = _fwd_padded(q, k, v, kv_len, causal, block_q, block_k)
+    return out
+
+
+def _fwd_padded(q, k, v, kv_len, causal, block_q, block_k):
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    Sq_p = -(-Sq // bq) * bq
+    Skv_p = -(-Skv // bk) * bk
+    scale = 1.0 / (D ** 0.5)
+    out, lse = _blockwise_fwd(
+        _pad_to(q, Sq_p, 2), _pad_to(k, Skv_p, 2), _pad_to(v, Skv_p, 2),
+        jnp.minimum(kv_len, Skv), causal, bq, bk, scale)
+    return out[:, :, :Sq], lse[:, :, :Sq]
+
+
+def _chunked_fwd(q, k, v, kv_len, causal, block_q, block_k):
+    out, lse = _fwd_padded(q, k, v, kv_len, causal, block_q, block_k)
+    return out, (q, k, v, kv_len, out, lse)
+
+
+def _chunked_bwd(causal, block_q, block_k, res, g):
+    q, k, v, kv_len, out, lse = res
+    B, H, Sq, D = q.shape
+    Dv = v.shape[-1]
+    Skv = k.shape[2]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    Sq_p = -(-Sq // bq) * bq
+    Skv_p = -(-Skv // bk) * bk
+    scale = 1.0 / (D ** 0.5)
+
+    qp = _pad_to(q, Sq_p, 2).astype(jnp.float32)
+    kp = _pad_to(k, Skv_p, 2).astype(jnp.float32)
+    vp = _pad_to(v, Skv_p, 2).astype(jnp.float32)
+    gp = _pad_to(g, Sq_p, 2).astype(jnp.float32)
+    op = _pad_to(out, Sq_p, 2).astype(jnp.float32)
+    lsep = _pad_to(lse, Sq_p, 2)
+    # rows beyond Sq: force p = 0 via lse = +inf surrogate
+    if Sq_p != Sq:
+        pad_rows = jnp.arange(Sq_p) >= Sq
+        lsep = jnp.where(pad_rows[None, None, :], 1e30, lsep)
+
+    delta = (gp * op).sum(-1)                            # (B,H,Sq_p)
+    jk = jnp.arange(Skv_p)
+    kv_mask = jk[None, :] < jnp.minimum(kv_len, Skv)[:, None]
+
+    nq, nk = Sq_p // bq, Skv_p // bk
+
+    def q_block(carry, qi):
+        dk_acc, dv_acc = carry
+        sl = lambda x, i=qi: jax.lax.dynamic_slice_in_dim(x, i * bq, bq, 2)
+        q_blk, g_blk = sl(qp) * scale, sl(gp)
+        lse_blk, d_blk = sl(lsep[..., None])[..., 0], sl(
+            delta[..., None])[..., 0]
+        iq = qi * bq + jnp.arange(bq)
+
+        def k_block(state, ki):
+            dq_blk, dk_acc, dv_acc = state
+            ksl = lambda x: jax.lax.dynamic_slice_in_dim(x, ki * bk, bk, 2)
+            k_blk, v_blk = ksl(kp), ksl(vp)
+            mask_blk = jax.lax.dynamic_slice_in_dim(kv_mask, ki * bk, bk, 1)
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_blk, k_blk)
+            msk = mask_blk[:, None, None, :]
+            if causal:
+                jkk = ki * bk + jnp.arange(bk)
+                msk = msk & (jkk[None, None, None, :]
+                             <= iq[None, None, :, None])
+            p = jnp.where(msk, jnp.exp(s - lse_blk[..., None]), 0.0)
+            dp = jnp.einsum("bhqd,bhkd->bhqk", g_blk, v_blk)
+            ds = p * (dp - d_blk[..., None])             # (B,H,bq,bk)
+            dq_blk = dq_blk + jnp.einsum("bhqk,bhkd->bhqd", ds, k_blk)
+            dk_upd = jnp.einsum("bhqk,bhqd->bhkd", ds, q_blk)
+            dv_upd = jnp.einsum("bhqk,bhqd->bhkd", p, g_blk)
+            dk_acc = jax.lax.dynamic_update_slice_in_dim(
+                dk_acc, jax.lax.dynamic_slice_in_dim(
+                    dk_acc, ki * bk, bk, 2) + dk_upd, ki * bk, 2)
+            dv_acc = jax.lax.dynamic_update_slice_in_dim(
+                dv_acc, jax.lax.dynamic_slice_in_dim(
+                    dv_acc, ki * bk, bk, 2) + dv_upd, ki * bk, 2)
+            return (dq_blk, dk_acc, dv_acc), None
+
+        dq0 = jnp.zeros((B, H, bq, D), jnp.float32)
+        (dq_blk, dk_acc, dv_acc), _ = jax.lax.scan(
+            k_block, (dq0, dk_acc, dv_acc), jnp.arange(nk))
+        return (dk_acc, dv_acc), dq_blk * scale
+
+    dk0 = jnp.zeros((B, H, Skv_p, D), jnp.float32)
+    dv0 = jnp.zeros((B, H, Skv_p, Dv), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(q_block, (dk0, dv0), jnp.arange(nq))
+    dq = jnp.moveaxis(dqs, 0, 2).reshape(B, H, Sq_p, D)[:, :, :Sq]
+    return (dq.astype(q.dtype), dk[:, :, :Skv].astype(k.dtype),
+            dv[:, :, :Skv].astype(v.dtype), None)
+
+
+_chunked.defvjp(_chunked_fwd, _chunked_bwd)
+
+
+def chunked_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    kv_len: Optional[jnp.ndarray] = None, *, causal: bool = True,
+    block_q: int = 512, block_k: int = 1024,
+) -> jnp.ndarray:
+    """(B,Hq,Sq,D)x(B,Hkv,Skv,D) -> (B,Hq,Sq,D); GQA via head repeat at the
+    einsum level (no K/V copy: repeat is folded by XLA into the einsum)."""
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    if kv_len is None:
+        kv_len = jnp.full((B,), k.shape[2], jnp.int32)
+    if Hq != Hkv:
+        group = Hq // Hkv
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    return _chunked(q, k, v, kv_len, causal, block_q, block_k)

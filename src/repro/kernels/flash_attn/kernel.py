@@ -1,0 +1,141 @@
+"""Flash attention forward kernel (Pallas, TPU) with GQA and causal masking.
+
+Online-softmax tiling: grid ``(batch, q_heads, Sq/bq, Skv/bk)`` with the KV
+dimension innermost; running max / normalizer / accumulator live in VMEM
+scratch across KV tiles, so the ``(Sq, Skv)`` score matrix never exists in
+HBM.  GQA is folded into the BlockSpec index map (``kv_head = q_head //
+group``) — no K/V replication in memory.  Fully-masked causal tiles are
+skipped on the VPU/MXU via ``pl.when``.
+
+Targets the MXU with (128, 128) score tiles; head_dim rides along lanes.
+Validated in interpret mode against :mod:`.ref`; use ``ops.flash_attention``
+for the public (custom-vjp, padding-aware) entry point.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale: float, causal: bool, block_q: int, block_k: int):
+    i = pl.program_id(2)          # q tile
+    j = pl.program_id(3)          # kv tile (innermost)
+    nk = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Causal: skip tiles strictly above the diagonal band.
+    q_start = i * block_q
+    k_start = j * block_k
+    needed = True
+    if causal:
+        needed = k_start < q_start + block_q
+
+    @pl.when(needed)
+    def _tile():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                     # (bq, bk)
+        iq = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        jk = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jk < len_ref[0]                                # kv validity
+        if causal:
+            mask &= jk <= iq
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...][:, :1]                            # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                                # (bq, bk)
+        # rows with no valid key yet: keep p exactly zero
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                       # (bq, 1)
+        l_new = l_ref[...][:, :1] * alpha + jnp.sum(p, -1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)                   # (bk, d)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = l_ref[...][:, :1]
+        o = jnp.where(l > 0, acc_ref[...] / jnp.maximum(l, 1e-30), 0.0)
+        o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,        # (B, Hq, Sq, D)
+    k: jnp.ndarray,        # (B, Hkv, Skv, D)
+    v: jnp.ndarray,        # (B, Hkv, Skv, D)
+    kv_len: jnp.ndarray,   # (B,) int32 — valid KV prefix per batch row
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0, "GQA requires q_heads % kv_heads == 0"
+    group = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0, (
+        "ops.py pads sequence lengths to block multiples"
+    )
+    grid = (B, Hq, Sq // block_q, Skv // block_k)
+    scale = 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1,), lambda b, h, i, j: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+        ],
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v, kv_len.astype(jnp.int32))

@@ -1,0 +1,95 @@
+"""Public flash-attention entry point.
+
+* pads sequence lengths to tile multiples (padding keys are masked via
+  ``kv_len``; padding queries are sliced off),
+* exposes a ``custom_vjp`` so the kernel is usable inside ``train_step``:
+  forward = Pallas kernel, backward = XLA recompute of the standard
+  attention gradient (flash-style backward kernel is future work; the
+  recompute backward preserves O(S) memory on the forward pass, which is
+  where the prefill roofline lives),
+* ``impl='xla'`` falls back to the reference for debugging/CPU perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["flash_attention"]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7)
+)
+def _flash(q, k, v, kv_len, causal, block_q, block_k, interpret):
+    return _flash_fwd_impl(q, k, v, kv_len, causal, block_q, block_k,
+                           interpret)
+
+
+def _flash_fwd_impl(q, k, v, kv_len, causal, block_q, block_k, interpret):
+    B, Hq, Sq, D = q.shape
+    Skv = k.shape[2]
+    Sq_p = _round_up(Sq, min(block_q, Sq))
+    Skv_p = _round_up(Skv, min(block_k, Skv))
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, Sq_p - Sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Skv_p - Skv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Skv_p - Skv), (0, 0)))
+    out = flash_attention_pallas(
+        qp, kp, vp, jnp.minimum(kv_len, Skv),
+        causal=causal, block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out[:, :, :Sq]
+
+
+def _flash_fwd(q, k, v, kv_len, causal, block_q, block_k, interpret):
+    out = _flash_fwd_impl(q, k, v, kv_len, causal, block_q, block_k,
+                          interpret)
+    return out, (q, k, v, kv_len)
+
+
+def _flash_bwd(causal, block_q, block_k, interpret, res, g):
+    q, k, v, kv_len = res
+
+    def f(q, k, v):
+        return attention_ref(q, k, v, kv_len, causal=causal)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    kv_len: jnp.ndarray | None = None,
+    *,
+    causal: bool = True,
+    impl: str = "pallas",
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Softmax attention, (B, Hq, Sq, D) x (B, Hkv, Skv, D) -> (B, Hq, Sq, D).
+
+    ``kv_len`` (B,) masks trailing cache slots (serving); defaults to full.
+    """
+    if kv_len is None:
+        kv_len = jnp.full((q.shape[0],), k.shape[2], jnp.int32)
+    if impl == "xla":
+        return attention_ref(q, k, v, kv_len, causal=causal)
+    if impl != "pallas":
+        raise ValueError(f"unknown attention impl {impl!r}")
+    return _flash(q, k, v, kv_len, causal, block_q, block_k, interpret)

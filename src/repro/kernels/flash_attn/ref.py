@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for flash attention: materialized-scores softmax
+attention with GQA, causal masking and per-row KV length masking."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def _safe_softmax(s: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(jnp.broadcast_to(mask, s.shape), p, 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.where(denom > 0, p / jnp.maximum(denom, 1e-30), 0.0)
+
+
+def attention_ref(
+    q: jnp.ndarray,        # (B, Hq, Sq, D)
+    k: jnp.ndarray,        # (B, Hkv, Skv, D)
+    v: jnp.ndarray,        # (B, Hkv, Skv, D)
+    kv_len: jnp.ndarray | None = None,   # (B,) int32
+    *,
+    causal: bool = True,
+) -> jnp.ndarray:
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (D ** 0.5)
+    mask = jnp.ones((B, 1, Sq, Skv), bool)
+    if causal:
+        iq = jnp.arange(Sq)[:, None]
+        jk = jnp.arange(Skv)[None, :]
+        mask &= (jk <= iq)[None, None]
+    if kv_len is not None:
+        mask &= (jnp.arange(Skv)[None, None, None, :]
+                 < kv_len[:, None, None, None])
+    s = jnp.where(mask, s, -1e30)
+    p = _safe_softmax(s, mask)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,7 @@
+"""Fused SNP transition kernel (Pallas TPU) — decode + S·M + C in VMEM."""
+
+from .kernel import snp_step_pallas
+from .ops import snp_step
+from .ref import snp_step_ref
+
+__all__ = ["snp_step", "snp_step_pallas", "snp_step_ref"]

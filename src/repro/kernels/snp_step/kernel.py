@@ -1,0 +1,173 @@
+"""Fused SNP transition kernel (Pallas, TPU).
+
+One kernel computes, for a frontier tile of configurations and a tile of
+branch indices, the successor configurations
+
+    C'[b, t, :] = C[b, :] + S[b, t, :] · M        (paper eq. 2)
+
+where the spiking vector ``S[b, t]`` is *decoded on the fly* from the branch
+index ``t`` (mixed-radix rank decode, DESIGN.md §2) — ``S`` never
+materializes in HBM.  The decode itself is phrased as an MXU matmul:
+
+    digits[b, t, μ]   = (t // stride[b, μ]) % choices[b, μ]      (VPU, int)
+    digits_r[b, t, i] = digits · onehotᵀ   (neuron-of-rule gather == matmul)
+    S[b, t, i]        = app[b, i] ⊙ (digits_r[b, t, i] == rank[b, i])
+    C'                = C + S · M                                (MXU)
+
+Grid: ``(B/bb, T/bt, n/bn)`` with the rule dimension innermost and
+accumulated into the revisited output block, so systems whose ``M`` exceeds
+VMEM still stream through.  Block defaults keep the working set
+(digit scratch + onehot/M tiles + S tile) within ~8 MB of VMEM and all
+matmul dims at multiples of the 128-lane MXU.
+
+TPU is the compilation *target*; correctness is validated in
+``interpret=True`` mode against :mod:`repro.kernels.snp_step.ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["snp_step_pallas"]
+
+
+def _kernel(
+    # inputs (blocks)
+    c_ref,        # (bb, m)  f32 — configurations
+    rank_ref,     # (bb, bn) f32 — per-rule rank among applicable in neuron
+    app_ref,      # (bb, bn) f32 — applicability mask
+    stride_ref,   # (bb, m)  i32 — mixed-radix strides (clamped)
+    choices_ref,  # (bb, m)  i32 — per-neuron choice counts
+    psi_ref,      # (bb, 1)  f32 — number of valid branches
+    onehot_ref,   # (m, bn)  f32 — neuron→rule incidence
+    mat_ref,      # (bn, m)  f32 — M_Π block
+    env_ref,      # (bn, 1)  f32 — environment-emission weights
+    # outputs (blocks)
+    out_ref,      # (bb, bt, m) f32 — successor configs (accumulated over k)
+    valid_ref,    # (bb, bt) i32
+    emis_ref,     # (bb, bt) f32 (accumulated over k)
+    # scratch
+    digit_ref,    # (bb, bt, m) f32 — decoded digits, persists across k
+):
+    j = pl.program_id(1)   # branch-tile index
+    k = pl.program_id(2)   # rule-tile index (innermost, accumulated)
+    bb, bt, m = out_ref.shape
+
+    @pl.when(k == 0)
+    def _init():
+        # Branch ids for this tile.
+        t = (j * bt + jax.lax.broadcasted_iota(jnp.int32, (1, bt, 1), 1))
+        stride = stride_ref[...].reshape(bb, 1, m)
+        choices = choices_ref[...].reshape(bb, 1, m)
+        digits = (t // stride) % choices                     # (bb, bt, m) i32
+        digit_ref[...] = digits.astype(jnp.float32)
+        # Output starts at C (broadcast over branches); S·M accumulates in.
+        out_ref[...] = jnp.broadcast_to(
+            c_ref[...].reshape(bb, 1, m), (bb, bt, m)
+        )
+        emis_ref[...] = jnp.zeros((bb, bt), jnp.float32)
+        tf = t.reshape(1, bt).astype(jnp.float32)
+        valid_ref[...] = (tf < psi_ref[...]).astype(jnp.int32)
+
+    digits = digit_ref[...]                                   # (bb, bt, m)
+    # "gather digit of each rule's neuron" as an MXU matmul with the 0/1
+    # incidence matrix: digits_r[b,t,i] = Σ_μ digits[b,t,μ]·onehot[μ,i].
+    digits_r = jax.lax.dot_general(
+        digits, onehot_ref[...],
+        (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                         # (bb, bt, bn)
+    s = app_ref[...].reshape(bb, 1, -1) * (
+        digits_r == rank_ref[...].reshape(bb, 1, -1)
+    ).astype(jnp.float32)                                     # (bb, bt, bn)
+    out_ref[...] += jax.lax.dot_general(
+        s, mat_ref[...],
+        (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    emis_ref[...] += jax.lax.dot_general(
+        s, env_ref[...],
+        (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(bb, bt)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_branches", "block_b", "block_t", "block_n",
+                     "interpret"),
+)
+def snp_step_pallas(
+    configs: jnp.ndarray,    # (B, m) int32, B % block_b == 0
+    rank: jnp.ndarray,       # (B, n) int32
+    app: jnp.ndarray,        # (B, n) bool
+    stride: jnp.ndarray,     # (B, m) int32 (pre-clamped < 2^30)
+    choices: jnp.ndarray,    # (B, m) int32
+    psi: jnp.ndarray,        # (B,) float32
+    onehot: jnp.ndarray,     # (n, m) int8 — rule→neuron incidence
+    M: jnp.ndarray,          # (n, m) int32
+    env: jnp.ndarray,        # (n,) int32
+    *,
+    max_branches: int,
+    block_b: int = 8,
+    block_t: int = 128,
+    block_n: int = 512,
+    interpret: bool = True,
+):
+    """Raw tiled kernel call.  Use :mod:`..ops` for the padded public API."""
+    B, m = configs.shape
+    n = rank.shape[1]
+    T = max_branches
+    assert B % block_b == 0 and T % block_t == 0 and n % block_n == 0, (
+        "ops.py must pad shapes to block multiples"
+    )
+    grid = (B // block_b, T // block_t, n // block_n)
+
+    out, valid, emis = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, m), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((block_b, block_n), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_b, block_n), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_b, m), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((block_b, m), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((m, block_n), lambda i, j, k: (0, k)),
+            pl.BlockSpec((block_n, m), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((block_n, 1), lambda i, j, k: (k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, block_t, m), lambda i, j, k: (i, j, 0)),
+            pl.BlockSpec((block_b, block_t), lambda i, j, k: (i, j)),
+            pl.BlockSpec((block_b, block_t), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, m), jnp.float32),
+            jax.ShapeDtypeStruct((B, T), jnp.int32),
+            jax.ShapeDtypeStruct((B, T), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_b, block_t, m), jnp.float32),
+        ],
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        configs.astype(jnp.float32),
+        rank.astype(jnp.float32),
+        app.astype(jnp.float32),
+        stride.astype(jnp.int32),
+        choices.astype(jnp.int32),
+        psi.reshape(B, 1).astype(jnp.float32),
+        onehot.T.astype(jnp.float32),   # (m, n)
+        M.astype(jnp.float32),
+        env.reshape(n, 1).astype(jnp.float32),
+    )
+    return out.astype(jnp.int32), valid.astype(bool), emis.astype(jnp.int32)

@@ -1,0 +1,93 @@
+"""Public jit'd wrapper around the fused SNP transition kernel.
+
+Handles everything the raw kernel assumes away: the cheap O(B·n) branch
+bookkeeping (applicability, ranks, radix strides — computed with the
+reference semantics), padding every dimension to block multiples (padding
+rules never fire: app=0, M rows=0), and unpadding/masking the results.
+
+On CPU the kernel runs in interpret mode; on TPU pass ``interpret=False``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.matrix import CompiledSNP
+from repro.core.semantics import branch_info
+
+from .kernel import snp_step_pallas
+
+__all__ = ["snp_step"]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_branches", "block_b", "block_t", "block_n",
+                     "interpret"),
+)
+def snp_step(
+    configs: jnp.ndarray,   # (B, m) int32
+    comp: CompiledSNP,
+    *,
+    max_branches: int,
+    block_b: int = 8,
+    block_t: int = 128,
+    block_n: int = 512,
+    interpret: bool = True,
+):
+    """Fused successor expansion: returns (successors (B,T,m) int32,
+    valid (B,T) bool, emissions (B,T) int32, overflow (B,) bool).
+
+    Bit-identical to :func:`repro.kernels.snp_step.ref.snp_step_ref` for all
+    spike counts < 2^24 (f32-exact integer range).
+    """
+    B, m = configs.shape
+    n = comp.num_rules
+    T = max_branches
+
+    block_b = min(block_b, max(B, 1))
+    block_t = min(block_t, T)
+    block_n = min(block_n, _round_up(n, 128))
+
+    info = branch_info(configs, comp)
+    stride = jnp.minimum(info.stride, 2.0 ** 30).astype(jnp.int32)
+    # clamp choices>=1 so the kernel's % never sees 0 (already >=1 by defn)
+
+    Bp, Tp, Np = (_round_up(B, block_b), _round_up(T, block_t),
+                  _round_up(n, block_n))
+
+    def pad(x, rows=None, cols=None, value=0):
+        pads = [(0, 0)] * x.ndim
+        if rows is not None:
+            pads[0] = (0, rows - x.shape[0])
+        if cols is not None:
+            pads[-1] = (0, cols - x.shape[-1])
+        return jnp.pad(x, pads, constant_values=value)
+
+    out, valid, emis = snp_step_pallas(
+        pad(configs, rows=Bp),
+        pad(pad(info.rank, cols=Np, value=-1), rows=Bp),
+        pad(pad(info.app, cols=Np), rows=Bp),
+        # padded configs: stride 1 / choices 1 / psi 0 -> no valid branches
+        pad(stride, rows=Bp, value=1),
+        pad(info.choices, rows=Bp, value=1),
+        pad(info.psi, rows=Bp),
+        pad(comp.neuron_onehot, rows=Np),           # (n, m) pad rules
+        pad(comp.M, rows=Np),
+        pad(comp.env_produce, rows=Np),
+        max_branches=Tp,
+        block_b=block_b, block_t=block_t, block_n=block_n,
+        interpret=interpret,
+    )
+    out = out[:B, :T]
+    valid = valid[:B, :T] & info.alive[:, None]
+    emis = emis[:B, :T]
+    overflow = info.psi > float(T)
+    return out, valid, emis, overflow

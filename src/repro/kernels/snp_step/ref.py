@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused SNP transition kernel.
+
+Delegates to :mod:`repro.core.semantics` — the reference semantics used by
+the paper-reproduction tests — so the kernel is validated against exactly
+the math the rest of the framework runs on.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.matrix import CompiledSNP
+from repro.core.semantics import next_configs
+
+__all__ = ["snp_step_ref"]
+
+
+def snp_step_ref(configs: jnp.ndarray, comp: CompiledSNP, max_branches: int):
+    """Returns (successors (B,T,m) i32, valid (B,T) bool, emissions (B,T) i32,
+    overflow (B,) bool)."""
+    out = next_configs(configs, comp, max_branches)
+    return out.configs, out.valid, out.emissions, out.overflow

@@ -1,0 +1,92 @@
+"""Batched serving driver: prefill a request batch, stream decode steps.
+
+CPU-runnable with --smoke; on a pod the same code path serves the full
+config with sequence-sharded KV caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.smoke import reduced
+from repro.data import DataConfig, make_batch
+from repro.launch.train import build_mesh_for_available
+from repro.models import init_params
+from repro.serve import make_decode_step, make_prefill_step
+from repro.sharding import make_plan
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    mesh = build_mesh_for_available()
+    plan = make_plan(mesh)
+    B, S, G = args.batch, args.prompt_len, args.gen
+    max_len = S + G + 1
+
+    with mesh:
+        params = init_params(jax.random.PRNGKey(args.seed), cfg)
+        prefill = jax.jit(make_prefill_step(cfg, max_len=max_len,
+                                            constrain=plan.constrain))
+        decode = jax.jit(make_decode_step(cfg,
+                                          temperature=args.temperature,
+                                          constrain=plan.constrain))
+
+        batch = make_batch(cfg, DataConfig(seed=args.seed), step=0, shard=0,
+                           batch=B, seq_len=S)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()
+                 if k not in ("labels",)}
+
+        t0 = time.time()
+        logits, cache = prefill(params, batch)
+        logits.block_until_ready()
+        t_prefill = time.time() - t0
+        print(f"[serve] prefill {B}x{S}: {t_prefill*1e3:.1f} ms "
+              f"({B*S/t_prefill:.0f} tok/s)")
+
+        last = logits[:, :, -1, :] if cfg.codebooks else logits[:, -1, :]
+        tok = jnp.argmax(last, -1).astype(jnp.int32)[..., None]
+        key = jax.random.PRNGKey(args.seed)
+        outs = []
+        t0 = time.time()
+        for g in range(G):
+            pos = jnp.full((B, 1), S + g, jnp.int32)
+            if cfg.mrope_sections:
+                pos = jnp.broadcast_to(pos[None], (3, B, 1))
+            key, sub = jax.random.split(key)
+            tok, logits, cache = decode(params, cache, tok, pos, sub)
+            outs.append(np.asarray(tok)[..., 0])
+        jax.block_until_ready(tok)
+        dt = time.time() - t0
+        print(f"[serve] decode {G} steps: {dt/G*1e3:.2f} ms/step "
+              f"({B*G/dt:.0f} tok/s)")
+        gen = np.stack(outs, -1)
+        print(f"[serve] sample generations (first 16 token ids/request):")
+        for b in range(min(B, 4)):
+            row = gen[b] if not cfg.codebooks else gen[b, 0]
+            print(f"  req{b}: {row[:16].tolist()}")
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Abstract input specs for the dry-run: ShapeDtypeStruct stand-ins for
+every model input/state — weak-type-correct, shardable, zero allocation.
+
+``input_specs(cfg, shape)`` produces the batch aval for a shape cell;
+``abstract_state``/``abstract_cache`` produce parameter/optimizer/cache
+avals via ``jax.eval_shape`` so the full 314B-scale trees exist only as
+metadata.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import init_cache, init_params
+from repro.train import AdamWConfig, init_train_state
+
+__all__ = ["input_specs", "abstract_params", "abstract_train_state",
+           "abstract_cache", "decode_input_specs"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, spec: ShapeSpec,
+                with_labels: bool = True) -> Dict[str, Any]:
+    """Training/prefill batch avals (tokens/positions/labels + frontend
+    stubs)."""
+    B, S = spec.global_batch, spec.seq_len
+    tok_shape = (B, cfg.codebooks, S) if cfg.codebooks else (B, S)
+    batch = {
+        "tokens": _sds(tok_shape, jnp.int32),
+        "positions": _sds((3, B, S) if cfg.mrope_sections else (B, S),
+                          jnp.int32),
+    }
+    if with_labels:
+        batch["labels"] = _sds(tok_shape, jnp.int32)
+    if cfg.frontend != "none" and not cfg.codebooks:
+        batch["frontend_embeds"] = _sds((B, S, cfg.d_model),
+                                        jnp.dtype(cfg.dtype))
+        batch["embed_mask"] = _sds((B, S), jnp.bool_)
+    return batch
+
+
+def decode_input_specs(cfg: ArchConfig, spec: ShapeSpec) -> Dict[str, Any]:
+    """Decode-step avals: one new token against a seq_len-deep cache."""
+    B = spec.global_batch
+    tok_shape = (B, cfg.codebooks, 1) if cfg.codebooks else (B, 1)
+    return {
+        "tokens": _sds(tok_shape, jnp.int32),
+        "positions": _sds((3, B, 1) if cfg.mrope_sections else (B, 1),
+                          jnp.int32),
+    }
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(
+        functools.partial(init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def abstract_train_state(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                         compression: bool = False):
+    params = abstract_params(cfg)
+    return jax.eval_shape(
+        lambda p: init_train_state(p, opt_cfg, compression), params)
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_len))

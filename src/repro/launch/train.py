@@ -1,0 +1,166 @@
+"""End-to-end training driver.
+
+Runs real steps on whatever devices exist (CPU smoke -> full pod), with the
+full substrate engaged: sharded params/optimizer, microbatched grad
+accumulation, remat, WSD/cosine schedule, async checkpointing, resume,
+failure-injection drills, gradient compression.
+
+Examples:
+    # CPU-runnable reduced config, a few hundred steps
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --smoke --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/run1
+
+    # resume after interruption (picks up step + data position)
+    PYTHONPATH=src python -m repro.launch.train ... --ckpt-dir /tmp/run1
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.configs import get_config
+from repro.configs.smoke import reduced
+from repro.data import DataConfig, make_batch
+from repro.launch.mesh import make_production_mesh
+from repro.models import init_params, param_count
+from repro.runtime import FailureInjector, Supervisor, SupervisorConfig
+from repro.sharding import make_plan
+from repro.train import AdamWConfig, init_train_state, make_train_step
+
+
+def build_mesh_for_available() -> Mesh:
+    n = len(jax.devices())
+    if n >= 512:
+        return make_production_mesh(multi_pod=True)
+    if n >= 256:
+        return make_production_mesh()
+    # degenerate CPU/debug meshes
+    model = 1
+    for cand in (8, 4, 2, 1):
+        if n % cand == 0 and cand <= n:
+            model = cand
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--compression", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[],
+                    help="inject failures at these steps (drill)")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    if cfg.schedule == "wsd":
+        sched = "wsd"
+    else:
+        sched = "cosine"
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=args.warmup,
+                          total_steps=args.steps, schedule=sched)
+
+    mesh = build_mesh_for_available()
+    plan = make_plan(mesh)
+    data_cfg = DataConfig(seed=args.seed)
+
+    print(f"[train] arch={cfg.name} devices={mesh.devices.size} "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    with mesh:
+        params = init_params(jax.random.PRNGKey(args.seed), cfg)
+        print(f"[train] params: {param_count(params):,}")
+        step_fn_raw = make_train_step(
+            cfg, opt_cfg, microbatches=args.microbatches, remat=args.remat,
+            constrain=plan.constrain, compression=args.compression)
+
+        state0 = init_train_state(params, opt_cfg,
+                                  compression=args.compression)
+        # host snapshot: the live state is donated into the step, so any
+        # restart must rebuild from host (or checkpoint) copies
+        state0 = jax.tree.map(np.asarray, state0)
+        state_sharding = jax.tree.map(
+            plan.named, plan.param_specs(cfg, state0))
+        jit_step = jax.jit(step_fn_raw, donate_argnums=(0,))
+
+        def data_for(step: int):
+            b = make_batch(cfg, data_cfg, step=step, shard=0,
+                           batch=args.batch, seq_len=args.seq)
+            return {k: jnp.asarray(v) for k, v in b.items()}
+
+        t_start = time.time()
+        losses = []
+
+        if args.ckpt_dir:
+            def make_step(restore_step: Optional[int]):
+                state = jax.device_put(state0, state_sharding)
+                if restore_step is not None:
+                    template = jax.tree.map(
+                        lambda l: np.zeros(l.shape, l.dtype), state0)
+                    host, s, _ = restore_checkpoint(
+                        args.ckpt_dir, template, step=restore_step)
+                    state = jax.device_put(host, state_sharding)
+                    print(f"[train] restored step {s}")
+                    return state, wrapped_step, s
+                start = latest_step(args.ckpt_dir)
+                if start is not None:
+                    return make_step(start)
+                return state, wrapped_step, 0
+
+            def wrapped_step(state, batch):
+                state, metrics = jit_step(state, batch)
+                losses.append(float(metrics["loss"]))
+                if len(losses) % args.log_every == 0:
+                    print(f"[train] step {len(losses):5d} "
+                          f"loss {losses[-1]:.4f} "
+                          f"({(time.time()-t_start)/len(losses):.2f}s/step)",
+                          flush=True)
+                return state, metrics
+
+            sup = Supervisor(
+                SupervisorConfig(ckpt_dir=args.ckpt_dir,
+                                 ckpt_every=args.ckpt_every),
+                make_step, data_for,
+                injector=FailureInjector(args.fail_at) if args.fail_at
+                else None)
+            state, report = sup.run(args.steps)
+            print(f"[train] done: {report}")
+        else:
+            state = jax.device_put(state0, state_sharding)
+            for step in range(args.steps):
+                state, metrics = jit_step(state, data_for(step))
+                if (step + 1) % args.log_every == 0:
+                    print(f"[train] step {step+1:5d} "
+                          f"loss {float(metrics['loss']):.4f} "
+                          f"grad_norm {float(metrics['grad_norm']):.3f} "
+                          f"lr {float(metrics['lr']):.2e}", flush=True)
+            print(f"[train] done in {time.time()-t_start:.1f}s, "
+                  f"final loss {float(metrics['loss']):.4f}")
+    return state
+
+
+if __name__ == "__main__":
+    main()

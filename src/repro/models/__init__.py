@@ -1,0 +1,7 @@
+"""Model zoo: composable backbone built from the arch config's layer
+pattern (GQA/MLA attention, dense/MoE MLPs, Mamba, RWKV6, multimodal
+frontend stubs)."""
+
+from .model import forward, init_cache, init_params, loss_fn, param_count
+
+__all__ = ["init_params", "forward", "init_cache", "loss_fn", "param_count"]

@@ -1,0 +1,325 @@
+"""Core neural layers: norms, embeddings, RoPE/M-RoPE, GQA and MLA
+attention, SwiGLU/GELU MLPs.
+
+Functional style: ``init_*`` builds a param dict, ``apply``-style functions
+are pure.  Sharding is applied by the caller (sharding/specs.py maps param
+paths to PartitionSpecs; activation constraints are inserted in
+transformer.py).  All matmuls run in the config dtype (bf16 by default) with
+f32 accumulation via ``preferred_element_type`` where it matters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels.flash_attn import attention_ref, flash_attention
+from repro.kernels.flash_attn.chunked import chunked_attention
+
+__all__ = [
+    "rms_norm", "init_rms_norm", "init_dense", "dense",
+    "rope", "mrope", "init_attention", "attention",
+    "init_mla", "mla", "init_mlp", "mlp",
+]
+
+Params = Dict[str, jnp.ndarray]
+
+
+# -- initializers ------------------------------------------------------------
+
+def _normal(key, shape, dtype, scale=0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_rms_norm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p: Params, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, bias: bool = False) -> Params:
+    p = {"w": _normal(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# -- rotary position embeddings ----------------------------------------------
+
+def _rope_angles(positions: jnp.ndarray, half_dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, half_dim), f32."""
+    freqs = theta ** (-jnp.arange(0, half_dim, dtype=jnp.float32) / half_dim)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Standard rotary embedding.  x (B, S, H, D), positions (B, S)."""
+    half = x.shape[-1] // 2
+    cos, sin = _rope_angles(positions, half, theta)   # (B, S, half)
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+          sections: Tuple[int, ...]) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    ``positions`` (3, B, S) carries (temporal, height, width) ids; the
+    rotary half-dim is split into ``sections`` (summing to D/2), section i
+    rotating with positions[i].  Text tokens carry identical ids in all
+    three planes, reducing exactly to standard RoPE.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang_parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        ang_parts.append(
+            positions[i].astype(jnp.float32)[..., None] * freqs[start:start + sec])
+        start += sec
+    ang = jnp.concatenate(ang_parts, -1)              # (B, S, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def _apply_rope(cfg: ArchConfig, x: jnp.ndarray, positions) -> jnp.ndarray:
+    if cfg.mrope_sections:
+        if positions.ndim == 2:   # plain text positions -> broadcast to 3
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return rope(x, positions, cfg.rope_theta)
+
+
+# -- grouped-query attention ---------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig, dtype) -> Params:
+    d, h, hk, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _normal(ks[0], (d, h, hd), dtype),
+        "wk": _normal(ks[1], (d, hk, hd), dtype),
+        "wv": _normal(ks[2], (d, hk, hd), dtype),
+        "wo": _normal(ks[3], (h, hd, d), dtype),
+        **({"bq": jnp.zeros((h, hd), dtype),
+            "bk": jnp.zeros((hk, hd), dtype),
+            "bv": jnp.zeros((hk, hd), dtype)} if cfg.attn_bias else {}),
+    }
+
+
+def attention(
+    p: Params, cfg: ArchConfig, x: jnp.ndarray, positions,
+    cache: Optional[Dict] = None, *, attn_impl: str = "xla",
+    constrain=lambda t, kind: t,
+):
+    """GQA attention.  x (B, S, D).
+
+    ``cache``: None for training;
+    {"k": (B, Smax, Hk, hd), "v": ..., "len": (B,)} for serving — prefill
+    writes positions [0, S), decode appends at ``len``.
+    Returns (out, new_cache).
+    """
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.attn_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = constrain(q, "heads")
+    q = _apply_rope(cfg, q, positions)
+    k = _apply_rope(cfg, k, positions)
+
+    new_cache = None
+    if cache is None:
+        qh = jnp.swapaxes(q, 1, 2)     # (B, H, S, hd)
+        kh = jnp.swapaxes(k, 1, 2)
+        vh = jnp.swapaxes(v, 1, 2)
+        if attn_impl == "pallas":
+            out = flash_attention(qh, kh, vh, causal=True)
+        elif attn_impl == "chunked":
+            out = chunked_attention(qh, kh, vh, causal=True)
+        else:
+            out = attention_ref(qh, kh, vh, causal=True)
+        out = jnp.swapaxes(out, 1, 2)  # (B, S, H, hd)
+    else:
+        if S == 1:   # decode: append and attend over the whole cache
+            idx = cache["len"]                        # (B,)
+            ck = jax.vmap(
+                lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+            )(cache["k"], k, idx)
+            cv = jax.vmap(
+                lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+            )(cache["v"], v, idx)
+            new_cache = {"k": ck, "v": cv, "len": idx + 1}
+            out = _decode_attend(q, ck, cv, idx + 1, constrain)
+        else:        # prefill: fill [0, S)
+            ck = jnp.zeros_like(cache["k"]).at[:, :S].set(k)
+            cv = jnp.zeros_like(cache["v"]).at[:, :S].set(v)
+            new_cache = {"k": ck, "v": cv,
+                         "len": jnp.full((B,), S, jnp.int32)}
+            qh, kh, vh = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+            if attn_impl == "pallas":
+                out = flash_attention(qh, kh, vh, causal=True)
+            elif attn_impl == "chunked":
+                out = chunked_attention(qh, kh, vh, causal=True)
+            else:
+                out = attention_ref(qh, kh, vh, causal=True)
+            out = jnp.swapaxes(out, 1, 2)
+    out = constrain(out, "heads")
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+def _decode_attend(q, ck, cv, kv_len, constrain=lambda t, k: t):
+    """Single-token attention over a (possibly sequence-sharded) KV cache.
+
+    q (B, 1, H, hd); ck/cv (B, Smax, Hk, hd); kv_len (B,).
+    Written as masked logsumexp so XLA can keep the cache sharded along S
+    and reduce with partial softmax accumulators (flash-decode); the serve
+    path additionally wraps this in shard_map for explicit psum combining.
+    """
+    B, Smax, Hk, hd = ck.shape
+    H = q.shape[2]
+    group = H // Hk
+    qg = q.reshape(B, 1, Hk, group, hd)
+    # bf16 cache operands + f32 accumulation: never materializes an f32
+    # copy of the (huge) cache (§Perf cell B, iteration 3)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg, ck,
+                   preferred_element_type=jnp.float32) / (hd ** 0.5)
+    mask = (jnp.arange(Smax) < kv_len[:, None])[:, None, None, None, :]
+    s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.where(mask, jnp.exp(s - m), 0.0)
+    num = jnp.einsum("bhgqs,bshd->bqhgd", e.astype(cv.dtype), cv,
+                     preferred_element_type=jnp.float32)
+    den = jnp.sum(e, axis=-1)[..., None].transpose(0, 3, 1, 2, 4)
+    out = num / jnp.maximum(den, 1e-30)
+    return out.reshape(B, 1, H, cv.shape[-1]).astype(q.dtype)
+
+
+# -- multi-head latent attention (MiniCPM3 / DeepSeek-style MLA) -------------
+
+def init_mla(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    h = cfg.num_heads
+    qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wdq": _normal(ks[0], (d, cfg.q_lora_rank), dtype),
+        "wuq": _normal(ks[1], (cfg.q_lora_rank, h, qk_head), dtype),
+        "wdkv": _normal(ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_head_dim),
+                        dtype),
+        "wuk": _normal(ks[3], (cfg.kv_lora_rank, h, cfg.qk_nope_head_dim),
+                       dtype),
+        "wuv": _normal(ks[4], (cfg.kv_lora_rank, h, cfg.v_head_dim), dtype),
+        "wo": _normal(ks[5], (h, cfg.v_head_dim, d), dtype),
+        "q_norm": jnp.ones((cfg.q_lora_rank,), dtype),
+        "kv_norm": jnp.ones((cfg.kv_lora_rank,), dtype),
+    }
+
+
+def mla(
+    p: Params, cfg: ArchConfig, x: jnp.ndarray, positions,
+    cache: Optional[Dict] = None, *, attn_impl: str = "xla",
+    constrain=lambda t, kind: t,
+):
+    """MLA: queries/keys split into nope+rope parts; KV compressed into a
+    ``kv_lora_rank`` latent (the cache stores latent + shared rope key —
+    the memory win that motivates MLA).  Returns (out, new_cache)."""
+    B, S, D = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    eps = cfg.norm_eps
+
+    cq = rms_norm({"scale": p["q_norm"]}, x @ p["wdq"], eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wuq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = _apply_rope(cfg, q_rope, positions)
+
+    ckv_full = x @ p["wdkv"]                       # (B,S,rank+dr)
+    ckv, k_rope = ckv_full[..., :cfg.kv_lora_rank], ckv_full[..., cfg.kv_lora_rank:]
+    ckv = rms_norm({"scale": p["kv_norm"]}, ckv, eps)
+    k_rope = _apply_rope(cfg, k_rope[:, :, None, :], positions)  # (B,S,1,dr)
+
+    def expand(ckv, k_rope):
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["wuk"])
+        v = jnp.einsum("bsr,rhk->bshk", ckv, p["wuv"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (dr,))], -1)
+        return k, v
+
+    new_cache = None
+    if cache is None:
+        k, v = expand(ckv, k_rope)
+        q_full = jnp.concatenate([q_nope, q_rope], -1)
+        qh, kh, vh = (jnp.swapaxes(t, 1, 2) for t in (q_full, k, v))
+        if attn_impl == "pallas" and dn + dr == dv:
+            out = flash_attention(qh, kh, vh, causal=True)
+        elif attn_impl == "chunked":
+            out = chunked_attention(qh, kh, vh, causal=True)
+        else:
+            out = attention_ref(qh, kh, vh, causal=True)
+        out = jnp.swapaxes(out, 1, 2)
+    else:
+        if S == 1:
+            idx = cache["len"]
+            cc = jax.vmap(
+                lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0))
+            )(cache["ckv"], ckv, idx)
+            cr = jax.vmap(
+                lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+            )(cache["k_rope"], k_rope, idx)
+            new_cache = {"ckv": cc, "k_rope": cr, "len": idx + 1}
+            k, v = expand(cc, cr)
+            q_full = jnp.concatenate([q_nope, q_rope], -1)
+            out = _decode_attend(q_full, k, v, idx + 1)
+        else:
+            Smax = cache["ckv"].shape[1]
+            cc = jnp.zeros_like(cache["ckv"]).at[:, :S].set(ckv)
+            cr = jnp.zeros_like(cache["k_rope"]).at[:, :S].set(k_rope)
+            new_cache = {"ckv": cc, "k_rope": cr,
+                         "len": jnp.full((B,), S, jnp.int32)}
+            k, v = expand(ckv, k_rope)
+            q_full = jnp.concatenate([q_nope, q_rope], -1)
+            qh, kh, vh = (jnp.swapaxes(t, 1, 2) for t in (q_full, k, v))
+            out = attention_ref(qh, kh, vh, causal=True)
+            out = jnp.swapaxes(out, 1, 2)
+    out = constrain(out, "heads_v")
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+def init_mlp(key, d: int, ff: int, dtype, act: str = "silu") -> Params:
+    ks = jax.random.split(key, 3)
+    if act == "silu":   # SwiGLU
+        return {"wg": _normal(ks[0], (d, ff), dtype),
+                "wu": _normal(ks[1], (d, ff), dtype),
+                "wd": _normal(ks[2], (ff, d), dtype)}
+    return {"wu": _normal(ks[1], (d, ff), dtype),
+            "wd": _normal(ks[2], (ff, d), dtype)}
+
+
+def mlp(p: Params, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    if act == "silu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+    return jax.nn.gelu(x @ p["wu"]) @ p["wd"]

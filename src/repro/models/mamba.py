@@ -1,0 +1,150 @@
+"""Mamba (selective SSM) mixer block — the state-space half of Jamba.
+
+Training/prefill runs the selective scan as a *chunked* associative scan:
+``lax.scan`` over time chunks (sequential, O(S/chunk) steps) with a
+``lax.associative_scan`` inside each chunk — peak memory O(B·chunk·D·N)
+instead of O(B·S·D·N), which is what makes jamba-scale models (d_inner 16k,
+S up to 512k) lowerable.  Decode is the O(1) recurrent update on a carried
+(conv_state, ssm_state) cache.
+
+The recurrence (diagonal A):
+    h_t = exp(Δ_t ⊙ A) ⊙ h_{t-1} + Δ_t ⊙ B_t · x_t
+    y_t = C_t · h_t + D ⊙ x_t
+composed associatively via (a, b) pairs: (a2·a1, a2·b1 + b2).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from .layers import _normal
+
+Params = Dict[str, jnp.ndarray]
+
+__all__ = ["init_mamba", "mamba", "init_mamba_cache"]
+
+
+def _dt_rank(cfg: ArchConfig) -> int:
+    return cfg.mamba_dt_rank or -(-cfg.d_model // 16)
+
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    din = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    r = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A (negative reals), stored as log
+    a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (din, n))
+    return {
+        "in_proj": _normal(ks[0], (d, 2 * din), dtype),
+        "conv_w": _normal(ks[1], (cfg.mamba_d_conv, din), dtype, scale=0.1),
+        "conv_b": jnp.zeros((din,), dtype),
+        "x_proj": _normal(ks[2], (din, r + 2 * n), dtype),
+        "dt_proj_w": _normal(ks[3], (r, din), dtype, scale=r ** -0.5),
+        "dt_proj_b": jnp.full((din,), -4.6, dtype),  # softplus^-1(0.01)
+        "a_log": jnp.log(a).astype(jnp.float32),
+        "d_skip": jnp.ones((din,), jnp.float32),
+        "out_proj": _normal(ks[4], (din, d), dtype),
+    }
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> Dict:
+    din = cfg.mamba_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, din), dtype),
+        "ssm": jnp.zeros((batch, din, cfg.mamba_d_state), jnp.float32),
+    }
+
+
+def _ssm_scan_chunked(da, db, chunk: int):
+    """Associative scan of h_t = da_t ⊙ h_{t-1} + db_t over axis 1.
+
+    da/db: (B, S, D, N) f32.  Returns h (B, S, D, N).
+    """
+    B, S, D, N = da.shape
+    S_pad = -(-S // chunk) * chunk
+    if S_pad != S:
+        da = jnp.pad(da, ((0, 0), (0, S_pad - S), (0, 0), (0, 0)),
+                     constant_values=1.0)
+        db = jnp.pad(db, ((0, 0), (0, S_pad - S), (0, 0), (0, 0)))
+    nc = S_pad // chunk
+    da = da.reshape(B, nc, chunk, D, N).swapaxes(0, 1)   # (nc, B, c, D, N)
+    db = db.reshape(B, nc, chunk, D, N).swapaxes(0, 1)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def step(h, xs):
+        a_c, b_c = xs
+        # prepend carry as an extra element via b' = a_0·h + b_0 on elem 0
+        b_c = b_c.at[:, 0].add(a_c[:, 0] * h)
+        aa, bb = jax.lax.associative_scan(combine, (a_c, b_c), axis=1)
+        return bb[:, -1], bb
+
+    _, hs = jax.lax.scan(step, jnp.zeros((B, D, N), da.dtype), (da, db))
+    hs = hs.swapaxes(0, 1).reshape(B, S_pad, D, N)
+    return hs[:, :S]
+
+
+def mamba(
+    p: Params, cfg: ArchConfig, x: jnp.ndarray,
+    cache: Optional[Dict] = None, *, chunk: int = 256,
+    constrain=lambda t, kind: t,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x (B, S, D) -> (y (B, S, D), new_cache)."""
+    B, S, D = x.shape
+    n = cfg.mamba_d_state
+    r = _dt_rank(cfg)
+    dconv = cfg.mamba_d_conv
+
+    xz = x @ p["in_proj"]                       # (B, S, 2*din)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = constrain(xs, "mamba_inner")
+
+    # causal depthwise conv
+    if cache is None:
+        conv_in = jnp.pad(xs, ((0, 0), (dconv - 1, 0), (0, 0)))
+        new_conv = None
+    else:
+        conv_in = jnp.concatenate([cache["conv"].astype(xs.dtype), xs], 1)
+        new_conv = conv_in[:, -(dconv - 1):]
+    xc = sum(
+        conv_in[:, i:i + S] * p["conv_w"][i] for i in range(dconv)
+    ) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    proj = xc @ p["x_proj"]                     # (B, S, r+2n)
+    dt = jax.nn.softplus(proj[..., :r] @ p["dt_proj_w"]
+                         + p["dt_proj_b"]).astype(jnp.float32)  # (B,S,din)
+    bmat = proj[..., r:r + n].astype(jnp.float32)               # (B,S,n)
+    cmat = proj[..., r + n:].astype(jnp.float32)                # (B,S,n)
+
+    a = -jnp.exp(p["a_log"])                    # (din, n)
+    xf = xc.astype(jnp.float32)
+    da = jnp.exp(dt[..., None] * a)             # (B,S,din,n)
+    db = (dt * xf)[..., None] * bmat[:, :, None, :]
+
+    if cache is None or S > 1:
+        h = _ssm_scan_chunked(da, db, chunk)    # (B,S,din,n)
+        new_ssm = h[:, -1] if cache is not None else None
+    else:
+        h = (da[:, 0] * cache["ssm"] + db[:, 0])[:, None]
+        new_ssm = h[:, 0]
+
+    y = jnp.einsum("bsdn,bsn->bsd", h, cmat) + xf * p["d_skip"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_cache = None
+    if cache is not None:
+        if new_conv is None:
+            new_conv = jnp.pad(xs, ((0, 0), (dconv - 1, 0), (0, 0)))[:, -(dconv - 1):]
+        new_cache = {"conv": new_conv, "ssm": new_ssm}
+    return out, new_cache

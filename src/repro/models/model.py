@@ -1,0 +1,135 @@
+"""Public model API: embeddings + stack + head, train/prefill/decode entry
+points, and the multimodal frontend stubs.
+
+Batch dict conventions (shapes global; launchers shard them):
+
+* ``tokens``          (B, S) int32, or (B, codebooks, S) for musicgen
+* ``positions``       (B, S) int32, or (3, B, S) for M-RoPE (qwen2-vl)
+* ``frontend_embeds`` (B, S, D) optional — precomputed patch/frame
+                      embeddings (the modality frontend is a stub per the
+                      assignment brief); substituted where ``embed_mask``
+* ``embed_mask``      (B, S) bool optional
+* ``labels``          like tokens (train)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from .layers import _normal, init_rms_norm, rms_norm
+from .transformer import apply_stack, init_stack, init_stack_cache
+
+Params = Dict[str, Any]
+Constrain = Callable[[jnp.ndarray, str], jnp.ndarray]
+
+__all__ = ["init_params", "forward", "init_cache", "loss_fn",
+           "param_count"]
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    dt = _dtype(cfg)
+    k_embed, k_stack, k_head = jax.random.split(key, 3)
+    ncb = max(1, cfg.codebooks)
+    p: Params = {
+        "embed": _normal(k_embed, (ncb, cfg.vocab_size, cfg.d_model), dt)
+        if cfg.codebooks else _normal(k_embed, (cfg.vocab_size, cfg.d_model),
+                                      dt),
+        "stack": init_stack(k_stack, cfg),
+        "ln_f": init_rms_norm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = (
+            _normal(k_head, (ncb, cfg.d_model, cfg.vocab_size), dt)
+            if cfg.codebooks
+            else _normal(k_head, (cfg.d_model, cfg.vocab_size), dt))
+    return p
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return init_stack_cache(cfg, batch, max_len)
+
+
+def _embed(params, cfg: ArchConfig, batch, constrain: Constrain):
+    tokens = batch["tokens"]
+    if cfg.codebooks:
+        # (B, C, S): sum codebook embeddings (EnCodec parallel streams)
+        x = jax.vmap(
+            lambda table, toks: jnp.take(table, toks, axis=0),
+            in_axes=(0, 1), out_axes=0,
+        )(params["embed"], tokens)                      # (C, B, S, D)
+        x = x.sum(axis=0)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)   # (B, S, D)
+    if "frontend_embeds" in batch:
+        mask = batch["embed_mask"][..., None]
+        x = jnp.where(mask, batch["frontend_embeds"].astype(x.dtype), x)
+    return constrain(x, "hidden")
+
+
+def _head(params, cfg: ArchConfig, x, constrain: Constrain):
+    if cfg.codebooks:
+        logits = jnp.einsum("bsd,cdv->bcsv", x, params["head"])
+    elif cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = x @ params["head"]
+    return constrain(logits, "logits")
+
+
+def forward(
+    params: Params, cfg: ArchConfig, batch: Dict, *,
+    cache=None, mode: str = "train", attn_impl: str = "xla",
+    constrain: Constrain = lambda t, k: t, remat: str = "full",
+    logits_slice: Optional[str] = None,
+):
+    """mode: train (no cache) | prefill | decode.
+
+    ``logits_slice='last'`` returns logits only for the final position
+    (serving: avoids materializing (B, S, V)).
+    Returns (logits, new_cache, aux).
+    """
+    x = _embed(params, cfg, batch, constrain)
+    positions = batch["positions"]
+    x, new_cache, aux = apply_stack(
+        params["stack"], cfg, x, positions, cache,
+        attn_impl=attn_impl, constrain=constrain,
+        remat=remat if mode == "train" else "none")
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    if logits_slice == "last":
+        x = x[:, -1:]
+    logits = _head(params, cfg, x, constrain)
+    return logits, new_cache, aux
+
+
+def loss_fn(
+    params: Params, cfg: ArchConfig, batch: Dict, *,
+    attn_impl: str = "xla", constrain: Constrain = lambda t, k: t,
+    remat: str = "full", aux_loss_weight: float = 0.01,
+):
+    """Next-token cross-entropy (+ MoE load-balance aux).  Returns
+    (loss, metrics)."""
+    logits, _, aux = forward(params, cfg, batch, mode="train",
+                             attn_impl=attn_impl, constrain=constrain,
+                             remat=remat)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    loss = ce + aux_loss_weight * aux["load_balance_loss"]
+    return loss, {"ce": ce, **aux}
+
+
+def param_count(params: Params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

@@ -1,0 +1,158 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based dispatch.
+
+GShard/MaxText-style dense dispatch: routing builds a one-hot dispatch
+tensor (tokens × experts × capacity); expert FFNs run as one batched einsum
+over the expert dimension, which shards cleanly (EP over whichever mesh axis
+divides ``num_experts``, expert-TP otherwise — sharding/specs.py decides).
+Tokens over capacity are dropped (contribute zero) and counted in the aux
+outputs; the load-balance auxiliary loss follows Switch/GShard.
+
+Scalability note (DESIGN.md §5): the dispatch/combine one-hots are
+O(T²·k·cf/E) in token count T — quadratic.  ``moe_layer`` therefore
+processes tokens in fixed-size chunks under ``lax.scan``: dispatch memory is
+bounded by one chunk (default 4096 tokens) regardless of sequence length,
+which is what lets 32k-token prefill and large local batches lower.  The
+capacity rule applies per chunk.
+
+An always-on shared expert (Qwen2-MoE) runs as a plain dense MLP beside the
+routed experts.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from .layers import _normal, init_mlp, mlp
+
+Params = Dict[str, jnp.ndarray]
+
+__all__ = ["init_moe", "moe_layer"]
+
+
+def _padded_experts(cfg: ArchConfig) -> int:
+    e, m = cfg.num_experts, cfg.expert_pad_multiple
+    return e if m <= 0 else -(-e // m) * m
+
+
+def init_moe(key, cfg: ArchConfig, dtype) -> Params:
+    d, ff = cfg.d_model, cfg.moe_d_ff
+    e = _padded_experts(cfg)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _normal(ks[0], (d, cfg.num_experts), dtype, scale=0.02),
+        "wg": _normal(ks[1], (e, d, ff), dtype),
+        "wu": _normal(ks[2], (e, d, ff), dtype),
+        "wd": _normal(ks[3], (e, ff, d), dtype),
+    }
+    if cfg.shared_expert_d_ff:
+        p["shared"] = init_mlp(ks[4], d, cfg.shared_expert_d_ff, dtype,
+                               cfg.mlp_act)
+    return p
+
+
+def _route_chunk(p, cfg: ArchConfig, xt: jnp.ndarray, C: int, constrain):
+    """Dispatch/compute/combine for one token chunk.  xt (T, D)."""
+    T, D = xt.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    E_pad = _padded_experts(cfg)   # padded experts receive no tokens
+
+    logits = (xt @ p["router"]).astype(jnp.float32)          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)            # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, E_pad, dtype=jnp.int32)  # (T, K, Ep)
+    E = E_pad
+    flat = onehot.reshape(T * K, E)
+    pos = jnp.cumsum(flat, axis=0) - flat
+    pos = (pos * flat).sum(-1).reshape(T, K)                 # (T, K)
+    keep = pos < C
+    dropped = 1.0 - keep.mean()
+
+    slot = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                          dtype=jnp.float32)[..., :C]        # (T, K, C)
+    dispatch = jnp.einsum("tke,tkc->tec", onehot.astype(jnp.float32),
+                          slot).astype(xt.dtype)
+    combine = jnp.einsum("tke,tkc,tk->tec", onehot.astype(jnp.float32),
+                         slot, gate_vals).astype(xt.dtype)
+
+    xin = jnp.einsum("tec,td->ecd", dispatch, xt)            # (E, C, D)
+    xin = constrain(xin, "expert_in").astype(xt.dtype)
+    # bf16 operands + f32 accumulation: keeps the (big) expert weights in
+    # their storage dtype — no f32 upcast copies/all-gathers of weights
+    hg = jnp.einsum("ecd,edf->ecf", xin, p["wg"],
+                    preferred_element_type=jnp.float32)
+    hu = jnp.einsum("ecd,edf->ecf", xin, p["wu"],
+                    preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(hg) * hu).astype(xt.dtype)
+    xout = jnp.einsum("ecf,efd->ecd", h, p["wd"],
+                      preferred_element_type=jnp.float32)    # (E, C, D)
+    xout = constrain(xout, "expert_in").astype(xt.dtype)
+    out = jnp.einsum("tec,ecd->td", combine, xout)
+
+    f = jnp.mean(onehot.astype(jnp.float32).sum(1), axis=0)
+    lb_loss = cfg.num_experts * jnp.sum(
+        f[:cfg.num_experts] * probs.mean(0))
+    return out, lb_loss, dropped.astype(jnp.float32)
+
+
+def moe_layer(
+    p: Params, cfg: ArchConfig, x: jnp.ndarray,
+    constrain=lambda t, kind: t, exact: bool = False,
+    token_chunk: int = 4096,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x (B, S, D) -> (out (B, S, D), aux {load_balance_loss, drop_frac}).
+
+    Capacity C = ceil(Tc/E · k · capacity_factor) per chunk of Tc tokens.
+    ``exact=True`` (decode) uses C = Tc: no token is ever dropped, so decode
+    logits agree with teacher forcing.
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    xt = x.reshape(T, D)
+
+    Tc = min(token_chunk, T)
+    n_chunks = -(-T // Tc)
+    C = Tc if exact else max(1, int(Tc * K * cfg.capacity_factor / E + 0.999))
+    C = min(C, Tc)
+
+    if n_chunks == 1:
+        out, lb, drop = _route_chunk(p, cfg, xt, C, constrain)
+    else:
+        pad = n_chunks * Tc - T
+        xp = jnp.pad(xt, ((0, pad), (0, 0)))
+        chunks = xp.reshape(n_chunks, Tc, D)
+        # Re-pin the token sharding onto the *within-chunk* dim: without
+        # this the chunk axis inherits the data sharding and the SPMD
+        # partitioner replicates the whole dispatch pipeline per device
+        # (measured 16x bytes+flops blowup, EXPERIMENTS.md §Perf cell A).
+        chunks = constrain(chunks, "moe_chunks")
+
+        # checkpoint: recompute the O(Tc·E·C) dispatch/combine tensors in
+        # the backward instead of stacking them across chunks.
+        @jax.checkpoint
+        def body_fn(xc):
+            return _route_chunk(p, cfg, xc, C, constrain)
+
+        def body(_, xc):
+            out, lb, drop = body_fn(xc)
+            return (), (out, lb, drop)
+
+        _, (outs, lbs, drops) = jax.lax.scan(body, (), chunks)
+        out = outs.reshape(n_chunks * Tc, D)[:T]
+        out = constrain(out, "moe_tokens")
+        lb, drop = lbs.mean(), drops.mean()
+
+    if "shared" in p:
+        out = out + mlp(p["shared"], xt, cfg.mlp_act)
+
+    aux = {"load_balance_loss": lb, "drop_frac": drop}
+    return out.reshape(B, S, D), aux

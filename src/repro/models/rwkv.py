@@ -1,0 +1,204 @@
+"""RWKV-6 (Finch) block: data-dependent-decay linear attention.
+
+Time mixing implements the WKV6 recurrence per 64-wide head
+
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ v_t
+    y_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+
+with data-dependent w_t (token-shift + LoRA).  Two execution paths:
+
+* **chunked parallel** (train/prefill): within a chunk the pairwise decay
+  factor exp(Λ_{t-1} - Λ_s), s ≤ t-1, is ≤ 1 — numerically stable without
+  log-space gymnastics; cross-chunk state is carried by ``lax.scan`` (so the
+  backward pass checkpoints only chunk boundaries: O(S/c) state memory, the
+  property that makes 500k-token contexts feasible).
+* **recurrent** (decode): O(1) per token on a carried (shift, state) cache.
+
+Channel mixing is the standard RWKV squared-ReLU gated FFN with token shift.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from .layers import _normal, rms_norm
+
+Params = Dict[str, jnp.ndarray]
+
+__all__ = ["init_rwkv_block", "rwkv_block", "init_rwkv_cache"]
+
+_LORA = 32          # token-shift mixer LoRA dim
+_DECAY_LORA = 64
+
+
+def init_rwkv_block(key, cfg: ArchConfig, dtype) -> Params:
+    d, ff = cfg.d_model, cfg.d_ff
+    hs = cfg.rwkv_head_size
+    ks = jax.random.split(key, 14)
+    return {
+        # time mixing
+        "maa_x": jnp.zeros((d,), dtype),
+        "maa_rkvwg": jnp.zeros((5, d), dtype),
+        "maa_w1": _normal(ks[0], (d, 5 * _LORA), dtype),
+        "maa_w2": _normal(ks[1], (5, _LORA, d), dtype),
+        "decay": jnp.full((d,), -4.0, jnp.float32),
+        "decay_w1": _normal(ks[2], (d, _DECAY_LORA), dtype),
+        "decay_w2": _normal(ks[3], (_DECAY_LORA, d), dtype),
+        "bonus": jnp.zeros((d // hs, hs), jnp.float32),      # u, per head
+        "wr": _normal(ks[4], (d, d), dtype),
+        "wk": _normal(ks[5], (d, d), dtype),
+        "wv": _normal(ks[6], (d, d), dtype),
+        "wg": _normal(ks[7], (d, d), dtype),
+        "wo": _normal(ks[8], (d, d), dtype),
+        "ln_x": jnp.ones((d,), dtype),
+        # channel mixing
+        "cm_maa_k": jnp.zeros((d,), dtype),
+        "cm_maa_r": jnp.zeros((d,), dtype),
+        "cm_wk": _normal(ks[9], (d, ff), dtype),
+        "cm_wv": _normal(ks[10], (ff, d), dtype),
+        "cm_wr": _normal(ks[11], (d, d), dtype),
+        # per-block norms (RWKV uses two lns before tm/cm)
+        "ln1": jnp.ones((d,), dtype),
+        "ln2": jnp.ones((d,), dtype),
+    }
+
+
+def init_rwkv_cache(cfg: ArchConfig, batch: int, dtype) -> Dict:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    return {
+        "tm_shift": jnp.zeros((batch, d), dtype),
+        "cm_shift": jnp.zeros((batch, d), dtype),
+        "state": jnp.zeros((batch, d // hs, hs, hs), jnp.float32),
+    }
+
+
+def _token_shift(x: jnp.ndarray, shift_state: Optional[jnp.ndarray]):
+    """x (B,S,D) -> x_{t-1} (B,S,D); position 0 uses the cache (or zeros)."""
+    prev = jnp.zeros_like(x[:, :1]) if shift_state is None \
+        else shift_state[:, None].astype(x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _wkv_chunked(r, k, v, w, u, chunk: int):
+    """WKV6 over full sequences.  r/k/v (B,S,H,hs); w (B,S,H,hs) in (0,1);
+    u (H,hs).  Returns y (B,S,H,hs), final state (B,H,hs,hs)."""
+    B, S, H, hs = r.shape
+    c = min(chunk, S)
+    S_pad = -(-S // c) * c
+    pad = ((0, 0), (0, S_pad - S), (0, 0), (0, 0))
+    rf = jnp.pad(r.astype(jnp.float32), pad)
+    kf = jnp.pad(k.astype(jnp.float32), pad)
+    vf = jnp.pad(v.astype(jnp.float32), pad)
+    wf = jnp.pad(w.astype(jnp.float32), pad, constant_values=1.0)
+    nc = S_pad // c
+
+    def resh(t):  # (B, S, H, hs) -> (nc, B, H, c, hs)
+        return t.reshape(B, nc, c, H, hs).transpose(1, 0, 3, 2, 4)
+
+    rf, kf, vf, wf = map(resh, (rf, kf, vf, wf))
+    logw = jnp.log(jnp.maximum(wf, 1e-38))                 # (nc,B,H,c,hs)
+    lam = jnp.cumsum(logw, axis=3)                         # Λ_t (inclusive)
+
+    tri_low = jnp.tril(jnp.ones((c, c), jnp.float32), -1)  # s < t
+
+    def step(state, xs):
+        rr, kk, vv, ll, lw = xs           # blocks (B,H,c,hs) ; state (B,H,hs,hs)
+        lam_prev = ll - lw                # Λ_{t-1}
+        # pairwise stable decay exp(Λ_{t-1} - Λ_s) for s<t  (≤ 1)
+        e = jnp.exp(jnp.minimum(
+            lam_prev[:, :, :, None, :] - ll[:, :, None, :, :], 0.0))
+        a = jnp.einsum("bhti,bhtsi,bhsi->bhts", rr, e, kk)
+        a = a * tri_low
+        # diagonal bonus term  r_t·(u ⊙ k_t)
+        diag = (rr * kk * u[None, :, None, :]).sum(-1)     # (B,H,c)
+        y = jnp.einsum("bhts,bhsj->bhtj", a, vv)
+        y = y + diag[..., None] * vv
+        # contribution of the inbound state
+        y = y + jnp.einsum("bhti,bhij->bhtj", rr * jnp.exp(lam_prev), state)
+        # state update: S' = diag(exp(Λ_c)) S + Σ_s exp(Λ_c - Λ_s) k_s v_sᵀ
+        decay_all = jnp.exp(ll[:, :, -1, :])               # (B,H,hs)
+        carry_k = kk * jnp.exp(ll[:, :, -1:, :] - ll)      # ≤ 1 factors
+        state = state * decay_all[..., None] + jnp.einsum(
+            "bhsi,bhsj->bhij", carry_k, vv)
+        return state, y
+
+    state0 = jnp.zeros((B, H, hs, hs), jnp.float32)
+    state, ys = jax.lax.scan(step, state0, (rf, kf, vf, lam, logw))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S_pad, H, hs)[:, :S]
+    return y, state
+
+
+def _wkv_recurrent(r, k, v, w, u, state):
+    """One decode step.  r/k/v/w (B,1,H,hs); state (B,H,hs,hs) f32."""
+    rf, kf, vf, wf = (t[:, 0].astype(jnp.float32) for t in (r, k, v, w))
+    at = kf[..., :, None] * vf[..., None, :]               # (B,H,hs,hs)
+    y = jnp.einsum("bhi,bhij->bhj", rf, state + u[..., None] * at)
+    state = state * wf[..., None] + at
+    return y[:, None], state
+
+
+def rwkv_block(
+    p: Params, cfg: ArchConfig, x: jnp.ndarray,
+    cache: Optional[Dict] = None, *, chunk: int = 64,
+    constrain=lambda t, kind: t,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Full RWKV6 block (time mix + channel mix).  x (B,S,D)."""
+    B, S, D = x.shape
+    hs = cfg.rwkv_head_size
+    H = D // hs
+    eps = cfg.norm_eps
+
+    # ---- time mixing ----
+    xn = rms_norm({"scale": p["ln1"]}, x, eps)
+    prev = _token_shift(xn, cache["tm_shift"] if cache else None)
+    xx = prev - xn
+    mix = xn + xx * p["maa_x"]
+    lora = jnp.tanh(mix @ p["maa_w1"]).reshape(B, S, 5, _LORA)
+    deltas = jnp.einsum("bsfl,fld->fbsd", lora, p["maa_w2"])
+    xr, xk, xv, xw, xg = (
+        xn + xx * (p["maa_rkvwg"][i] + deltas[i]) for i in range(5))
+
+    r = (xr @ p["wr"]).reshape(B, S, H, hs)
+    k = (xk @ p["wk"]).reshape(B, S, H, hs)
+    v = (xv @ p["wv"]).reshape(B, S, H, hs)
+    g = jax.nn.silu(xg @ p["wg"])
+    r = constrain(r, "heads")
+
+    dlog = (p["decay"]
+            + (jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]).astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(dlog)).reshape(B, S, H, hs)       # ∈ (0,1)
+
+    if cache is None:
+        y, _ = _wkv_chunked(r, k, v, w, p["bonus"], chunk)
+        new_cache = None
+    elif S == 1:
+        y, state = _wkv_recurrent(r, k, v, w, p["bonus"], cache["state"])
+        new_cache = {"state": state, "tm_shift": xn[:, -1],
+                     "cm_shift": None}   # filled below
+    else:  # prefill with cache
+        y, state = _wkv_chunked(r, k, v, w, p["bonus"], chunk)
+        new_cache = {"state": state, "tm_shift": xn[:, -1],
+                     "cm_shift": None}
+
+    y = y.reshape(B, S, D).astype(x.dtype)
+    y = rms_norm({"scale": p["ln_x"]}, y, eps) * g
+    x = x + y @ p["wo"]
+
+    # ---- channel mixing ----
+    xn2 = rms_norm({"scale": p["ln2"]}, x, eps)
+    prev2 = _token_shift(xn2, cache["cm_shift"] if cache else None)
+    xx2 = prev2 - xn2
+    xk2 = xn2 + xx2 * p["cm_maa_k"]
+    xr2 = xn2 + xx2 * p["cm_maa_r"]
+    kk = jnp.square(jax.nn.relu(xk2 @ p["cm_wk"]))
+    out = x + jax.nn.sigmoid(xr2 @ p["cm_wr"]) * (kk @ p["cm_wv"])
+
+    if new_cache is not None:
+        new_cache["cm_shift"] = xn2[:, -1]
+    return out, new_cache

@@ -1,0 +1,214 @@
+"""Backbone assembly: periodic layer stack scanned over repeats.
+
+A stack is ``num_periods`` repetitions of ``cfg.layer_pattern`` (e.g. dense
+LM: 1-layer period ``("attn:dense",)``; Jamba: 8-layer period with one
+attention position and MoE on odd positions).  Parameters and caches for
+each period-position are stacked along a leading axis and the stack is
+``lax.scan``-ed — one compiled period body regardless of depth, which keeps
+dry-run compiles tractable and HLO small.
+
+Mixers: GQA attention, MLA, Mamba, RWKV6 (RWKV owns its whole block incl.
+channel-mix, mlp kind "none").  MLPs: dense SwiGLU/GELU, MoE (+shared).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from . import layers as L
+from .mamba import init_mamba, init_mamba_cache, mamba
+from .moe import init_moe, moe_layer
+from .rwkv import init_rwkv_block, init_rwkv_cache, rwkv_block
+
+Params = Dict[str, Any]
+Constrain = Callable[[jnp.ndarray, str], jnp.ndarray]
+
+__all__ = ["init_stack", "apply_stack", "init_stack_cache"]
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------
+# per-position init
+# --------------------------------------------------------------------------
+
+def _init_position(key, cfg: ArchConfig, kind: str) -> Params:
+    mixer, mlp_kind = kind.split(":")
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p: Params = {}
+    if mixer == "attn":
+        p["ln_attn"] = L.init_rms_norm(cfg.d_model, dt)
+        p["attn"] = (L.init_mla(ks[0], cfg, dt) if cfg.attention == "mla"
+                     else L.init_attention(ks[0], cfg, dt))
+    elif mixer == "mamba":
+        p["ln_attn"] = L.init_rms_norm(cfg.d_model, dt)
+        p["mamba"] = init_mamba(ks[0], cfg, dt)
+    elif mixer == "rwkv6":
+        p["rwkv"] = init_rwkv_block(ks[0], cfg, dt)
+    else:
+        raise ValueError(f"unknown mixer {mixer!r}")
+
+    if mlp_kind == "dense":
+        p["ln_mlp"] = L.init_rms_norm(cfg.d_model, dt)
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt, cfg.mlp_act)
+    elif mlp_kind == "moe":
+        p["ln_mlp"] = L.init_rms_norm(cfg.d_model, dt)
+        p["moe"] = init_moe(ks[1], cfg, dt)
+    elif mlp_kind != "none":
+        raise ValueError(f"unknown mlp kind {mlp_kind!r}")
+    return p
+
+
+def _position_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int):
+    mixer, _ = kind.split(":")
+    dt = _dtype(cfg)
+    if mixer == "attn":
+        if cfg.attention == "mla":
+            return {
+                "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dt),
+                "k_rope": jnp.zeros(
+                    (batch, max_len, 1, cfg.qk_rope_head_dim), dt),
+                "len": jnp.zeros((batch,), jnp.int32),
+            }
+        return {
+            "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                           dt),
+            "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                           dt),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+    if mixer == "mamba":
+        return init_mamba_cache(cfg, batch, dt)
+    if mixer == "rwkv6":
+        return init_rwkv_cache(cfg, batch, dt)
+    raise ValueError(mixer)
+
+
+def _apply_position(
+    p: Params, cfg: ArchConfig, kind: str, x, positions, cache,
+    attn_impl: str, constrain: Constrain,
+):
+    """One layer.  Returns (x, new_cache, aux)."""
+    mixer, mlp_kind = kind.split(":")
+    aux = {"load_balance_loss": jnp.zeros((), jnp.float32),
+           "drop_frac": jnp.zeros((), jnp.float32)}
+    new_cache = cache
+
+    if mixer == "rwkv6":
+        x, new_cache = rwkv_block(p["rwkv"], cfg, x, cache,
+                                  constrain=constrain)
+        x = constrain(x, "hidden")
+        return x, new_cache, aux
+
+    h = L.rms_norm(p["ln_attn"], x, cfg.norm_eps)
+    if mixer == "attn":
+        fn = L.mla if cfg.attention == "mla" else L.attention
+        mix_out, new_cache = fn(p["attn"], cfg, h, positions, cache,
+                                attn_impl=attn_impl, constrain=constrain)
+    else:
+        mix_out, new_cache = mamba(p["mamba"], cfg, h, cache,
+                                   constrain=constrain)
+
+    if cfg.parallel_block and mlp_kind != "none":
+        # command-r style: attn and mlp both read the same normed input
+        if mlp_kind == "dense":
+            mlp_out = L.mlp(p["mlp"], h, cfg.mlp_act)
+        else:
+            mlp_out, aux = moe_layer(p["moe"], cfg, h, constrain=constrain,
+                                     exact=cache is not None and x.shape[1] == 1)
+        x = x + mix_out + mlp_out
+        x = constrain(x, "hidden")
+        return x, new_cache, aux
+
+    x = x + mix_out
+    x = constrain(x, "hidden")
+    if mlp_kind != "none":
+        h2 = L.rms_norm(p["ln_mlp"], x, cfg.norm_eps)
+        if mlp_kind == "dense":
+            x = x + L.mlp(p["mlp"], h2, cfg.mlp_act)
+        else:
+            out, aux = moe_layer(p["moe"], cfg, h2, constrain=constrain,
+                                 exact=cache is not None and x.shape[1] == 1)
+            x = x + out
+        x = constrain(x, "hidden")
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# stack = scan over periods
+# --------------------------------------------------------------------------
+
+def init_stack(key, cfg: ArchConfig) -> Params:
+    """Stacked (leading axis = num_periods) params for every pattern
+    position."""
+    out: Params = {}
+    for pos, kind in enumerate(cfg.layer_pattern):
+        keys = jax.random.split(jax.random.fold_in(key, pos),
+                                cfg.num_periods)
+        out[f"pos{pos}"] = jax.vmap(
+            lambda k: _init_position(k, cfg, kind))(keys)
+    return out
+
+
+def init_stack_cache(cfg: ArchConfig, batch: int, max_len: int):
+    out = {}
+    for pos, kind in enumerate(cfg.layer_pattern):
+        one = _position_cache(cfg, kind, batch, max_len)
+        out[f"pos{pos}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a[None], (cfg.num_periods,) + a.shape).copy(), one)
+    return out
+
+
+def apply_stack(
+    params: Params, cfg: ArchConfig, x: jnp.ndarray, positions,
+    cache=None, *, attn_impl: str = "xla",
+    constrain: Constrain = lambda t, k: t,
+    remat: str = "full",
+):
+    """Run the whole stack.  Returns (x, new_cache, aux_means)."""
+    pattern = cfg.layer_pattern
+
+    def period_body(carry, xs):
+        x = carry
+        p_params, p_cache = xs
+        new_caches = {}
+        auxes = []
+        for pos, kind in enumerate(pattern):
+            c = None if p_cache is None else p_cache[f"pos{pos}"]
+            x, nc, aux = _apply_position(
+                p_params[f"pos{pos}"], cfg, kind, x, positions, c,
+                attn_impl, constrain)
+            new_caches[f"pos{pos}"] = nc if nc is not None else c
+            auxes.append(aux)
+        aux = jax.tree.map(lambda *a: jnp.stack(a).mean(), *auxes)
+        return x, (new_caches, aux)
+
+    body = period_body
+    if remat == "full":
+        body = jax.checkpoint(period_body,
+                              prevent_cse=False)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            period_body, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    if cache is None:
+        xs = (params, None)
+        # scan requires every xs leaf to have the period leading axis; params
+        # do, and `None` cache is threaded statically.
+        x, (_, aux) = jax.lax.scan(
+            lambda c, pp: body(c, (pp, None)), x, params)
+    else:
+        x, (new_cache, aux) = jax.lax.scan(body, x, (params, cache))
+        return x, new_cache, jax.tree.map(jnp.mean, aux)
+    return x, None, jax.tree.map(jnp.mean, aux)

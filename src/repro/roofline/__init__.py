@@ -1,0 +1,7 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from .analysis import (HW, CollectiveStats, analyze_compiled,
+                       parse_collectives, roofline_terms)
+
+__all__ = ["HW", "CollectiveStats", "analyze_compiled", "parse_collectives",
+           "roofline_terms"]

@@ -1,0 +1,137 @@
+"""Per-op byte/flop attribution for a compiled HLO module — the
+"profiler" of the dry-run methodology (no hardware, so the lowered IR is
+the profile).  Groups the loop-aware cost rollup by (op, shape) so the
+§Perf loop can see exactly which tensors dominate a roofline term.
+"""
+
+from __future__ import annotations
+
+import collections
+import re
+from typing import Counter, Dict, List, Tuple
+
+from . import hlo_analyzer as H
+
+__all__ = ["attribute_bytes", "attribute_flops", "top_table"]
+
+
+def _walk(text: str):
+    """Yields (comp, op, shape_str, bytes, flops) per instruction plus the
+    computation multiplier map."""
+    comp_ops: Dict[str, List[Tuple[str, float, float, str]]] = \
+        collections.defaultdict(list)
+    calls: Dict[str, List[Tuple[str, float]]] = collections.defaultdict(list)
+    entry = None
+    cur = None
+    shapes: Dict[str, str] = {}
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and "->" in line and line.endswith("{"):
+            m = H._COMP_HEADER.match(line.strip())
+            if m:
+                cur = m.group(1)
+                shapes = {}
+                comp_ops.setdefault(cur, [])
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur
+            continue
+        if cur is None:
+            continue
+        m = H._INSTR.match(line)
+        if not m:
+            continue
+        name, shape_str, op = m.groups()
+        shapes[name] = shape_str
+        out_b, out_dims = H._shape_info(shape_str)
+        opn, opb = [], 0
+        paren = line[line.index("(", line.index(op)) + 1:]
+        for om in re.finditer(r"%([\w\.\-]+)", paren.split(")")[0]):
+            opn.append(om.group(1))
+            s = shapes.get(om.group(1))
+            if s:
+                opb += H._shape_info(s)[0]
+        if op in H._ZERO_BYTE_OPS or op in ("while", "conditional", "call",
+                                            "fusion"):
+            b = 0.0
+        elif op in H._SLICE_OPS:
+            b = 2.0 * out_b
+        elif op in H._UPDATE_OPS:
+            upd = shapes.get(opn[1]) if len(opn) > 1 else None
+            b = 2.0 * (H._shape_info(upd)[0] if upd else out_b)
+        else:
+            b = float(out_b + opb)
+        fl = 0.0
+        if op == "dot":
+            cm = H._CONTRACT.search(line)
+            contracted = 1
+            if cm and opn and opn[0] in shapes:
+                lhs = H._shape_info(shapes[opn[0]])[1]
+                for d in cm.group(1).split(","):
+                    if d and int(d) < len(lhs):
+                        contracted *= lhs[int(d)]
+            n_out = 1
+            for d in out_dims:
+                n_out *= d
+            fl = 2.0 * n_out * contracted
+        comp_ops[cur].append((op, b, fl, shape_str[:48]))
+        if op == "while":
+            t = H._TRIP.search(line)
+            tr = float(int(t.group(1)) if t else 1)
+            c = H._CALLEE.search(line)
+            if c:
+                calls[cur].append((c.group(1), tr))
+        else:
+            c = H._CALLEE.search(line)
+            if c:
+                calls[cur].append((c.group(1), 1.0))
+
+    mult = {k: 0.0 for k in comp_ops}
+    if entry:
+        mult[entry] = 1.0
+        for _ in range(64):
+            new = {k: 0.0 for k in comp_ops}
+            new[entry] = 1.0
+            for n, cs in calls.items():
+                m0 = mult.get(n, 0.0)
+                if not m0:
+                    continue
+                for cal, cm in cs:
+                    if cal in new:
+                        new[cal] += m0 * cm
+            if all(abs(new[k] - mult[k]) < 1e-9 for k in comp_ops):
+                break
+            mult = new
+    return comp_ops, mult
+
+
+def attribute_bytes(text: str) -> Counter:
+    comp_ops, mult = _walk(text)
+    agg: Counter = collections.Counter()
+    for comp, ops in comp_ops.items():
+        m0 = mult.get(comp, 0.0)
+        for op, b, fl, sh in ops:
+            agg[(op, sh)] += b * m0
+    return agg
+
+
+def attribute_flops(text: str) -> Counter:
+    comp_ops, mult = _walk(text)
+    agg: Counter = collections.Counter()
+    for comp, ops in comp_ops.items():
+        m0 = mult.get(comp, 0.0)
+        for op, b, fl, sh in ops:
+            if fl:
+                agg[(op, sh)] += fl * m0
+    return agg
+
+
+def top_table(agg: Counter, n: int = 15, unit: float = 1e12,
+              label: str = "TB") -> str:
+    total = sum(agg.values())
+    lines = [f"total = {total / unit:.2f} {label}"]
+    for (op, sh), v in agg.most_common(n):
+        lines.append(f"  {v / unit:8.2f} {label} {100 * v / total:5.1f}%  "
+                     f"{op:22s} {sh}")
+    return "\n".join(lines)

@@ -1,0 +1,9 @@
+"""Fleet runtime: fault tolerance, straggler mitigation, elastic scaling."""
+
+from .elastic import build_mesh, choose_mesh_shape
+from .fault_tolerance import FailureInjector, Supervisor, SupervisorConfig
+from .straggler import StragglerConfig, StragglerDetector, rebalance_shares
+
+__all__ = ["FailureInjector", "Supervisor", "SupervisorConfig",
+           "StragglerConfig", "StragglerDetector", "rebalance_shares",
+           "build_mesh", "choose_mesh_shape"]

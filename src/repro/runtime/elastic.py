@@ -1,0 +1,54 @@
+"""Elastic re-meshing: resume the same global state on a different device
+count.
+
+Because (a) checkpoints are topology-independent (host numpy + manifest)
+and (b) every sharding is derived from the mesh by ``make_plan``, scaling
+down (node loss) or up (capacity arrives) is: build new mesh -> rebuild
+plan/specs -> ``restore_checkpoint`` with the new NamedShardings -> rebuild
+the jitted step.  Nothing about the model or optimizer state changes; only
+the ``data`` axis extent (and therefore per-device batch) moves.
+
+``choose_mesh_shape`` picks the largest usable (data, model) grid for a
+surviving device count, keeping the model axis intact first (TP size is a
+property of the model's memory footprint, DP is the elastic axis).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["choose_mesh_shape", "build_mesh"]
+
+
+def choose_mesh_shape(num_devices: int, model_axis: int,
+                      pod_axis: Optional[int] = None) -> Tuple[int, ...]:
+    """Largest (pod?, data, model) grid with <= num_devices devices.
+
+    Keeps ``model_axis`` fixed (shrinking TP changes per-device memory);
+    drops to the largest data extent that fits, then the pod axis.
+    """
+    if model_axis > num_devices:
+        raise ValueError(
+            f"cannot keep model axis {model_axis} with only "
+            f"{num_devices} devices")
+    if pod_axis:
+        for pods in range(pod_axis, 0, -1):
+            data = num_devices // (pods * model_axis)
+            if data >= 1:
+                return (pods, data, model_axis)
+    data = num_devices // model_axis
+    return (data, model_axis)
+
+
+def build_mesh(shape: Sequence[int],
+               devices: Optional[Sequence] = None) -> Mesh:
+    names = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    devs = np.array(devices if devices is not None else jax.devices())
+    need = int(np.prod(shape))
+    if devs.size < need:
+        raise ValueError(f"need {need} devices, have {devs.size}")
+    return Mesh(devs[:need].reshape(shape), names)

@@ -1,0 +1,5 @@
+"""Serving substrate: prefill/decode steps with sequence-sharded caches."""
+
+from .serve_step import make_decode_step, make_prefill_step, sample_token
+
+__all__ = ["make_prefill_step", "make_decode_step", "sample_token"]

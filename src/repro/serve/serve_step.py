@@ -1,0 +1,75 @@
+"""Serving substrate: batched prefill and decode step factories.
+
+``prefill_step`` consumes a (B, S) request batch, returns last-position
+logits + a filled KV/state cache.  ``decode_step`` advances every sequence
+one token (greedy or temperature sampling).  Both are pure functions ready
+for ``jax.jit`` with shardings from the plan:
+
+* KV caches are sequence-sharded over the ``model`` axis
+  (``plan.cache_specs``) — decode attention then computes *partial* softmax
+  statistics per shard which XLA's SPMD partitioner combines with one small
+  all-reduce (flash-decode); the 500k-token cache never gathers.
+* MoE decode uses exact capacity (no drops), matching teacher forcing.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import forward, init_cache
+
+__all__ = ["make_prefill_step", "make_decode_step", "sample_token"]
+
+
+def sample_token(logits: jnp.ndarray, key, temperature: float = 0.0):
+    """logits (..., V) -> token ids (...,).  temperature 0 = greedy."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature, axis=-1
+    ).astype(jnp.int32)
+
+
+def make_prefill_step(cfg: ArchConfig, *, max_len: int,
+                      attn_impl: str = "xla",
+                      constrain: Callable = lambda t, k: t):
+    def prefill_step(params, batch: Dict):
+        B = batch["tokens"].shape[0]
+        cache = init_cache(cfg, B, max_len=max_len)
+        logits, cache, _ = forward(
+            params, cfg, batch, cache=cache, mode="prefill",
+            attn_impl=attn_impl, constrain=constrain, logits_slice="last")
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, *, temperature: float = 0.0,
+                     constrain: Callable = lambda t, k: t,
+                     activation_stationary: bool = True):
+    if activation_stationary:
+        base = constrain
+
+        def constrain(t, kind, _base=base):  # noqa: F811
+            return _base(t, "hidden_decode" if kind == "hidden" else kind)
+
+    def decode_step(params, cache, tokens, positions, key):
+        """tokens (B,1) (or (B,C,1)); returns (next_tokens, logits, cache)."""
+        batch = {"tokens": tokens, "positions": positions}
+        logits, cache, _ = forward(
+            params, cfg, batch, cache=cache, mode="decode",
+            constrain=constrain)
+        last = logits[:, :, -1, :] if cfg.codebooks else logits[:, -1, :]
+        nxt = sample_token(last, key, temperature)
+        if cfg.codebooks:
+            nxt = nxt[..., None]          # (B, C, 1)
+        else:
+            nxt = nxt[..., None]          # (B, 1)
+        return nxt, logits, cache
+
+    return decode_step

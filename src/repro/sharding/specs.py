@@ -1,0 +1,261 @@
+"""Sharding plan: parameter / batch / cache PartitionSpecs + activation
+constraints for FSDP + TP (+ EP when expert count divides an axis, + SP
+options).
+
+Axes convention (launch/mesh.py):
+* single pod:  ``(data, model)`` = (16, 16)
+* multi pod:   ``(pod, data, model)`` = (2, 16, 16) — ``pod`` joins the FSDP
+  /batch axes (hierarchical DP); the same plan code covers both.
+
+Parameters are sharded 2-D (FSDP over ``data``(+``pod``) on the reduction
+dim, TP over ``model`` on heads/ff/experts) so 314B-398B models fit 256
+chips including optimizer state.  Stack params carry a leading
+``num_periods`` axis (scan over periods) that is never sharded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+__all__ = ["ShardingPlan", "make_plan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    mesh: Mesh
+    fsdp: Tuple[str, ...]         # ('data',) or ('pod', 'data')
+    tp: str                       # 'model'
+    # options (hillclimb knobs)
+    seq_shard_activations: bool = False   # SP: shard S of the residual stream
+    shard_kv_seq: bool = True             # serving: KV cache S over tp
+
+    # ---- divisibility fitting --------------------------------------------
+    def _axes_size(self, axes) -> int:
+        out = 1
+        for a in (axes if isinstance(axes, tuple) else (axes,)):
+            out *= self.mesh.shape[a]
+        return out
+
+    def fit(self, spec: P, shape: Tuple[int, ...]) -> P:
+        """Drop mesh axes from dims they don't divide (e.g. 5 KV heads on a
+        16-way model axis fall back to replication; batch 1 on a 32-way DP
+        axis keeps only the divisible sub-axes).  Tuples shed their
+        outermost axis first ('pod' before 'data')."""
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        out = []
+        for dim, entry in zip(shape, entries):
+            if entry is None:
+                out.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            while axes and dim % self._axes_size(axes) != 0:
+                axes = axes[1:]
+            out.append(axes if len(axes) > 1 else
+                       (axes[0] if axes else None))
+        return P(*out)
+
+    def _fit_tree(self, spec_tree, leaf_tree):
+        return jax.tree.map(
+            lambda s, l: self.fit(s, tuple(l.shape)), spec_tree, leaf_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    # ---- sizes -----------------------------------------------------------
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        return self.fsdp
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp]
+
+    @property
+    def dp_size(self) -> int:
+        out = 1
+        for a in self.fsdp:
+            out *= self.mesh.shape[a]
+        return out
+
+    # ---- parameter specs ---------------------------------------------------
+    def param_specs(self, cfg: ArchConfig, params_tree) -> Any:
+        f, t = self.fsdp, self.tp
+        ep_ok = cfg.num_experts and cfg.num_experts % self.tp_size == 0
+
+        def rule(path: str, ndim: int) -> P:
+            def pad(spec: P) -> P:
+                # stack params carry the leading periods axis
+                if "stack/" in path and len(spec) < ndim:
+                    return P(*((None,) + tuple(spec)))
+                return spec
+
+            name = path.rsplit("/", 1)[-1]
+            # --- embeddings / head
+            if name == "embed":
+                return P(t, f) if ndim == 2 else P(None, t, f)
+            if name == "head":
+                return P(f, t) if ndim == 2 else P(None, f, t)
+            # --- 1-d (norm scales, biases on vectors)
+            base_ndim = ndim - (1 if "stack/" in path else 0)
+            if base_ndim <= 1:
+                return pad(P(None))
+            # --- attention
+            if name in ("wq", "wk", "wv"):
+                return pad(P(f, t, None))
+            if name == "wo" and "attn" in path:
+                return pad(P(t, None, f))
+            if name in ("bq", "bk", "bv"):
+                return pad(P(t, None))
+            if name in ("wdq", "wdkv"):
+                return pad(P(f, None))
+            if name in ("wuq", "wuk", "wuv"):
+                return pad(P(None, t, None))
+            # --- moe
+            if name == "router":
+                return pad(P(f, None))
+            if "moe" in path and name in ("wg", "wu"):
+                return pad(P(t, f, None) if ep_ok else P(None, f, t))
+            if "moe" in path and name == "wd":
+                return pad(P(t, None, f) if ep_ok else P(None, t, f))
+            # --- dense mlp
+            if name in ("wg", "wu"):
+                return pad(P(f, t))
+            if name == "wd":
+                return pad(P(t, f))
+            # --- mamba
+            if name == "in_proj":
+                return pad(P(f, t))
+            if name == "conv_w":
+                return pad(P(None, t))
+            if name == "x_proj":
+                return pad(P(t, None))
+            if name == "dt_proj_w":
+                return pad(P(None, t))
+            if name == "a_log":
+                return pad(P(t, None))
+            if name == "out_proj":
+                return pad(P(t, f))
+            # --- rwkv
+            if name in ("wr", "wk", "wv", "wg", "cm_wk", "cm_wr"):
+                return pad(P(f, t))
+            if name in ("wo", "cm_wv"):
+                return pad(P(t, f))
+            if name == "maa_w1":
+                return pad(P(f, None))
+            if name == "maa_w2":
+                return pad(P(None, None, f))
+            if name == "decay_w1":
+                return pad(P(f, None))
+            if name == "decay_w2":
+                return pad(P(None, f))
+            if name == "bonus":
+                return pad(P(t, None))
+            if name == "maa_rkvwg":
+                return pad(P(None, None))
+            # fallback: replicate
+            return pad(P(*([None] * ndim)))
+
+        def walk(path, leaf):
+            keys = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path)
+            return self.fit(rule(keys, leaf.ndim), tuple(leaf.shape))
+
+        return jax.tree_util.tree_map_with_path(walk, params_tree)
+
+    # ---- batch specs -------------------------------------------------------
+    def batch_specs(self, cfg: ArchConfig, batch_tree) -> Any:
+        f = self.fsdp
+
+        def spec(path, leaf):
+            name = str(getattr(path[-1], "key", path[-1]))
+            if name in ("tokens", "labels"):
+                s = P(f, None, None) if leaf.ndim == 3 else P(f, None)
+            elif name == "positions":
+                s = P(None, f, None) if leaf.ndim == 3 else P(f, None)
+            elif name == "frontend_embeds":
+                s = P(f, None, None)
+            elif name == "embed_mask":
+                s = P(f, None)
+            else:
+                s = P(*([None] * leaf.ndim))
+            return self.fit(s, tuple(leaf.shape))
+
+        return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+    # ---- cache specs -------------------------------------------------------
+    def cache_specs(self, cfg: ArchConfig, cache_tree) -> Any:
+        f, t = self.fsdp, self.tp
+        seq = t if self.shard_kv_seq else None
+
+        def spec(path, leaf):
+            name = str(getattr(path[-1], "key", path[-1]))
+            nd = leaf.ndim   # all carry leading periods axis
+            if name in ("k", "v"):           # (P,B,S,Hk,hd)
+                s = P(None, f, seq, None, None)
+            elif name == "ckv":              # (P,B,S,rank)
+                s = P(None, f, seq, None)
+            elif name == "k_rope":           # (P,B,S,1,dr)
+                s = P(None, f, seq, None, None)
+            elif name == "len":
+                s = P(None, f)
+            elif name == "conv":             # (P,B,dconv-1,din)
+                s = P(None, f, None, t)
+            elif name == "ssm":              # (P,B,din,n)
+                s = P(None, f, t, None)
+            elif name == "state":            # (P,B,H,hs,hs)
+                s = P(None, f, t, None, None)
+            elif name in ("tm_shift", "cm_shift"):   # (P,B,D)
+                s = P(None, f, None)
+            else:
+                s = P(*([None] * nd))
+            return self.fit(s, tuple(leaf.shape))
+
+        return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+    # ---- activation constraints ---------------------------------------------
+    def constrain(self, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+        f, t = self.fsdp, self.tp
+        seq = t if self.seq_shard_activations else None
+        table = {
+            "hidden": P(f, seq, None),
+            "heads": P(f, None, t, None),
+            "heads_v": P(f, None, t, None),
+            "logits": P(f, None, t),
+            # expert activations: E over model when divisible; D over the
+            # FSDP axes so expert-weight contractions reduce activations
+            # (psum of (E,C,·)) instead of all-gathering the weights
+            "expert_in": P(t, None, f) if self._ep_ok_cached(x) else
+                         P(None, None, t),
+            "mamba_inner": P(f, None, t),
+            "moe_chunks": P(None, f, None),   # (n_chunks, Tc, D)
+            "moe_tokens": P(f, None),         # (T, D)
+            # decode (single-token) residual stream: shard D over the FSDP
+            # axes so weight contractions reduce tiny activations instead
+            # of all-gathering weight shards every step
+            "hidden_decode": P(None, None, f),
+        }
+        spec = table.get(kind)
+        if spec is None or len(spec) != x.ndim:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.fit(spec, tuple(x.shape))))
+
+    def _ep_ok_cached(self, x) -> bool:
+        return x.shape[0] % self.tp_size == 0
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def make_plan(mesh: Mesh, **opts) -> ShardingPlan:
+    names = mesh.axis_names
+    if "pod" in names:
+        fsdp: Tuple[str, ...] = ("pod", "data")
+    else:
+        fsdp = ("data",)
+    return ShardingPlan(mesh=mesh, fsdp=fsdp, tp="model", **opts)

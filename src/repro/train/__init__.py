@@ -1,0 +1,8 @@
+"""Training substrate: AdamW + schedules, microbatched train step,
+gradient compression with error feedback."""
+
+from .optimizer import AdamWConfig, adamw_init, adamw_update, make_schedule
+from .train_step import TrainState, init_train_state, make_train_step
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "make_schedule",
+           "TrainState", "init_train_state", "make_train_step"]

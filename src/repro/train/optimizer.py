@@ -1,0 +1,116 @@
+"""AdamW + LR schedules (cosine, WSD) — self-contained (no optax).
+
+Optimizer state is a pytree congruent with params (first/second moments in
+f32), so the sharding plan's param specs apply verbatim to the state: the
+optimizer shards exactly like FSDP params, which is what makes 314B-scale
+training state fit (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "make_schedule",
+           "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"      # cosine | wsd | constant
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1       # WSD: fraction of steps in final decay
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    count: jnp.ndarray
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(tree)))
+
+
+def make_schedule(cfg: AdamWConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    w, total = cfg.warmup_steps, cfg.total_steps
+
+    def cosine(step):
+        frac = jnp.clip((step - w) / max(total - w, 1), 0.0, 1.0)
+        return 0.5 * (1 + jnp.cos(jnp.pi * frac))
+
+    def wsd(step):
+        # warmup -> stable plateau -> short decay tail (MiniCPM)
+        decay_steps = max(int(total * cfg.decay_frac), 1)
+        start = total - decay_steps
+        frac = jnp.clip((step - start) / decay_steps, 0.0, 1.0)
+        return jnp.where(step < start, 1.0, 1.0 - frac * (1.0 - 0.1))
+
+    def constant(step):
+        return jnp.ones_like(step, jnp.float32)
+
+    shape_fn = {"cosine": cosine, "wsd": wsd, "constant": constant}[cfg.schedule]
+
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.clip(step / max(w, 1), 0.0, 1.0)
+        return cfg.lr * warm * shape_fn(step)
+
+    return schedule
+
+
+def adamw_update(
+    cfg: AdamWConfig, grads, state: AdamWState, params,
+) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+    """One AdamW step with global-norm clipping.  Returns
+    (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    count = state.count + 1
+    lr = make_schedule(cfg)(count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh, vh = m / b1c, v / b2c
+        step = mh / (jnp.sqrt(vh) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    new = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([n[0] for n in new])
+    new_m = treedef.unflatten([n[1] for n in new])
+    new_v = treedef.unflatten([n[2] for n in new])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(new_m, new_v, count), metrics

@@ -1,0 +1,111 @@
+"""Train step factory: microbatched gradient accumulation, remat policy,
+mixed precision, optional gradient compression — jit/pjit-ready.
+
+The returned ``train_step(params, opt_state, batch)`` is a pure function;
+launchers wrap it in ``jax.jit`` with in/out shardings from the plan.  Grad
+accumulation runs as a ``lax.scan`` over microbatches (activation memory =
+one microbatch), with f32 accumulators sharded like the params.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import loss_fn
+
+from .compression import compress_grads, ef_init
+from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+__all__ = ["TrainState", "make_train_step", "init_train_state"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    ef: Optional[Any]            # error-feedback residual (compression)
+    step: jnp.ndarray
+
+
+def init_train_state(params, opt_cfg: AdamWConfig,
+                     compression: bool = False) -> TrainState:
+    return TrainState(
+        params=params,
+        opt=adamw_init(params),
+        ef=ef_init(params) if compression else None,
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def _split_microbatches(batch: Dict, k: int) -> Dict:
+    """(B, ...) -> (k, B/k, ...) on batch-leading leaves; positions with a
+    leading plane dim (3, B, S) are handled specially."""
+
+    def split(path, x):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name == "positions" and x.ndim == 3 and x.shape[0] == 3:
+            return jnp.moveaxis(
+                x.reshape(3, k, x.shape[1] // k, *x.shape[2:]), 1, 0)
+        return x.reshape(k, x.shape[0] // k, *x.shape[1:])
+
+    return jax.tree_util.tree_map_with_path(split, batch)
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    microbatches: int = 1,
+    remat: str = "full",
+    attn_impl: str = "xla",
+    constrain: Callable = lambda t, k: t,
+    compression: bool = False,
+    aux_loss_weight: float = 0.01,
+):
+    """Returns ``train_step(state, batch) -> (state, metrics)``."""
+
+    def loss(params, mb):
+        return loss_fn(params, cfg, mb, attn_impl=attn_impl,
+                       constrain=constrain, remat=remat,
+                       aux_loss_weight=aux_loss_weight)
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict):
+        params = state.params
+
+        if microbatches == 1:
+            (l, metrics), grads = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            mbs = _split_microbatches(batch, microbatches)
+
+            def acc_body(carry, mb):
+                gsum, lsum = carry
+                (l, m), g = grad_fn(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (gsum, lsum), ms = jax.lax.scan(
+                acc_body, (g0, jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            l = lsum / microbatches
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+
+        ef = state.ef
+        if compression:
+            grads, ef = compress_grads(grads, ef)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, grads, state.opt, params)
+        metrics = {**metrics, **opt_metrics, "loss": l}
+        return TrainState(new_params, new_opt, ef, state.step + 1), metrics
+
+    return train_step

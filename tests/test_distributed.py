@@ -1,0 +1,95 @@
+"""Multi-device SNP exploration tests.
+
+The main pytest process keeps the default single CPU device (the dry-run is
+the only place 512 placeholder devices are allowed); these tests spawn
+subprocesses with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(ndev: int, body: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(body)],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+
+
+@pytest.mark.parametrize("ndev", [2, 8])
+def test_distributed_matches_single_device(ndev):
+    proc = _run(ndev, """
+        import jax
+        from repro.core import paper_pi, compile_system, explore
+        from repro.core.distributed import explore_distributed
+        from repro.core.generators import random_system
+
+        assert len(jax.devices()) == %d
+
+        comp = compile_system(paper_pi(True))
+        rd = explore_distributed(comp, max_steps=12, frontier_cap=32,
+                                 visited_cap=256, max_branches=16)
+        rs = explore(comp, max_steps=12, frontier_cap=256,
+                     visited_cap=2048, max_branches=16)
+        assert not (rd.branch_overflow or rd.frontier_overflow
+                    or rd.visited_overflow)
+        assert {tuple(r) for r in rd.configs} == {tuple(r) for r in rs.configs}
+
+        comp = compile_system(random_system(9, 2, 0.3, seed=1))
+        ndev = len(jax.devices())
+        rd = explore_distributed(comp, max_steps=8,
+                                 frontier_cap=4096 // ndev,
+                                 visited_cap=32768 // ndev, max_branches=64)
+        rs = explore(comp, max_steps=8, frontier_cap=4096,
+                     visited_cap=32768, max_branches=64)
+        assert not (rd.frontier_overflow or rs.frontier_overflow)
+        assert {tuple(r) for r in rd.configs} == {tuple(r) for r in rs.configs}
+        print("OK", rd.num_discovered)
+    """ % ndev)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK" in proc.stdout
+
+
+def test_distributed_overflow_is_flagged_and_sound():
+    proc = _run(4, """
+        from repro.core import compile_system, explore
+        from repro.core.distributed import explore_distributed
+        from repro.core.generators import random_system
+
+        comp = compile_system(random_system(9, 2, 0.3, seed=1))
+        # tiny per-device frontier forces frontier overflow
+        rd = explore_distributed(comp, max_steps=6, frontier_cap=8,
+                                 visited_cap=512, max_branches=64)
+        assert rd.frontier_overflow
+        assert not rd.exhausted
+        # soundness: everything discovered is truly reachable
+        rs = explore(comp, max_steps=10, frontier_cap=8192,
+                     visited_cap=65536, max_branches=64)
+        truth = {tuple(r) for r in rs.configs}
+        assert {tuple(r) for r in rd.configs} <= truth
+        print("OK")
+    """)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+
+
+def test_distributed_drains_finite_tree():
+    proc = _run(4, """
+        from repro.core import compile_system
+        from repro.core.distributed import explore_distributed
+        from repro.core.generators import random_system
+        comp = compile_system(random_system(9, 2, 0.3, seed=9))
+        rd = explore_distributed(comp, max_steps=32, frontier_cap=64,
+                                 visited_cap=512, max_branches=64)
+        assert rd.exhausted and rd.num_discovered == 6
+        print("OK")
+    """)
+    assert proc.returncode == 0, proc.stderr[-3000:]

@@ -1,0 +1,85 @@
+"""Dry-run integration tests (subprocess: 512 placeholder devices).
+
+The full 40-cell × 2-mesh sweep runs via ``python -m repro.launch.dryrun``
+(results in EXPERIMENTS.md); here we gate on representative cells per step
+kind + the production-mesh constructor + the SNP exploration cell, so CI
+catches sharding regressions quickly.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(args, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)   # dryrun.py sets its own
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        env=env, capture_output=True, text=True, timeout=timeout,
+        cwd=REPO)
+
+
+def test_production_mesh_shapes():
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent("""
+            import os
+            os.environ["XLA_FLAGS"] = \
+                "--xla_force_host_platform_device_count=512"
+            from repro.launch.mesh import make_production_mesh
+            m1 = make_production_mesh()
+            assert m1.devices.shape == (16, 16)
+            assert m1.axis_names == ("data", "model")
+            m2 = make_production_mesh(multi_pod=True)
+            assert m2.devices.shape == (2, 16, 16)
+            assert m2.axis_names == ("pod", "data", "model")
+            print("OK")
+        """)],
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("smollm-360m", "train_4k"),        # train lowering
+    ("minicpm3-4b", "decode_32k"),      # MLA decode w/ latent cache
+    ("rwkv6-7b", "long_500k"),          # attention-free long-context decode
+])
+def test_single_cell_both_meshes(arch, shape, tmp_path):
+    proc = _run_dryrun(["--arch", arch, "--shape", shape, "--mesh", "both",
+                        "--out", str(tmp_path)])
+    assert proc.returncode == 0, (proc.stdout[-2000:], proc.stderr[-2000:])
+    for mesh in ("16x16", "2x16x16"):
+        rec = json.load(open(tmp_path / f"{arch}__{shape}__{mesh}.json"))
+        assert rec["compute_s"] > 0
+        assert rec["bound"] in ("compute", "memory", "collective")
+        # multi-pod proves the pod axis shards: 512 chips
+    assert json.load(
+        open(tmp_path / f"{arch}__{shape}__2x16x16.json"))["chips"] == 512
+
+
+def test_long500k_skipped_for_full_attention(tmp_path):
+    proc = _run_dryrun(["--arch", "smollm-360m", "--shape", "long_500k",
+                        "--mesh", "single", "--out", str(tmp_path)])
+    assert proc.returncode == 0
+    assert "SKIP" in proc.stdout
+
+
+def test_snp_exploration_cell(tmp_path):
+    proc = _run_dryrun(["--arch", "smollm-360m", "--shape", "train_4k",
+                        "--mesh", "single", "--snp", "--out",
+                        str(tmp_path)])
+    assert proc.returncode == 0, (proc.stdout[-2000:], proc.stderr[-2000:])
+    snp = [f for f in os.listdir(tmp_path) if f.startswith("snp-")]
+    assert snp, os.listdir(tmp_path)
+    rec = json.load(open(tmp_path / snp[0]))
+    # the exchange must actually use all_to_all on the wire
+    assert rec["collective_counts"]["all-to-all"] >= 1

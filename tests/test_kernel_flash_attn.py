@@ -1,0 +1,95 @@
+"""Shape/dtype sweep for the flash-attention Pallas kernel vs. the
+materialized-softmax oracle (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn import attention_ref, flash_attention
+
+RNG = np.random.default_rng(42)
+
+
+def _mk(shape, dtype):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+def _check(B, Hq, Hkv, Sq, Skv, D, *, causal, dtype, bq=32, bk=32,
+           kv_len=None):
+    q = _mk((B, Hq, Sq, D), dtype)
+    k = _mk((B, Hkv, Skv, D), dtype)
+    v = _mk((B, Hkv, Skv, D), dtype)
+    kl = None if kv_len is None else jnp.asarray(kv_len, jnp.int32)
+    got = flash_attention(q, k, v, kl, causal=causal, block_q=bq, block_k=bk)
+    want = attention_ref(q, k, v, kl, causal=causal)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_basic(dtype, causal):
+    _check(2, 4, 2, 64, 64, 32, causal=causal, dtype=dtype)
+
+
+@pytest.mark.parametrize("Hq,Hkv", [(8, 8), (8, 2), (8, 1), (15, 5)])
+def test_gqa_ratios(Hq, Hkv):
+    _check(1, Hq, Hkv, 64, 64, 32, causal=True, dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("Sq,Skv,bq,bk", [
+    (64, 64, 64, 64),      # single tile
+    (96, 96, 32, 32),      # multiple tiles
+    (40, 72, 32, 32),      # padding on both axes
+    (128, 256, 32, 64),    # rectangular (cross-attention style)
+    (1, 128, 1, 64),       # decode-like single query
+])
+def test_shape_sweep(Sq, Skv, bq, bk):
+    _check(2, 4, 2, Sq, Skv, 64, causal=(Sq == Skv), dtype=jnp.float32,
+           bq=bq, bk=bk)
+
+
+@pytest.mark.parametrize("D", [32, 64, 128])
+def test_head_dims(D):
+    _check(1, 4, 2, 64, 64, D, causal=True, dtype=jnp.float32)
+
+
+def test_kv_length_masking():
+    _check(3, 4, 2, 32, 128, 32, causal=False, dtype=jnp.float32,
+           kv_len=[0, 57, 128])
+
+
+def test_kv_len_zero_rows_are_zero():
+    q = _mk((1, 2, 8, 16), jnp.float32)
+    k = _mk((1, 2, 32, 16), jnp.float32)
+    v = _mk((1, 2, 32, 16), jnp.float32)
+    out = flash_attention(q, k, v, jnp.asarray([0], jnp.int32),
+                          causal=False, block_q=8, block_k=16)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_gradients_match_reference():
+    q = _mk((1, 2, 32, 16), jnp.float32)
+    k = _mk((1, 1, 32, 16), jnp.float32)
+    v = _mk((1, 1, 32, 16), jnp.float32)
+
+    def loss_kernel(q, k, v):
+        return (flash_attention(q, k, v, block_q=16, block_k=16) ** 2).sum()
+
+    def loss_ref(q, k, v):
+        return (attention_ref(q, k, v) ** 2).sum()
+
+    g1 = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_matches_upcast_float64_style_reference():
+    """Numerical sanity at longer sequence (accumulation error bound)."""
+    _check(1, 2, 1, 512, 512, 64, causal=True, dtype=jnp.float32,
+           bq=128, bk=128)

@@ -1,0 +1,89 @@
+"""Shape/dtype sweep for the fused SNP transition Pallas kernel vs. the
+pure-jnp oracle (interpret mode; integer workload => exact equality)."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compile_system, paper_pi
+from repro.core.generators import nd_chain, random_system, ring, scaled_pi
+from repro.kernels.snp_step import snp_step, snp_step_ref
+
+
+def _assert_match(cfgs, comp, T, **blocks):
+    o1, v1, e1, f1 = snp_step(cfgs, comp, max_branches=T, **blocks)
+    o2, v2, e2, f2 = snp_step_ref(cfgs, comp, T)
+    v1, v2 = np.asarray(v1), np.asarray(v2)
+    np.testing.assert_array_equal(v1, v2)
+    np.testing.assert_array_equal(
+        np.where(v1[..., None], np.asarray(o1), 0),
+        np.where(v2[..., None], np.asarray(o2), 0))
+    np.testing.assert_array_equal(
+        np.where(v1, np.asarray(e1), 0), np.where(v2, np.asarray(e2), 0))
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+
+
+SYSTEMS = {
+    "paper-pi": (paper_pi(True), 16),
+    "paper-pi-exact": (paper_pi(False), 16),
+    "ring-9": (ring(9), 8),
+    "nd-chain-6": (nd_chain(6), 64),
+    "random-17": (random_system(17, 3, 0.3, seed=3), 32),
+    "random-33": (random_system(33, 2, 0.15, seed=7), 32),
+    "pi-x5": (scaled_pi(5), 64),
+}
+
+
+@pytest.mark.parametrize("name", sorted(SYSTEMS))
+def test_matches_oracle(name):
+    system, T = SYSTEMS[name]
+    comp = compile_system(system)
+    rng = np.random.default_rng(hash(name) % 2**31)
+    cfgs = jnp.asarray(
+        rng.integers(0, 5, size=(6, comp.num_neurons)), jnp.int32)
+    _assert_match(cfgs, comp, T, block_b=4, block_t=8, block_n=8)
+
+
+@pytest.mark.parametrize("block_b,block_t,block_n", [
+    (1, 4, 4), (2, 16, 16), (8, 32, 128), (4, 64, 8),
+])
+def test_block_shape_sweep(block_b, block_t, block_n):
+    comp = compile_system(random_system(13, 3, 0.3, seed=11))
+    rng = np.random.default_rng(0)
+    cfgs = jnp.asarray(rng.integers(0, 4, size=(7, 13)), jnp.int32)
+    _assert_match(cfgs, comp, 32,
+                  block_b=block_b, block_t=block_t, block_n=block_n)
+
+
+def test_non_divisible_everything():
+    """B, T, n, m all prime-ish: exercises every padding path."""
+    comp = compile_system(random_system(11, 3, 0.4, seed=5))  # n = 33 rules
+    rng = np.random.default_rng(2)
+    cfgs = jnp.asarray(rng.integers(0, 4, size=(5, 11)), jnp.int32)
+    _assert_match(cfgs, comp, 17, block_b=4, block_t=16, block_n=16)
+
+
+def test_branch_overflow_agreement():
+    comp = compile_system(nd_chain(8))  # psi = 2^8 = 256 > T
+    cfgs = jnp.ones((2, 8), jnp.int32)
+    _assert_match(cfgs, comp, 32, block_b=2, block_t=16, block_n=16)
+
+
+def test_large_spike_counts_exact():
+    """f32 matmul must stay exact up to 2^24-scale spike counts."""
+    comp = compile_system(paper_pi(True))
+    cfgs = jnp.asarray([[2 ** 22, 1, 2 ** 20]], jnp.int32)
+    _assert_match(cfgs, comp, 8, block_b=1, block_t=8, block_n=8)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_property_random_frontiers(seed):
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(2, 12))
+    system = random_system(m, int(rng.integers(1, 4)),
+                           float(rng.uniform(0.1, 0.6)), seed=seed % 1000)
+    comp = compile_system(system)
+    cfgs = jnp.asarray(rng.integers(0, 5, size=(4, m)), jnp.int32)
+    _assert_match(cfgs, comp, 32, block_b=2, block_t=8, block_n=8)
