@@ -2,12 +2,19 @@
 
 The paper's §5 evaluates simulation speed on one 3-neuron system; this
 harness sweeps system size (the paper's future-work axis: "very large
-systems with equally large matrices") and frontier width, comparing the
-pure-jnp reference semantics against the fused Pallas kernel (interpret
-mode on CPU — kernel numbers are correctness+structure proxies, not TPU
-wall-times; TPU projections come from the dry-run roofline).
+systems with equally large matrices") and frontier width.  Every measured
+path goes through the step-backend registry (`repro.core.backend`), so the
+pure-jnp reference and the fused Pallas kernel (interpret mode on CPU —
+kernel numbers are correctness+structure proxies, not TPU wall-times; TPU
+projections come from the dry-run roofline) are benchmarked via one API,
+and any future backend (sparse/CSR, ...) is picked up by name only.
+
+Run as a module to emit ``BENCH_snp.json`` (step + tree rows):
+``PYTHONPATH=src python -m benchmarks.bench_snp``.
 """
 
+import functools
+import json
 import time
 
 import jax
@@ -15,8 +22,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compile_system
+from repro.core.backend import PallasBackend, get_backend
 from repro.core.generators import random_system, scaled_pi
-from repro.kernels.snp_step import snp_step, snp_step_ref
+
+# Every registered backend is swept; pallas gets CPU-friendly blocks (the
+# ops wrapper clamps them to the problem size anyway).
+BACKENDS = (
+    get_backend("ref"),
+    PallasBackend(block_b=8, block_t=16, block_n=128),
+)
 
 
 def _time(fn, *args, reps=5, **kw):
@@ -27,6 +41,12 @@ def _time(fn, *args, reps=5, **kw):
         out = fn(*args, **kw)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+@functools.partial(jax.jit, static_argnames=("max_branches", "backend"))
+def _expand(cfgs, comp, max_branches, backend):
+    out = backend.expand(cfgs, comp, max_branches)
+    return out.configs, out.valid, out.emissions, out.overflow
 
 
 def rows():
@@ -40,15 +60,35 @@ def rows():
         comp = compile_system(system)
         cfgs = jnp.asarray(
             rng.integers(0, 4, size=(B, comp.num_neurons)), jnp.int32)
-        us_ref = _time(snp_step_ref, cfgs, comp, T)
-        expansions = B * T
-        out.append((f"snp_step_ref/m{comp.num_neurons}_n{comp.num_rules}"
-                    f"_B{B}_T{T}", us_ref,
-                    f"{expansions / us_ref:.1f}exp/us"))
-        if comp.num_neurons <= 512:
-            us_k = _time(snp_step, cfgs, comp, max_branches=T,
-                         block_b=8, block_t=16, block_n=128)
-            out.append((f"snp_step_pallas/m{comp.num_neurons}"
-                        f"_n{comp.num_rules}_B{B}_T{T}", us_k,
-                        f"interp={us_k / us_ref:.1f}x_ref"))
+        us_ref = None  # first backend in the sweep is the baseline
+        for backend in BACKENDS:
+            if backend.name == "pallas" and comp.num_neurons > 512:
+                continue  # interpret-mode emulation too slow at this size
+            us = _time(_expand, cfgs, comp, T, backend)
+            expansions = B * T
+            derived = (f"{expansions / us:.1f}exp/us" if us_ref is None
+                       else f"{us / us_ref:.1f}x_ref")
+            if us_ref is None:
+                us_ref = us
+            out.append((f"snp_step/{backend.name}/m{comp.num_neurons}"
+                        f"_n{comp.num_rules}_B{B}_T{T}", us, derived))
     return out
+
+
+def main(path: str = "BENCH_snp.json") -> None:
+    """Emit step- and tree-level rows for every backend as one JSON file."""
+    from . import bench_tree
+
+    payload = {
+        "rows": [
+            {"name": name, "us_per_call": us, "derived": derived}
+            for name, us, derived in rows() + bench_tree.rows()
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path} ({len(payload['rows'])} rows)")
+
+
+if __name__ == "__main__":
+    main()

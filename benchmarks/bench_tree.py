@@ -2,41 +2,46 @@
 
 Measures end-to-end BFS throughput (configurations discovered per second)
 on the paper's Π, scaled copies of it, and random systems — the direct
-analog of the paper's simulation runs, where the entire host/device loop is
-the measured quantity.
+analog of the paper's simulation runs, where the entire loop is the
+measured quantity.  The loop itself is the engine's on-device
+``lax.while_loop``; the transition comes from the step-backend registry,
+so ``ref`` and ``pallas`` exercise the identical BFS machinery.
 """
 
 import time
 
-import numpy as np
-
 from repro.core import compile_system, explore, paper_pi
 from repro.core.generators import nd_chain, random_system, scaled_pi
+
+# (name, system, explore kwargs, backends to sweep).  Pallas interpret mode
+# is swept only on the paper's own Π to keep CPU bench runs short.
+CASES = [
+    ("pi", lambda: compile_system(paper_pi(True)),
+     dict(max_steps=16, frontier_cap=128, visited_cap=2048,
+          max_branches=16), ("ref", "pallas")),
+    ("pi_x4", lambda: compile_system(scaled_pi(4)),
+     dict(max_steps=6, frontier_cap=512, visited_cap=16384,
+          max_branches=64), ("ref",)),
+    ("random_64n", lambda: compile_system(random_system(64, 2, 0.08, seed=5)),
+     dict(max_steps=8, frontier_cap=512, visited_cap=16384,
+          max_branches=64), ("ref",)),
+    ("nd_chain_6", lambda: compile_system(nd_chain(6)),
+     dict(max_steps=8, frontier_cap=512, visited_cap=8192,
+          max_branches=64), ("ref",)),
+]
 
 
 def rows():
     out = []
-    cases = [
-        ("pi", compile_system(paper_pi(True)),
-         dict(max_steps=16, frontier_cap=128, visited_cap=2048,
-              max_branches=16)),
-        ("pi_x4", compile_system(scaled_pi(4)),
-         dict(max_steps=6, frontier_cap=512, visited_cap=16384,
-              max_branches=64)),
-        ("random_64n", compile_system(random_system(64, 2, 0.08, seed=5)),
-         dict(max_steps=8, frontier_cap=512, visited_cap=16384,
-              max_branches=64)),
-        ("nd_chain_6", compile_system(nd_chain(6)),
-         dict(max_steps=8, frontier_cap=512, visited_cap=8192,
-              max_branches=64)),
-    ]
-    for name, comp, kw in cases:
-        explore(comp, **kw)  # warm compile
-        t0 = time.perf_counter()
-        res = explore(comp, **kw)
-        dt = time.perf_counter() - t0
-        us = dt * 1e6
-        out.append((f"explore/{name}", us / max(res.steps, 1),
-                    f"{res.num_discovered}cfg@{res.steps}lvl,"
-                    f"{res.num_discovered / dt:.0f}cfg/s"))
+    for name, make, kw, backends in CASES:
+        comp = make()
+        for backend in backends:
+            explore(comp, backend=backend, **kw)  # warm compile
+            t0 = time.perf_counter()
+            res = explore(comp, backend=backend, **kw)
+            dt = time.perf_counter() - t0
+            us = dt * 1e6
+            out.append((f"explore/{backend}/{name}", us / max(res.steps, 1),
+                        f"{res.num_discovered}cfg@{res.steps}lvl,"
+                        f"{res.num_discovered / dt:.0f}cfg/s"))
     return out

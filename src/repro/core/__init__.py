@@ -7,12 +7,20 @@ Public API:
 * :func:`repro.core.matrix.compile_system` — matrix encoding (paper §2.2).
 * :mod:`repro.core.semantics` — batched applicability / spiking-vector
   enumeration / transition (paper eq. 2, Alg. 2).
-* :func:`repro.core.engine.explore` — computation-tree BFS (paper Alg. 1).
+* :mod:`repro.core.backend` — pluggable step backends (``"ref"`` jnp
+  oracle / ``"pallas"`` fused kernel) behind one registry; every consumer
+  takes ``backend=``.
+* :func:`repro.core.engine.explore` — computation-tree BFS (paper Alg. 1)
+  as one on-device ``lax.while_loop``.
+* :func:`repro.core.engine.run_traces` — batched trajectory serving.
 * :mod:`repro.core.distributed` — multi-chip exploration (shard_map).
 * :mod:`repro.core.generators` — synthetic system families for scaling.
 """
 
-from .engine import ExploreResult, emission_gaps, explore, run_trace, successor_set
+from .backend import (PallasBackend, RefBackend, StepBackend,
+                      available_backends, get_backend, register_backend)
+from .engine import (ExploreResult, emission_gaps, explore, run_trace,
+                     run_traces, successor_set)
 from .matrix import CompiledSNP, compile_system
 from .semantics import applicability, branch_info, next_configs, spiking_vectors
 from .system import Rule, SNPSystem, paper_pi
@@ -21,5 +29,8 @@ __all__ = [
     "SNPSystem", "Rule", "paper_pi",
     "CompiledSNP", "compile_system",
     "applicability", "branch_info", "next_configs", "spiking_vectors",
-    "explore", "ExploreResult", "successor_set", "emission_gaps", "run_trace",
+    "StepBackend", "RefBackend", "PallasBackend",
+    "register_backend", "get_backend", "available_backends",
+    "explore", "ExploreResult", "successor_set", "emission_gaps",
+    "run_trace", "run_traces",
 ]

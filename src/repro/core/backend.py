@@ -1,0 +1,184 @@
+"""Pluggable step backends: one transition API behind every consumer.
+
+The paper's contribution is that the SNP transition is a single
+device-friendly primitive ``C' = C + S·M_Π`` (eq. 2).  Historically each
+consumer (``engine.explore``, ``core.distributed``, ``run_trace``) called
+the pure-jnp reference semantics directly, so alternative implementations
+of the same primitive — the fused Pallas kernel today, a sparse/CSR
+backend next (Hernández-Tello et al. 2024) — had no way into any real
+workload.  This module is that seam:
+
+* :class:`StepBackend` — the protocol: ``expand(configs, comp,
+  max_branches) -> StepOut`` plus capability/padding metadata.  ``expand``
+  must be pure and traceable (consumers call it inside ``jit``,
+  ``lax.while_loop``, ``lax.scan`` and ``shard_map``), and all registered
+  backends must agree bit-for-bit on the *valid* entries of
+  :class:`~repro.core.semantics.StepOut` for spike counts < 2^24.
+* :class:`RefBackend` (``"ref"``) — the pure-jnp oracle
+  (:func:`~repro.core.semantics.next_configs`).
+* :class:`PallasBackend` (``"pallas"``) — the fused TPU kernel
+  (:func:`repro.kernels.snp_step.ops.snp_step`); interpret mode on CPU,
+  ``interpret=False`` on real TPUs.  Does not materialize the spiking
+  vectors, so ``StepOut.spiking`` is ``None``.
+* a name registry — :func:`register_backend` / :func:`get_backend` /
+  :func:`available_backends` — so new backends land as plugins without
+  touching the consumers.
+
+Backends are frozen dataclasses: hashable, so they ride through
+``jax.jit(..., static_argnames=("backend",))`` unchanged.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Protocol, Tuple, Union, runtime_checkable
+
+import jax.numpy as jnp
+
+from .matrix import CompiledSNP
+from .semantics import StepOut, next_configs
+
+__all__ = [
+    "StepBackend",
+    "RefBackend",
+    "PallasBackend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+]
+
+
+@runtime_checkable
+class StepBackend(Protocol):
+    """One synchronous SNP transition step, pluggable per workload.
+
+    Implementations must be hashable (frozen dataclasses) so consumers can
+    pass them as static jit arguments, and ``expand`` must be traceable.
+
+    Capability / padding metadata:
+
+    * ``name``              — registry name (``backend="<name>"`` end-to-end).
+    * ``supports_nd_batch`` — ``expand`` accepts arbitrary leading batch
+      dims ``(..., m)``; backends that flatten internally still set True.
+    * ``pad_multiple``      — batch sizes are padded internally to a
+      multiple of this (1 = no padding); callers sizing frontiers/batches
+      can round to it to avoid wasted lanes.
+    * ``materializes_spiking`` — whether ``StepOut.spiking`` is populated
+      (``None`` otherwise).
+    """
+
+    name: str
+    supports_nd_batch: bool
+    pad_multiple: int
+    materializes_spiking: bool
+
+    def expand(self, configs: jnp.ndarray, comp: CompiledSNP,
+               max_branches: int) -> StepOut:
+        """All successors of ``configs`` (..., m): a :class:`StepOut` with
+        ``configs`` (..., T, m), ``valid``/``emissions`` (..., T) and
+        ``overflow`` (...,)."""
+        ...
+
+
+@dataclass(frozen=True)
+class RefBackend:
+    """Pure-jnp reference semantics (the repo's oracle)."""
+
+    name: str = "ref"
+    supports_nd_batch: bool = True
+    pad_multiple: int = 1
+    materializes_spiking: bool = True
+
+    def expand(self, configs: jnp.ndarray, comp: CompiledSNP,
+               max_branches: int) -> StepOut:
+        return next_configs(configs, comp, max_branches)
+
+
+@dataclass(frozen=True)
+class PallasBackend:
+    """Fused Pallas transition kernel (decode + S·M + C in VMEM).
+
+    ``interpret=True`` (default) emulates the kernel with jittable lax ops
+    so the same code path runs on CPU; flip to False on a real TPU.  Block
+    shapes are clamped to the problem size by the ops wrapper, so the
+    defaults are safe for small systems too.
+    """
+
+    name: str = "pallas"
+    interpret: bool = True
+    block_b: int = 8
+    block_t: int = 32
+    block_n: int = 128
+    supports_nd_batch: bool = True   # flattens leading dims internally
+    materializes_spiking: bool = False
+
+    @property
+    def pad_multiple(self) -> int:
+        return self.block_b
+
+    def expand(self, configs: jnp.ndarray, comp: CompiledSNP,
+               max_branches: int) -> StepOut:
+        # Lazy import: keeps repro.core importable if the Pallas toolchain
+        # is absent, and avoids a core <-> kernels import cycle at load.
+        from repro.kernels.snp_step.ops import snp_step
+
+        m = configs.shape[-1]
+        batch = configs.shape[:-1]
+        flat = configs.reshape(-1, m)
+        out, valid, emis, overflow = snp_step(
+            flat, comp, max_branches=max_branches,
+            block_b=self.block_b, block_t=self.block_t,
+            block_n=self.block_n, interpret=self.interpret,
+        )
+        T = max_branches
+        return StepOut(
+            configs=out.reshape(*batch, T, m),
+            valid=valid.reshape(*batch, T),
+            emissions=emis.reshape(*batch, T),
+            overflow=overflow.reshape(batch),
+            spiking=None,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, StepBackend] = {}
+
+BackendLike = Union[str, StepBackend]
+
+
+def register_backend(backend: StepBackend, *, overwrite: bool = False) -> None:
+    """Register ``backend`` under ``backend.name``.
+
+    Later backends (sparse/CSR, multi-kernel, TPU-native) plug in here; the
+    consumers (`explore`, `run_trace(s)`, `explore_distributed`,
+    `snp_service`, benchmarks) pick them up by name with zero changes.
+    """
+    if not overwrite and backend.name in _REGISTRY:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    _REGISTRY[backend.name] = backend
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(name: BackendLike) -> StepBackend:
+    """Resolve a backend by registry name (or pass an instance through)."""
+    if isinstance(name, str):
+        try:
+            return _REGISTRY[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown step backend {name!r}; "
+                f"available: {available_backends()}"
+            ) from None
+    if isinstance(name, StepBackend):
+        return name
+    raise TypeError(f"expected backend name or StepBackend, got {type(name)}")
+
+
+register_backend(RefBackend())
+register_backend(PallasBackend())

@@ -9,8 +9,9 @@ set must shard.  The scheme (DESIGN.md §2):
   doubles as load balancing: each BFS level spreads across chips in
   expectation regardless of tree shape.
 * **expand locally, exchange by owner** — each device expands its frontier
-  shard (the same fused math as the single-chip engine; Pallas kernel on
-  TPU), bins successors by owner, and exchanges them with one tiled
+  shard through the same pluggable :class:`~repro.core.backend.StepBackend`
+  as the single-chip engine (``backend="ref"`` or ``"pallas"``; the fused
+  kernel on TPU), bins successors by owner, and exchanges them with one tiled
   ``all_to_all``.  Received candidates are deduped against the *local*
   visited shard only — no global synchronization beyond the one collective.
 * **static capacities** — per-destination send slots, frontier and visited
@@ -35,27 +36,32 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:                                  # jax >= 0.6 exposes it at top level
+    from jax import shard_map
+except ImportError:                   # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map
+
+from .backend import BackendLike, get_backend
 from .engine import ExploreResult
 from .hashing import SENTINEL, config_hash
 from .matrix import CompiledSNP, compile_system
-from .semantics import next_configs
 from .system import SNPSystem
 
 __all__ = ["explore_distributed"]
 
 
 def _device_step(comp, frontier, frontier_valid, visited_hi, visited_lo,
-                 archive, archive_n, flags, *, axis, max_branches, send_cap):
-    """Per-device body (runs under shard_map over ``axis``)."""
-    ndev = jax.lax.axis_size(axis)
-    me = jax.lax.axis_index(axis)
+                 archive, archive_n, flags, *, axis, ndev, max_branches,
+                 send_cap, backend):
+    """Per-device body (runs under shard_map over ``axis``).  ``ndev`` is
+    the static mesh size (it sizes bincounts and send buffers)."""
     F, m = frontier.shape
     T = max_branches
     K = F * T
     C = send_cap
 
     # --- expand local frontier -------------------------------------------
-    out = next_configs(frontier, comp, T)
+    out = backend.expand(frontier, comp, T)
     cand = out.configs.reshape(K, m)
     valid = (out.valid & frontier_valid[:, None]).reshape(K)
     branch_ovf = jnp.any(out.overflow & frontier_valid)
@@ -149,11 +155,19 @@ def explore_distributed(
     max_branches: int = 32,
     send_cap: Optional[int] = None,   # per (src,dst) pair
     init: Optional[Sequence[int]] = None,
+    backend: BackendLike = "ref",
 ) -> ExploreResult:
     """Hash-partitioned multi-device BFS.  Semantics identical to
     :func:`repro.core.engine.explore`; scaling is linear in devices for
-    frontier/visited capacity and expansion FLOPs."""
+    frontier/visited capacity and expansion FLOPs.
+
+    ``backend`` selects the per-shard transition implementation (same
+    registry as the single-chip engine — :mod:`repro.core.backend`); each
+    device runs ``backend.expand`` on its frontier shard inside the
+    shard_map body, so e.g. the fused Pallas kernel serves the expansion on
+    every chip with no changes here."""
     comp = system if isinstance(system, CompiledSNP) else compile_system(system)
+    be = get_backend(backend)
     if mesh is None:
         devs = np.array(jax.devices())
         mesh = Mesh(devs, ("x",))
@@ -200,14 +214,17 @@ def explore_distributed(
     )
 
     step_fn = jax.jit(
-        jax.shard_map(
-            functools.partial(_device_step, axis=axis, max_branches=T,
-                              send_cap=C),
+        shard_map(
+            functools.partial(_device_step, axis=axis, ndev=ndev,
+                              max_branches=T, send_cap=C, backend=be),
             mesh=mesh,
             in_specs=(P(), P(axis), P(axis), P(axis), P(axis), P(axis),
                       P(axis), P(axis)),
             out_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis),
                        P(axis), P()),
+            # pallas_call has no replication rule; every output spec is
+            # explicit anyway, so the check adds nothing here.
+            check_rep=False,
         ),
         static_argnames=(),
     )

@@ -1,11 +1,19 @@
 """Breadth-first exploration of an SNP system's computation tree.
 
 Implements Algorithm 1 of the paper as a single-device, fully on-device
-loop: each jitted step expands the whole frontier, hashes every successor,
-dedups against the visited set (sort-based, exactly-once emission), and
-compacts the new configurations into the next frontier.  The host only sees
-a handful of scalars per step — the paper's host/device ping-pong (strings
-to Python, vectors back) is gone (DESIGN.md §2).
+loop: the whole BFS is one jitted ``lax.while_loop`` whose body expands the
+frontier, hashes every successor, dedups against the visited set
+(sort-based, exactly-once emission), and compacts the new configurations
+into the next frontier.  The host syncs exactly once — to read the final
+archive — so the paper's host/device ping-pong (strings to Python, vectors
+back) is gone entirely, including the per-level ``frontier_n`` poll the
+first version of this engine still paid (DESIGN.md §2).
+
+The transition itself is pluggable: every entry point takes a ``backend=``
+(name or :class:`~repro.core.backend.StepBackend`) selecting how successors
+are expanded — ``"ref"`` (pure-jnp oracle) or ``"pallas"`` (fused kernel);
+see :mod:`repro.core.backend`.  Backends agree bit-for-bit on valid
+entries, so archives and traces are backend-independent.
 
 Static-shape discipline: the frontier capacity ``F``, branch fan-out cap
 ``T`` and visited/archive capacity ``V`` are compile-time constants; all
@@ -26,19 +34,19 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Callable, List, NamedTuple, Optional, Sequence, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .backend import BackendLike, get_backend
 from .hashing import SENTINEL, config_hash
 from .matrix import CompiledSNP, compile_system
-from .semantics import next_configs
 from .system import SNPSystem
 
 __all__ = ["ExploreState", "ExploreResult", "explore", "successor_set",
-           "emission_gaps", "run_trace"]
+           "emission_gaps", "run_trace", "run_traces"]
 
 
 class ExploreState(NamedTuple):
@@ -89,15 +97,16 @@ def _init_state(comp: CompiledSNP, frontier_cap: int, visited_cap: int,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("max_branches",))
 def _explore_step(state: ExploreState, comp: CompiledSNP,
-                  max_branches: int) -> ExploreState:
+                  max_branches: int, backend) -> ExploreState:
+    """One BFS level: expand, hash, dedup, compact.  Traceable; the body of
+    the on-device while_loop in :func:`_explore_loop`."""
     F, m = state.frontier.shape
     V = state.visited_hi.shape[0]
     T = max_branches
 
     live = jnp.arange(F) < state.frontier_n
-    out = next_configs(state.frontier, comp, T)
+    out = backend.expand(state.frontier, comp, T)
 
     cand = out.configs.reshape(F * T, m)
     cand_valid = (out.valid & live[:, None]).reshape(F * T)
@@ -171,6 +180,22 @@ def _explore_step(state: ExploreState, comp: CompiledSNP,
     )
 
 
+@functools.partial(
+    jax.jit, static_argnames=("max_steps", "max_branches", "backend"))
+def _explore_loop(state: ExploreState, comp: CompiledSNP, max_steps: int,
+                  max_branches: int, backend) -> ExploreState:
+    """Entire BFS as one on-device ``lax.while_loop``: runs until the
+    frontier drains or ``max_steps`` levels, with zero host round-trips."""
+
+    def cond(s: ExploreState):
+        return (s.step < max_steps) & (s.frontier_n > 0)
+
+    def body(s: ExploreState):
+        return _explore_step(s, comp, max_branches, backend)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
 def explore(
     system: SNPSystem | CompiledSNP,
     *,
@@ -179,32 +204,34 @@ def explore(
     visited_cap: int = 4096,
     max_branches: int = 64,
     init: Optional[Sequence[int]] = None,
+    backend: BackendLike = "ref",
 ) -> ExploreResult:
     """BFS-explore the computation tree (paper Algorithm 1).
 
     Stops when the frontier drains (both paper stopping criteria are
     subsumed: dead configs — including the zero vector — produce no
     successors, and already-seen configs are never re-inserted) or after
-    ``max_steps`` levels.
+    ``max_steps`` levels.  The loop is a single device-side
+    ``lax.while_loop``; the host sees only the final state.
+
+    ``backend`` selects the transition implementation (``"ref"``,
+    ``"pallas"``, or any registered :class:`~repro.core.backend.StepBackend`
+    instance); the archive is identical across backends.
     """
     comp = system if isinstance(system, CompiledSNP) else compile_system(system)
+    be = get_backend(backend)
     init_arr = None if init is None else jnp.asarray(init, jnp.int32)
     state = _init_state(comp, frontier_cap, visited_cap, init_arr)
-    steps = 0
-    drained = False
-    for _ in range(max_steps):
-        state = _explore_step(state, comp, max_branches)
-        steps += 1
-        if int(state.frontier_n) == 0:
-            drained = True
-            break
+    state = _explore_loop(state, comp, max_steps, max_branches, be)
+    # single host sync: everything below reads the final device state
     n = int(state.archive_n)
+    drained = int(state.frontier_n) == 0
     ovf = (bool(state.branch_overflow), bool(state.frontier_overflow),
            bool(state.visited_overflow))
     return ExploreResult(
         configs=np.asarray(state.archive[:n]),
         num_discovered=n,
-        steps=steps,
+        steps=int(state.step),
         exhausted=drained and not any(ovf),
         branch_overflow=ovf[0],
         frontier_overflow=ovf[1],
@@ -217,18 +244,20 @@ def explore(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("max_branches",))
-def _succ_one(config, comp, max_branches):
-    out = next_configs(config, comp, max_branches)
+@functools.partial(jax.jit, static_argnames=("max_branches", "backend"))
+def _succ_one(config, comp, max_branches, backend):
+    out = backend.expand(config, comp, max_branches)
     return out.configs, out.valid, out.emissions, out.overflow
 
 
 def successor_set(
-    comp: CompiledSNP, config: Sequence[int], max_branches: int = 64
+    comp: CompiledSNP, config: Sequence[int], max_branches: int = 64,
+    backend: BackendLike = "ref",
 ) -> List[Tuple[Tuple[int, ...], int]]:
     """Distinct (successor, emission) pairs of one configuration."""
     c = jnp.asarray(config, jnp.int32)
-    cfgs, valid, emis, ovf = _succ_one(c, comp, max_branches)
+    cfgs, valid, emis, ovf = _succ_one(c, comp, max_branches,
+                                       get_backend(backend))
     if bool(ovf):
         raise ValueError("branch overflow; raise max_branches")
     seen, out = set(), []
@@ -280,38 +309,90 @@ def emission_gaps(
     return gaps
 
 
-@functools.partial(jax.jit, static_argnames=("steps", "max_branches", "policy"))
-def _trace_scan(comp, c0, key, steps, max_branches, policy):
+# ---------------------------------------------------------------------------
+# Trace serving: single path and batched paths
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("steps", "max_branches", "policy", "backend"))
+def _traces_scan(comp, c0s, keys, steps, max_branches, policy, backend):
+    """B independent trajectories, one ``lax.scan`` over time.
+
+    ``c0s`` (B, m), ``keys`` (B, 2) — per-trace PRNG streams, split exactly
+    as the single-trace path splits its key, so trace b depends only on
+    ``keys[b]`` and batching never changes a trajectory.
+    """
+    B = c0s.shape[0]
+
     def body(carry, _):
-        cfg, key = carry
-        out = next_configs(cfg, comp, max_branches)
-        n_valid = jnp.sum(out.valid, dtype=jnp.int32)
+        cfgs, keys = carry
+        out = backend.expand(cfgs, comp, max_branches)     # (B, T, m)
+        n_valid = jnp.sum(out.valid, axis=-1, dtype=jnp.int32)  # (B,)
         if policy == "random":
-            key, sub = jax.random.split(key)
-            idx = jax.random.randint(sub, (), 0, jnp.maximum(n_valid, 1))
+            pair = jax.vmap(jax.random.split)(keys)        # (B, 2, 2)
+            keys, subs = pair[:, 0], pair[:, 1]
+            idx = jax.vmap(
+                lambda k, n: jax.random.randint(k, (), 0, jnp.maximum(n, 1))
+            )(subs, n_valid)
         else:
-            idx = jnp.asarray(0, jnp.int32)
+            idx = jnp.zeros((B,), jnp.int32)
         has = n_valid > 0
-        nxt = jnp.where(has, out.configs[idx], cfg)
-        emis = jnp.where(has, out.emissions[idx], 0)
-        return (nxt, key), (nxt, emis, has)
+        pick = jnp.take_along_axis(
+            out.configs, idx[:, None, None], axis=1)[:, 0]  # (B, m)
+        nxt = jnp.where(has[:, None], pick, cfgs)
+        emis = jnp.where(
+            has, jnp.take_along_axis(out.emissions, idx[:, None], axis=1)[:, 0],
+            0)
+        return (nxt, keys), (nxt, emis, has)
+
     (_, _), (cfgs, emis, alive) = jax.lax.scan(
-        body, (c0, key), None, length=steps)
-    return cfgs, emis, alive
+        body, (c0s, keys), None, length=steps)
+    # scan stacks time first: (steps, B, ...) -> (B, steps, ...)
+    return (jnp.swapaxes(cfgs, 0, 1), jnp.swapaxes(emis, 0, 1),
+            jnp.swapaxes(alive, 0, 1))
+
+
+def run_traces(
+    system: SNPSystem | CompiledSNP, *, steps: int,
+    seeds: Sequence[int] | np.ndarray | jnp.ndarray,
+    policy: str = "first", max_branches: int = 64,
+    backend: BackendLike = "ref",
+):
+    """Batched trajectory serving: B independent paths in one jitted scan.
+
+    Returns ``(configs (B, steps, m), emissions (B, steps),
+    alive (B, steps))`` with ``B = len(seeds)``.  Row b is bit-identical to
+    ``run_trace(..., seed=seeds[b])`` with the same policy/backend — the
+    batch dimension rides through the backend's ``expand`` (one transition
+    per step for the whole batch), which is the serving-path hot loop.
+    """
+    comp = system if isinstance(system, CompiledSNP) else compile_system(system)
+    if policy not in ("first", "random"):
+        raise ValueError(f"unknown policy {policy!r}")
+    be = get_backend(backend)
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    if seeds.ndim != 1:
+        raise ValueError(f"seeds must be 1-D, got shape {seeds.shape}")
+    keys = jax.vmap(jax.random.PRNGKey)(seeds)             # (B, 2)
+    c0s = jnp.broadcast_to(comp.init_config, (seeds.shape[0],) +
+                           comp.init_config.shape)
+    return _traces_scan(comp, c0s, keys, steps, max_branches, policy, be)
 
 
 def run_trace(
     system: SNPSystem | CompiledSNP, *, steps: int,
     policy: str = "first", seed: int = 0, max_branches: int = 64,
+    backend: BackendLike = "ref",
 ):
     """Single-path simulation (deterministic or uniformly random branch).
 
     Returns (configs (steps, m), emissions (steps,), alive (steps,)).
-    Useful as the 'serving' mode of the engine: one trajectory, spike train
-    out.
+    The 'serving' mode of the engine: one trajectory, spike train out.
+    Implemented as a B=1 :func:`run_traces` batch, so the single- and
+    batched-serving paths can never drift apart.
     """
-    comp = system if isinstance(system, CompiledSNP) else compile_system(system)
-    if policy not in ("first", "random"):
-        raise ValueError(f"unknown policy {policy!r}")
-    key = jax.random.PRNGKey(seed)
-    return _trace_scan(comp, comp.init_config, key, steps, max_branches, policy)
+    cfgs, emis, alive = run_traces(
+        system, steps=steps, seeds=[seed], policy=policy,
+        max_branches=max_branches, backend=backend)
+    return cfgs[0], emis[0], alive[0]

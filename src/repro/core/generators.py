@@ -9,8 +9,10 @@ width) we need parameterized families, all valid SNPSystems:
                         branching, worst-case enumeration stress.
 * ``random_system``   — Erdős–Rényi synapse graph with random rules;
                         branching statistically controlled.
-* ``counter``         — b-bit binary counter: long deterministic runs with
-                        a known exact trajectory (2^b distinct configs).
+* ``counter``         — b-bit ripple counter (2-neuron pacemaker + divider
+                        chain): long deterministic runs with a known exact
+                        trajectory (period-2^b limit cycle, ≥ 2^b distinct
+                        configs).
 * ``scaled_pi``       — k disjoint copies of the paper's Π fused into one
                         system: tree = product of k independent Π trees;
                         lets us grow the paper's own workload.
@@ -80,24 +82,35 @@ def random_system(
 
 
 def counter(bits: int) -> SNPSystem:
-    """A deterministic b-bit ripple counter.
+    """A deterministic b-bit ripple counter: period-doubling divider chain.
 
-    Neuron i holds bit i as {1,2} spikes (1=0, 2=1) plus carry neurons; built
-    from simple threshold rules, used for long deterministic trajectories.
-    Simplified: neuron i fires into i+1 every 2^i steps via spike recycling.
+    Self-synapses are forbidden, so the clock is a 2-neuron pacemaker
+    (neurons 0 and 1) bouncing a single spike and feeding divider stage 0
+    every step.  Divider stage ``i`` (neuron ``2 + i``) accumulates spikes
+    and fires exactly at 2 (``a^2/a^2 -> a``, exact mode), halving the rate:
+    stage ``i`` fires every ``2^(i+1)`` steps, and its held spike count is
+    bit ``i`` of a binary counter.  The trajectory is a limit cycle of
+    period ``2^bits`` (plus a short chain-fill transient), so a run visits
+    at least ``2^bits`` distinct configurations; the output neuron (last
+    stage) emits one spike to the environment every ``2^bits`` steps.
     """
-    # period-doubling chain: neuron i relays every second received spike.
-    rules = []
+    if bits < 1:
+        raise ValueError(f"bits must be >= 1, got {bits}")
+    rules = [
+        # pacemaker: each neuron relays the clock spike to its twin and
+        # into divider stage 0.
+        Rule(neuron=0, consume=1, produce=1, regex_base=1, covering=True),
+        Rule(neuron=1, consume=1, produce=1, regex_base=1, covering=True),
+    ]
     for i in range(bits):
-        # at 2 spikes: spike forward and keep going; at 1: hold (no rule)
-        rules.append(Rule(neuron=i, consume=2, produce=1, regex_base=2,
+        # divider stage: fire exactly when 2 spikes have accumulated.
+        rules.append(Rule(neuron=2 + i, consume=2, produce=1, regex_base=2,
                           covering=False))
-    syn = tuple((i, i + 1) for i in range(bits - 1))
-    init = (2,) + (0,) * (bits - 1)
-    # a pacemaker neuron 0 self-feeding is not allowed (no self-synapse);
-    # instead neuron 0 consumes its initial 2 spikes once -> single wave.
-    return SNPSystem(bits, init, tuple(rules), syn, output_neuron=bits - 1,
-                     name=f"counter-{bits}")
+    syn = [(0, 1), (1, 0), (0, 2), (1, 2)]
+    syn += [(2 + i, 3 + i) for i in range(bits - 1)]
+    init = (1, 0) + (0,) * bits
+    return SNPSystem(bits + 2, init, tuple(rules), tuple(syn),
+                     output_neuron=bits + 1, name=f"counter-{bits}")
 
 
 def scaled_pi(copies: int, covering: bool = True) -> SNPSystem:

@@ -1,6 +1,9 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
 * :mod:`repro.kernels.snp_step` — the paper's transition (decode + S·M + C).
+  Served to every workload (explore / run_traces / distributed / the SNP
+  trace service) as the ``"pallas"`` entry of the step-backend registry
+  (:mod:`repro.core.backend`).
 * :mod:`repro.kernels.flash_attn` — flash attention for LM prefill.
 
 Each kernel ships a ``kernel.py`` (pl.pallas_call + BlockSpec), an

@@ -1,4 +1,8 @@
-"""Fused SNP transition kernel (Pallas TPU) — decode + S·M + C in VMEM."""
+"""Fused SNP transition kernel (Pallas TPU) — decode + S·M + C in VMEM.
+
+Reaches production consumers through
+:class:`repro.core.backend.PallasBackend` (``backend="pallas"``); keep the
+raw entry points here for kernel tests and benchmarks."""
 
 from .kernel import snp_step_pallas
 from .ops import snp_step

@@ -159,7 +159,8 @@ def run_snp_cell(multi_pod: bool, *, neurons: int = 2048, rules: int = 4096,
     import functools
     from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-    from repro.core.distributed import _device_step
+    from repro.core.backend import get_backend
+    from repro.core.distributed import _device_step, shard_map
     from repro.core.generators import random_system
     from repro.core.matrix import compile_system
 
@@ -175,9 +176,10 @@ def run_snp_cell(multi_pod: bool, *, neurons: int = 2048, rules: int = 4096,
     C = max(16, (F * T) // ndev)
 
     step = jax.jit(
-        jax.shard_map(
-            functools.partial(_device_step, axis="x", max_branches=T,
-                              send_cap=C),
+        shard_map(
+            functools.partial(_device_step, axis="x", ndev=ndev,
+                              max_branches=T, send_cap=C,
+                              backend=get_backend("ref")),
             mesh=flat,
             in_specs=(P(), P("x"), P("x"), P("x"), P("x"), P("x"), P("x"),
                       P("x")),

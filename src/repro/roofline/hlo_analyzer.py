@@ -177,9 +177,10 @@ def analyze_hlo(text: str, *, default_group: int = 1,
         if op == "dot":
             cm = _CONTRACT.search(line)
             contracted = 1
-            first_opnd = re.search(r"\(%([\w\.\-]+)", line)
-            if cm and first_opnd and first_opnd.group(1) in shapes:
-                lhs_dims = _shape_info(shapes[first_opnd.group(1)])[1]
+            # lhs is the first parsed operand (newer XLA prints inline
+            # operand shapes, so "(%name" no longer appears in the text)
+            if cm and opnd_names and opnd_names[0] in shapes:
+                lhs_dims = _shape_info(shapes[opnd_names[0]])[1]
                 for d in cm.group(1).split(","):
                     if d and int(d) < len(lhs_dims):
                         contracted *= lhs_dims[int(d)]

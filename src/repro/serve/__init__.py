@@ -1,5 +1,14 @@
-"""Serving substrate: prefill/decode steps with sequence-sharded caches."""
+"""Serving substrate.
+
+* :mod:`repro.serve.serve_step` — LM prefill/decode steps with
+  sequence-sharded caches.
+* :mod:`repro.serve.snp_service` — batched SNP trace serving: heterogeneous
+  (system, steps, policy, seed) requests padded into fixed-size device
+  batches over :func:`repro.core.engine.run_traces`.
+"""
 
 from .serve_step import make_decode_step, make_prefill_step, sample_token
+from .snp_service import SNPTraceService, TraceRequest, TraceResult
 
-__all__ = ["make_prefill_step", "make_decode_step", "sample_token"]
+__all__ = ["make_prefill_step", "make_decode_step", "sample_token",
+           "SNPTraceService", "TraceRequest", "TraceResult"]

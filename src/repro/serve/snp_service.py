@@ -1,0 +1,177 @@
+"""Batched SNP trace serving: heterogeneous requests -> padded device batches.
+
+The engine's :func:`~repro.core.engine.run_traces` is the device-side hot
+loop (one ``lax.scan``, whole batch through one ``StepBackend.expand`` per
+step); this module is the host-side front end that makes it a service.
+Callers :meth:`~SNPTraceService.submit` trace requests that differ in
+system, step count, policy and seed; :meth:`~SNPTraceService.drain` groups
+compatible requests, pads every group to a **fixed** batch size and step
+count (so the jit cache stays small and device shapes never churn), runs
+one jitted call per padded batch, and slices each caller's trajectory back
+out.
+
+Batching rules:
+
+* requests with the same (compiled system, policy, max_branches) share a
+  batch — seeds and step counts are free per request (steps are padded to
+  the group's bucket and sliced on the way out);
+* groups larger than ``batch_size`` are chunked into full batches;
+* short groups are padded with dummy seeds whose results are discarded.
+
+Per-trace PRNG keys mean padding/batching never changes a trajectory: the
+result for a request is bit-identical to a solo
+:func:`~repro.core.engine.run_trace` with the same seed.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.backend import BackendLike, get_backend
+from repro.core.engine import run_traces
+from repro.core.matrix import CompiledSNP, compile_system
+from repro.core.system import SNPSystem
+
+__all__ = ["TraceRequest", "TraceResult", "SNPTraceService"]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@dataclass(frozen=True)
+class TraceRequest:
+    """One trajectory request: which system, how long, how to branch."""
+
+    system: SNPSystem | CompiledSNP
+    steps: int
+    policy: str = "first"       # "first" | "random"
+    seed: int = 0
+    max_branches: int = 64
+
+    def __post_init__(self) -> None:
+        if self.steps < 1:
+            raise ValueError(f"steps must be >= 1, got {self.steps}")
+        if self.policy not in ("first", "random"):
+            raise ValueError(f"unknown policy {self.policy!r}")
+
+
+@dataclass(frozen=True)
+class TraceResult:
+    """One served trajectory, unpadded to the request's ``steps``."""
+
+    configs: np.ndarray     # (steps, m) int32
+    emissions: np.ndarray   # (steps,) int32 — the output spike train
+    alive: np.ndarray       # (steps,) bool
+
+
+class SNPTraceService:
+    """Submit/drain batching front end over :func:`run_traces`.
+
+    ``batch_size`` is the fixed device batch: every flush runs exactly this
+    many traces (padded), so a service with ``batch_size=256`` serves a
+    256-request burst in **one** jitted call.  ``step_bucket`` quantizes
+    requested step counts upward so distinct ``steps`` values don't each
+    compile a fresh scan.
+    """
+
+    def __init__(self, *, batch_size: int = 256, step_bucket: int = 16,
+                 backend: BackendLike = "ref",
+                 max_steps: Optional[int] = None) -> None:
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        if step_bucket < 1:
+            raise ValueError("step_bucket must be >= 1")
+        self.batch_size = batch_size
+        self.step_bucket = step_bucket
+        self.max_steps = max_steps
+        self.backend = get_backend(backend)
+        self.num_device_calls = 0          # observability: jitted launches
+        self.num_traces_served = 0
+        self._tickets = itertools.count()
+        self._pending: Dict[int, TraceRequest] = {}
+        self._comp_of: Dict[int, CompiledSNP] = {}   # ticket -> compiled
+        # compile memoization, keyed by SNPSystem (structural equality);
+        # bounded so a long-lived service can't grow without limit
+        self._compile_cache: Dict[SNPSystem, CompiledSNP] = {}
+        self._compile_cache_cap = 64
+
+    # -- submission --------------------------------------------------------
+
+    def submit(self, request: TraceRequest) -> int:
+        """Queue a request; returns a ticket to look up in :meth:`drain`."""
+        if self.max_steps is not None and request.steps > self.max_steps:
+            raise ValueError(
+                f"steps {request.steps} exceeds service max_steps "
+                f"{self.max_steps}")
+        comp = request.system
+        if not isinstance(comp, CompiledSNP):
+            # SNPSystem is a frozen dataclass: equal systems (even distinct
+            # objects) share one compilation and one batch group.
+            if request.system not in self._compile_cache:
+                while len(self._compile_cache) >= self._compile_cache_cap:
+                    self._compile_cache.pop(next(iter(self._compile_cache)))
+                self._compile_cache[request.system] = \
+                    compile_system(request.system)
+            comp = self._compile_cache[request.system]
+        ticket = next(self._tickets)
+        self._pending[ticket] = request
+        self._comp_of[ticket] = comp
+        return ticket
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    # -- draining ----------------------------------------------------------
+
+    def _group_key(self, ticket: int) -> Tuple:
+        r = self._pending[ticket]
+        return (id(self._comp_of[ticket]), r.policy, r.max_branches)
+
+    def drain(self) -> Dict[int, TraceResult]:
+        """Serve every pending request; returns ``{ticket: TraceResult}``.
+
+        One jitted :func:`run_traces` call per (group, full-batch chunk).
+        """
+        results: Dict[int, TraceResult] = {}
+        by_group: Dict[Tuple, List[int]] = {}
+        for ticket in sorted(self._pending):
+            by_group.setdefault(self._group_key(ticket), []).append(ticket)
+
+        for (_, policy, max_branches), tickets in by_group.items():
+            comp = self._comp_of[tickets[0]]
+            for lo in range(0, len(tickets), self.batch_size):
+                chunk = tickets[lo:lo + self.batch_size]
+                results.update(self._flush(comp, policy, max_branches, chunk))
+
+        self._pending.clear()
+        self._comp_of.clear()
+        return results
+
+    def _flush(self, comp: CompiledSNP, policy: str, max_branches: int,
+               tickets: List[int]) -> Dict[int, TraceResult]:
+        reqs = [self._pending[t] for t in tickets]
+        # submit() enforces steps <= max_steps, so no clamp is needed here
+        steps = _round_up(max(r.steps for r in reqs), self.step_bucket)
+        seeds = np.zeros((self.batch_size,), np.uint32)   # dummy pad: seed 0
+        seeds[:len(reqs)] = [r.seed for r in reqs]
+
+        cfgs, emis, alive = run_traces(
+            comp, steps=steps, seeds=seeds, policy=policy,
+            max_branches=max_branches, backend=self.backend)
+        self.num_device_calls += 1
+        self.num_traces_served += len(reqs)
+
+        cfgs, emis, alive = (np.asarray(cfgs), np.asarray(emis),
+                             np.asarray(alive))
+        return {
+            t: TraceResult(configs=cfgs[i, :r.steps],
+                           emissions=emis[i, :r.steps],
+                           alive=alive[i, :r.steps])
+            for i, (t, r) in enumerate(zip(tickets, reqs))
+        }

@@ -10,7 +10,9 @@ import itertools
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.engine import explore, successor_set
 from repro.core.hashing import config_hash

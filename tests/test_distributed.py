@@ -81,6 +81,24 @@ def test_distributed_overflow_is_flagged_and_sound():
     assert proc.returncode == 0, proc.stderr[-3000:]
 
 
+def test_distributed_backend_pallas_matches_ref():
+    """The step backend plugs into the shard_map body: the fused Pallas
+    kernel must produce the same discovered set as the jnp reference."""
+    proc = _run(2, """
+        from repro.core import paper_pi, compile_system
+        from repro.core.distributed import explore_distributed
+        comp = compile_system(paper_pi(True))
+        kw = dict(max_steps=8, frontier_cap=32, visited_cap=256,
+                  max_branches=16)
+        rd = explore_distributed(comp, backend="ref", **kw)
+        rp = explore_distributed(comp, backend="pallas", **kw)
+        assert {tuple(r) for r in rd.configs} == {tuple(r) for r in rp.configs}
+        print("OK", rp.num_discovered)
+    """)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK" in proc.stdout
+
+
 def test_distributed_drains_finite_tree():
     proc = _run(4, """
         from repro.core import compile_system

@@ -1,0 +1,84 @@
+"""Synthetic system families: structural invariants and, for ``counter``,
+the exact trajectory the docstring promises (period-2^b limit cycle)."""
+
+import numpy as np
+import pytest
+
+from repro.core import compile_system, explore, run_trace
+from repro.core.generators import counter, nd_chain, ring, scaled_pi
+
+
+def test_ring_cycles_one_spike():
+    comp = compile_system(ring(5))
+    cfgs, _, alive = run_trace(comp, steps=10, policy="first")
+    cfgs = np.asarray(cfgs)
+    assert np.asarray(alive).all()
+    assert (cfgs.sum(axis=1) == 1).all()          # exactly one spike in flight
+    np.testing.assert_array_equal(cfgs[4], cfgs[9])  # period m
+
+
+def test_nd_chain_branching_width():
+    comp = compile_system(nd_chain(4))
+    # Psi = 2^4 = 16 at C0: capping branches below that must flag overflow,
+    # a sufficient cap must not (and then the small tree drains completely).
+    capped = explore(comp, max_steps=6, frontier_cap=256, visited_cap=2048,
+                     max_branches=8)
+    assert capped.branch_overflow
+    res = explore(comp, max_steps=6, frontier_cap=256, visited_cap=2048,
+                  max_branches=32)
+    assert not res.branch_overflow
+    assert res.exhausted
+    assert res.num_discovered > 1
+
+
+@pytest.mark.parametrize("bits", [1, 3, 4])
+def test_counter_is_period_doubling(bits):
+    """The b-bit ripple counter must visit >= 2^b distinct configurations,
+    settle into a period-2^b limit cycle, and emit to the environment
+    exactly every 2^b steps."""
+    sysm = counter(bits)
+    assert sysm.num_neurons == bits + 2   # 2-neuron pacemaker + b dividers
+    comp = compile_system(sysm)
+    P = 2 ** bits
+    steps = 3 * P + 2 * bits + 8
+    cfgs, emis, alive = run_trace(comp, steps=steps, policy="first")
+    cfgs, emis = np.asarray(cfgs), np.asarray(emis)
+    assert np.asarray(alive).all()        # deterministic, never dies
+
+    distinct = {tuple(row) for row in cfgs}
+    assert len(distinct) >= P             # the docstring's 2^b configs
+
+    # eventually periodic with period exactly 2^b
+    half = len(cfgs) // 2
+    np.testing.assert_array_equal(cfgs[half:-P], cfgs[half + P:])
+    if P > 1:                             # ... and no shorter period
+        assert not np.array_equal(cfgs[half], cfgs[half + P // 2])
+
+    # output spike train: one emission every 2^b steps
+    times = np.nonzero(emis)[0]
+    assert len(times) >= 2
+    assert set(np.diff(times).tolist()) == {P}
+
+
+def test_counter_rejects_zero_bits():
+    with pytest.raises(ValueError, match="bits"):
+        counter(0)
+
+
+def test_scaled_pi_is_disjoint_product():
+    base = compile_system(scaled_pi(1))
+    doubled = compile_system(scaled_pi(2))
+    assert doubled.num_neurons == 2 * base.num_neurons
+    assert doubled.num_rules == 2 * base.num_rules
+    r1 = explore(base, max_steps=3, frontier_cap=64, visited_cap=512,
+                 max_branches=16)
+    r2 = explore(doubled, max_steps=3, frontier_cap=256, visited_cap=2048,
+                 max_branches=64)
+    # copies step in lockstep, so every reachable product config projects to
+    # a reachable config of the factor on both halves (the converse needs
+    # the factors reachable at the *same* depth, so |r2| <= |r1|^2)
+    m0 = base.num_neurons
+    factor = {tuple(r) for r in r1.configs}
+    assert r1.num_discovered < r2.num_discovered <= r1.num_discovered ** 2
+    for row in r2.configs:
+        assert tuple(row[:m0]) in factor and tuple(row[m0:]) in factor

@@ -4,7 +4,9 @@ pure-jnp oracle (interpret mode; integer workload => exact equality)."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import compile_system, paper_pi
 from repro.core.generators import nd_chain, random_system, ring, scaled_pi

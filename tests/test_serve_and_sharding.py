@@ -98,7 +98,11 @@ def test_activation_stationary_decode_matches_default(tiny):
 
 def _fake_mesh(shape=(2, 2), names=("data", "model")):
     # abstract mesh: AbstractMesh supports .shape lookups for plan logic
-    return jax.sharding.AbstractMesh(shape, names)
+    try:
+        return jax.sharding.AbstractMesh(shape, names)
+    except TypeError:
+        # jax <= 0.4.x takes a single ((name, size), ...) shape tuple
+        return jax.sharding.AbstractMesh(tuple(zip(names, shape)))
 
 
 def test_fit_drops_non_divisible_axes():
