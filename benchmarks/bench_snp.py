@@ -4,15 +4,29 @@ The paper's §5 evaluates simulation speed on one 3-neuron system; this
 harness sweeps system size (the paper's future-work axis: "very large
 systems with equally large matrices") and frontier width.  Every measured
 path goes through the step-backend registry (`repro.core.backend`), so the
-pure-jnp reference and the fused Pallas kernel (interpret mode on CPU —
+pure-jnp reference, the fused Pallas kernel (interpret mode on CPU —
 kernel numbers are correctness+structure proxies, not TPU wall-times; TPU
-projections come from the dry-run roofline) are benchmarked via one API,
-and any future backend (sparse/CSR, ...) is picked up by name only.
+projections come from the dry-run roofline) and the sparse ELL backends
+are benchmarked via one API, and any future backend is picked up by name
+only.
+
+Two tiers:
+
+* the **standard sweep** (m <= 2048, Erdős–Rényi/scaled-Π systems) runs
+  the dense baselines and the sparse backends side by side;
+* the **large tier** (m in {2048, 8192, 32768}, bounded-degree
+  ring-lattice/torus/power-law topologies) is where the dense ``O(B·T·n·m)``
+  backends stop being runnable: ``m=8192`` already means a 0.5 GB dense
+  ``M_Π`` and ~0.5 TFLOP per expansion, so dense rows are not attempted
+  past the 2048 cross-over point and the sparse ``O(B·T·nnz)`` path sweeps
+  alone (EXPERIMENTS.md §Sparse).
 
 Run as a module to emit ``BENCH_snp.json`` (step + tree rows):
-``PYTHONPATH=src python -m benchmarks.bench_snp``.
+``PYTHONPATH=src python -m benchmarks.bench_snp`` (``--quick`` for the
+reduced CI smoke sweep).
 """
 
+import argparse
 import functools
 import json
 import time
@@ -21,16 +35,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compile_system
-from repro.core.backend import PallasBackend, get_backend
-from repro.core.generators import random_system, scaled_pi
+from repro.core.backend import PallasBackend, SparsePallasBackend, get_backend
+from repro.core.generators import (power_law, random_system, ring_lattice,
+                                   scaled_pi, torus)
 
-# Every registered backend is swept; pallas gets CPU-friendly blocks (the
-# ops wrapper clamps them to the problem size anyway).
+# Every registered backend family is swept; the kernel backends get
+# CPU-friendly blocks (the ops wrappers clamp them to the problem anyway).
 BACKENDS = (
     get_backend("ref"),
     PallasBackend(block_b=8, block_t=16, block_n=128),
+    get_backend("sparse"),
+    SparsePallasBackend(block_b=8, block_t=16),
 )
+
+# Interpret-mode kernel emulation is too slow to sweep at scale on CPU.
+_MAX_M = {"pallas": 512, "sparse_pallas": 128}
 
 
 def _time(fn, *args, reps=5, **kw):
@@ -49,7 +68,29 @@ def _expand(cfgs, comp, max_branches, backend):
     return out.configs, out.valid, out.emissions, out.overflow
 
 
-def rows():
+def _sweep(tag, system, B, T, backends, rng, reps):
+    """One (system, B, T) point across ``backends``; the first backend in
+    the list is the ``x_ref`` baseline for the rest."""
+    out = []
+    cfgs = None
+    us_ref = None
+    for backend in backends:
+        comp = backend.compile(system)
+        if cfgs is None:
+            cfgs = jnp.asarray(
+                rng.integers(0, 4, size=(B, comp.num_neurons)), jnp.int32)
+        us = _time(_expand, cfgs, comp, T, backend, reps=reps)
+        derived = (f"{B * T / us:.1f}exp/us" if us_ref is None
+                   else f"{us / us_ref:.2f}x_ref")
+        if us_ref is None:
+            us_ref = us
+        out.append((f"{tag}/{backend.name}/m{comp.num_neurons}"
+                    f"_n{comp.num_rules}_B{B}_T{T}", us, derived))
+    return out
+
+
+def rows(quick: bool = False):
+    reps = 2 if quick else 5
     out = []
     rng = np.random.default_rng(0)
     for m, rpn, B, T in [(3, 2, 64, 16), (30, 2, 64, 16),
@@ -57,32 +98,42 @@ def rows():
                          (2048, 2, 64, 32)]:
         system = (scaled_pi(m // 3) if m <= 30
                   else random_system(m, rpn, min(0.2, 8 / m), seed=1))
-        comp = compile_system(system)
-        cfgs = jnp.asarray(
-            rng.integers(0, 4, size=(B, comp.num_neurons)), jnp.int32)
-        us_ref = None  # first backend in the sweep is the baseline
-        for backend in BACKENDS:
-            if backend.name == "pallas" and comp.num_neurons > 512:
-                continue  # interpret-mode emulation too slow at this size
-            us = _time(_expand, cfgs, comp, T, backend)
-            expansions = B * T
-            derived = (f"{expansions / us:.1f}exp/us" if us_ref is None
-                       else f"{us / us_ref:.1f}x_ref")
-            if us_ref is None:
-                us_ref = us
-            out.append((f"snp_step/{backend.name}/m{comp.num_neurons}"
-                        f"_n{comp.num_rules}_B{B}_T{T}", us, derived))
+        backends = [b for b in BACKENDS if m <= _MAX_M.get(b.name, 1 << 30)]
+        out += _sweep("snp_step", system, B, T, backends, rng, reps)
     return out
 
 
-def main(path: str = "BENCH_snp.json") -> None:
+def large_rows(quick: bool = False):
+    """Bounded-degree large-system tier.  Dense backends are measured only
+    at the m=2048 cross-over; past that the dense encoding itself is the
+    bottleneck (0.5 GB+ of M_Π) and only the sparse path is attempted."""
+    reps = 2 if quick else 3
+    cases = [
+        ("torus", torus(32, 64, seed=2), 64, 32, ("ref", "sparse")),
+        ("ring_lattice", ring_lattice(8192, 8, seed=2), 16, 16, ("sparse",)),
+    ]
+    if not quick:
+        cases.append(("power_law",
+                      power_law(32768, 4, seed=2, max_in=64),
+                      8, 8, ("sparse",)))
+    rng = np.random.default_rng(1)
+    out = []
+    for tag, system, B, T, names in cases:
+        backends = [get_backend(n) for n in names]
+        out += _sweep(f"snp_step_large/{tag}", system, B, T, backends, rng,
+                      reps)
+    return out
+
+
+def main(path: str = "BENCH_snp.json", quick: bool = False) -> None:
     """Emit step- and tree-level rows for every backend as one JSON file."""
     from . import bench_tree
 
     payload = {
         "rows": [
             {"name": name, "us_per_call": us, "derived": derived}
-            for name, us, derived in rows() + bench_tree.rows()
+            for name, us, derived in (rows(quick) + large_rows(quick)
+                                      + bench_tree.rows(quick))
         ],
     }
     with open(path, "w") as f:
@@ -91,4 +142,9 @@ def main(path: str = "BENCH_snp.json") -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweep for CI smoke runs")
+    ap.add_argument("--out", default="BENCH_snp.json")
+    args = ap.parse_args()
+    main(args.out, quick=args.quick)

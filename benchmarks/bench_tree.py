@@ -1,41 +1,55 @@
 """Benchmark: full computation-tree exploration (paper §5 run + Fig. 4).
 
 Measures end-to-end BFS throughput (configurations discovered per second)
-on the paper's Π, scaled copies of it, and random systems — the direct
-analog of the paper's simulation runs, where the entire loop is the
-measured quantity.  The loop itself is the engine's on-device
-``lax.while_loop``; the transition comes from the step-backend registry,
-so ``ref`` and ``pallas`` exercise the identical BFS machinery.
+on the paper's Π, scaled copies of it, random systems, and bounded-degree
+sparse topologies — the direct analog of the paper's simulation runs,
+where the entire loop is the measured quantity.  The loop itself is the
+engine's on-device ``lax.while_loop``; the transition comes from the
+step-backend registry, so every backend exercises the identical BFS
+machinery.  Each backend explores its own lowering (``backend.compile``),
+so e.g. the sparse rows never touch a dense ``M_Π``.
 """
 
 import time
 
-from repro.core import compile_system, explore, paper_pi
-from repro.core.generators import nd_chain, random_system, scaled_pi
+from repro.core import explore, get_backend, paper_pi
+from repro.core.generators import (nd_chain, random_system, ring_lattice,
+                                   scaled_pi, torus)
 
-# (name, system, explore kwargs, backends to sweep).  Pallas interpret mode
-# is swept only on the paper's own Π to keep CPU bench runs short.
+# (name, system, explore kwargs, backends to sweep).  Interpret-mode kernel
+# backends are swept only on the paper's own Π to keep CPU bench runs short.
 CASES = [
-    ("pi", lambda: compile_system(paper_pi(True)),
+    ("pi", paper_pi(True),
      dict(max_steps=16, frontier_cap=128, visited_cap=2048,
-          max_branches=16), ("ref", "pallas")),
-    ("pi_x4", lambda: compile_system(scaled_pi(4)),
+          max_branches=16), ("ref", "pallas", "sparse", "sparse_pallas")),
+    ("pi_x4", scaled_pi(4),
      dict(max_steps=6, frontier_cap=512, visited_cap=16384,
-          max_branches=64), ("ref",)),
-    ("random_64n", lambda: compile_system(random_system(64, 2, 0.08, seed=5)),
+          max_branches=64), ("ref", "sparse")),
+    ("random_64n", random_system(64, 2, 0.08, seed=5),
      dict(max_steps=8, frontier_cap=512, visited_cap=16384,
-          max_branches=64), ("ref",)),
-    ("nd_chain_6", lambda: compile_system(nd_chain(6)),
+          max_branches=64), ("ref", "sparse")),
+    ("nd_chain_6", nd_chain(6),
      dict(max_steps=8, frontier_cap=512, visited_cap=8192,
-          max_branches=64), ("ref",)),
+          max_branches=64), ("ref", "sparse")),
+    # bounded-degree sparse tier: dense BFS at this size means a dense
+    # M_Π per expansion; sparse-only past the torus cross-over point.
+    ("torus_16x16", torus(16, 16, seed=3),
+     dict(max_steps=4, frontier_cap=256, visited_cap=4096,
+          max_branches=32), ("ref", "sparse")),
+    ("ring_lattice_1024d4", ring_lattice(1024, 4, seed=3),
+     dict(max_steps=3, frontier_cap=128, visited_cap=2048,
+          max_branches=16), ("sparse",)),
 ]
 
 
-def rows():
+def rows(quick: bool = False):
     out = []
-    for name, make, kw, backends in CASES:
-        comp = make()
+    for name, system, kw, backends in CASES:
+        if quick and name == "ring_lattice_1024d4":
+            continue
+        comps = {b: get_backend(b).compile(system) for b in backends}
         for backend in backends:
+            comp = comps[backend]
             explore(comp, backend=backend, **kw)  # warm compile
             t0 = time.perf_counter()
             res = explore(comp, backend=backend, **kw)

@@ -4,12 +4,15 @@ Public API:
 
 * :class:`repro.core.system.SNPSystem`, :class:`repro.core.system.Rule` —
   system specification (paper Definition 1).
-* :func:`repro.core.matrix.compile_system` — matrix encoding (paper §2.2).
+* :func:`repro.core.matrix.compile_system` — dense matrix encoding (paper
+  §2.2); :func:`repro.core.matrix.compile_system_sparse` — ELL/segment
+  encoding for large bounded-degree systems (no ``O(n·m)`` arrays).
 * :mod:`repro.core.semantics` — batched applicability / spiking-vector
-  enumeration / transition (paper eq. 2, Alg. 2).
+  enumeration / transition (paper eq. 2, Alg. 2), dense and sparse.
 * :mod:`repro.core.backend` — pluggable step backends (``"ref"`` jnp
-  oracle / ``"pallas"`` fused kernel) behind one registry; every consumer
-  takes ``backend=``.
+  oracle / ``"pallas"`` fused kernel / ``"sparse"`` ELL gather /
+  ``"sparse_pallas"`` fused sparse kernel) behind one registry; every
+  consumer takes ``backend=`` and lowers via ``backend.compile``.
 * :func:`repro.core.engine.explore` — computation-tree BFS (paper Alg. 1)
   as one on-device ``lax.while_loop``.
 * :func:`repro.core.engine.run_traces` — batched trajectory serving.
@@ -17,19 +20,25 @@ Public API:
 * :mod:`repro.core.generators` — synthetic system families for scaling.
 """
 
-from .backend import (PallasBackend, RefBackend, StepBackend,
-                      available_backends, get_backend, register_backend)
+from .backend import (PallasBackend, RefBackend, SparseBackend,
+                      SparsePallasBackend, StepBackend, available_backends,
+                      get_backend, register_backend)
 from .engine import (ExploreResult, emission_gaps, explore, run_trace,
                      run_traces, successor_set)
-from .matrix import CompiledSNP, compile_system
-from .semantics import applicability, branch_info, next_configs, spiking_vectors
+from .matrix import (CompiledSNP, CompiledSparseSNP, compile_system,
+                     compile_system_sparse, is_compiled)
+from .semantics import (applicability, branch_info, next_configs,
+                        sparse_next_configs, spiking_vectors)
 from .system import Rule, SNPSystem, paper_pi
 
 __all__ = [
     "SNPSystem", "Rule", "paper_pi",
-    "CompiledSNP", "compile_system",
-    "applicability", "branch_info", "next_configs", "spiking_vectors",
-    "StepBackend", "RefBackend", "PallasBackend",
+    "CompiledSNP", "CompiledSparseSNP", "compile_system",
+    "compile_system_sparse", "is_compiled",
+    "applicability", "branch_info", "next_configs", "sparse_next_configs",
+    "spiking_vectors",
+    "StepBackend", "RefBackend", "PallasBackend", "SparseBackend",
+    "SparsePallasBackend",
     "register_backend", "get_backend", "available_backends",
     "explore", "ExploreResult", "successor_set", "emission_gaps",
     "run_trace", "run_traces",

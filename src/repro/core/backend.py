@@ -20,9 +20,23 @@ workload.  This module is that seam:
   (:func:`repro.kernels.snp_step.ops.snp_step`); interpret mode on CPU,
   ``interpret=False`` on real TPUs.  Does not materialize the spiking
   vectors, so ``StepOut.spiking`` is ``None``.
+* :class:`SparseBackend` (``"sparse"``) — gather/segment-sum over the
+  ELL/segment encoding (:class:`~repro.core.matrix.CompiledSparseSNP`);
+  ``O(B·T·m·degree)`` work and memory, the scaling path for large systems
+  (Hernández-Tello et al. 2024).
+* :class:`SparsePallasBackend` (``"sparse_pallas"``) — the fused Pallas
+  kernel over the same sparse encoding
+  (:func:`repro.kernels.snp_step.sparse_ops.snp_step_sparse`).
 * a name registry — :func:`register_backend` / :func:`get_backend` /
   :func:`available_backends` — so new backends land as plugins without
   touching the consumers.
+
+Each backend also owns its *compilation*: ``backend.compile(system)``
+lowers an :class:`~repro.core.system.SNPSystem` to the encoding its
+``expand`` consumes (dense :class:`~repro.core.matrix.CompiledSNP` for
+ref/pallas, :class:`~repro.core.matrix.CompiledSparseSNP` for the sparse
+pair).  Consumers resolve backends by name and call ``compile`` once, so a
+new encoding lights up every workload with no consumer changes.
 
 Backends are frozen dataclasses: hashable, so they ride through
 ``jax.jit(..., static_argnames=("backend",))`` unchanged.
@@ -35,13 +49,17 @@ from typing import Dict, Protocol, Tuple, Union, runtime_checkable
 
 import jax.numpy as jnp
 
-from .matrix import CompiledSNP
-from .semantics import StepOut, next_configs
+from .matrix import (CompiledAny, CompiledSNP, CompiledSparseSNP,
+                     compile_system, compile_system_sparse)
+from .semantics import StepOut, next_configs, sparse_next_configs
+from .system import SNPSystem
 
 __all__ = [
     "StepBackend",
     "RefBackend",
     "PallasBackend",
+    "SparseBackend",
+    "SparsePallasBackend",
     "register_backend",
     "get_backend",
     "available_backends",
@@ -72,12 +90,26 @@ class StepBackend(Protocol):
     pad_multiple: int
     materializes_spiking: bool
 
-    def expand(self, configs: jnp.ndarray, comp: CompiledSNP,
+    def compile(self, system: SNPSystem) -> CompiledAny:
+        """Lower ``system`` to the encoding this backend's ``expand``
+        consumes (host-side, not traceable)."""
+        ...
+
+    def expand(self, configs: jnp.ndarray, comp: CompiledAny,
                max_branches: int) -> StepOut:
         """All successors of ``configs`` (..., m): a :class:`StepOut` with
         ``configs`` (..., T, m), ``valid``/``emissions`` (..., T) and
         ``overflow`` (...,)."""
         ...
+
+
+def _require_sparse(comp, backend_name: str) -> CompiledSparseSNP:
+    if not isinstance(comp, CompiledSparseSNP):
+        raise TypeError(
+            f"backend {backend_name!r} needs a CompiledSparseSNP "
+            "(use compile_system_sparse / backend.compile), got "
+            f"{type(comp).__name__}")
+    return comp
 
 
 @dataclass(frozen=True)
@@ -88,6 +120,9 @@ class RefBackend:
     supports_nd_batch: bool = True
     pad_multiple: int = 1
     materializes_spiking: bool = True
+
+    def compile(self, system: SNPSystem) -> CompiledSNP:
+        return compile_system(system)
 
     def expand(self, configs: jnp.ndarray, comp: CompiledSNP,
                max_branches: int) -> StepOut:
@@ -116,6 +151,9 @@ class PallasBackend:
     def pad_multiple(self) -> int:
         return self.block_b
 
+    def compile(self, system: SNPSystem) -> CompiledSNP:
+        return compile_system(system)
+
     def expand(self, configs: jnp.ndarray, comp: CompiledSNP,
                max_branches: int) -> StepOut:
         # Lazy import: keeps repro.core importable if the Pallas toolchain
@@ -129,6 +167,81 @@ class PallasBackend:
             flat, comp, max_branches=max_branches,
             block_b=self.block_b, block_t=self.block_t,
             block_n=self.block_n, interpret=self.interpret,
+        )
+        T = max_branches
+        return StepOut(
+            configs=out.reshape(*batch, T, m),
+            valid=valid.reshape(*batch, T),
+            emissions=emis.reshape(*batch, T),
+            overflow=overflow.reshape(batch),
+            spiking=None,
+        )
+
+
+@dataclass(frozen=True)
+class SparseBackend:
+    """Gather/segment-sum step over the ELL/segment encoding.
+
+    Replaces the dense ``S·M`` einsum with (1) per-neuron mixed-radix
+    decode, (2) a selection-table lookup of the fired rule per neuron, and
+    (3) a ``K_in``-wide gather over the synapse in-adjacency — never
+    materializing the ``(B, T, n)`` one-hot spiking tensor or the dense
+    ``(n, m)`` matrix.  Work and memory scale with ``nnz(M_Π)``
+    (``O(B·T·m·degree)``) instead of ``O(B·T·n·m)``; valid entries are
+    bit-identical to ``"ref"`` for spike counts < 2^24.
+    """
+
+    name: str = "sparse"
+    supports_nd_batch: bool = True
+    pad_multiple: int = 1
+    materializes_spiking: bool = False
+
+    def compile(self, system: SNPSystem) -> CompiledSparseSNP:
+        return compile_system_sparse(system)
+
+    def expand(self, configs: jnp.ndarray, comp: CompiledSparseSNP,
+               max_branches: int) -> StepOut:
+        return sparse_next_configs(
+            configs, _require_sparse(comp, self.name), max_branches)
+
+
+@dataclass(frozen=True)
+class SparsePallasBackend:
+    """Fused Pallas kernel over the sparse encoding (decode + selection
+    lookup + in-adjacency gather in VMEM).
+
+    ``interpret=True`` (default) emulates the kernel on CPU; the grid is
+    ``(B/bb, T/bt)`` with the whole neuron axis resident per block, so the
+    working set is ``O(bb·bt·m)`` — the ops wrapper clamps blocks to the
+    problem size.  TPU story scales with nnz, not ``n·m``.
+    """
+
+    name: str = "sparse_pallas"
+    interpret: bool = True
+    block_b: int = 8
+    block_t: int = 32
+    supports_nd_batch: bool = True   # flattens leading dims internally
+    materializes_spiking: bool = False
+
+    @property
+    def pad_multiple(self) -> int:
+        return self.block_b
+
+    def compile(self, system: SNPSystem) -> CompiledSparseSNP:
+        return compile_system_sparse(system)
+
+    def expand(self, configs: jnp.ndarray, comp: CompiledSparseSNP,
+               max_branches: int) -> StepOut:
+        from repro.kernels.snp_step.sparse_ops import snp_step_sparse
+
+        comp = _require_sparse(comp, self.name)
+        m = configs.shape[-1]
+        batch = configs.shape[:-1]
+        flat = configs.reshape(-1, m)
+        out, valid, emis, overflow = snp_step_sparse(
+            flat, comp, max_branches=max_branches,
+            block_b=self.block_b, block_t=self.block_t,
+            interpret=self.interpret,
         )
         T = max_branches
         return StepOut(
@@ -182,3 +295,5 @@ def get_backend(name: BackendLike) -> StepBackend:
 
 register_backend(RefBackend())
 register_backend(PallasBackend())
+register_backend(SparseBackend())
+register_backend(SparsePallasBackend())

@@ -44,7 +44,7 @@ except ImportError:                   # pragma: no cover - older jax
 from .backend import BackendLike, get_backend
 from .engine import ExploreResult
 from .hashing import SENTINEL, config_hash
-from .matrix import CompiledSNP, compile_system
+from .matrix import CompiledAny, is_compiled
 from .system import SNPSystem
 
 __all__ = ["explore_distributed"]
@@ -146,7 +146,7 @@ def _device_step(comp, frontier, frontier_valid, visited_hi, visited_lo,
 
 
 def explore_distributed(
-    system: SNPSystem | CompiledSNP,
+    system: SNPSystem | CompiledAny,
     *,
     mesh: Optional[Mesh] = None,
     max_steps: int = 64,
@@ -164,10 +164,10 @@ def explore_distributed(
     ``backend`` selects the per-shard transition implementation (same
     registry as the single-chip engine — :mod:`repro.core.backend`); each
     device runs ``backend.expand`` on its frontier shard inside the
-    shard_map body, so e.g. the fused Pallas kernel serves the expansion on
-    every chip with no changes here."""
-    comp = system if isinstance(system, CompiledSNP) else compile_system(system)
+    shard_map body, so e.g. the fused Pallas kernel or the sparse ELL path
+    serves the expansion on every chip with no changes here."""
     be = get_backend(backend)
+    comp = system if is_compiled(system) else be.compile(system)
     if mesh is None:
         devs = np.array(jax.devices())
         mesh = Mesh(devs, ("x",))

@@ -11,9 +11,14 @@ first version of this engine still paid (DESIGN.md §2).
 
 The transition itself is pluggable: every entry point takes a ``backend=``
 (name or :class:`~repro.core.backend.StepBackend`) selecting how successors
-are expanded — ``"ref"`` (pure-jnp oracle) or ``"pallas"`` (fused kernel);
-see :mod:`repro.core.backend`.  Backends agree bit-for-bit on valid
-entries, so archives and traces are backend-independent.
+are expanded — ``"ref"`` (pure-jnp oracle), ``"pallas"`` (fused dense
+kernel), or ``"sparse"``/``"sparse_pallas"`` (ELL gather/segment-sum for
+large bounded-degree systems); see :mod:`repro.core.backend`.  Each
+backend also owns its lowering: pass an :class:`SNPSystem` and the engine
+calls ``backend.compile`` (dense or sparse encoding as appropriate), or
+pass a pre-compiled object to reuse it across calls.  Backends agree
+bit-for-bit on valid entries, so archives and traces are
+backend-independent.
 
 Static-shape discipline: the frontier capacity ``F``, branch fan-out cap
 ``T`` and visited/archive capacity ``V`` are compile-time constants; all
@@ -42,7 +47,7 @@ import numpy as np
 
 from .backend import BackendLike, get_backend
 from .hashing import SENTINEL, config_hash
-from .matrix import CompiledSNP, compile_system
+from .matrix import CompiledAny, is_compiled
 from .system import SNPSystem
 
 __all__ = ["ExploreState", "ExploreResult", "explore", "successor_set",
@@ -78,7 +83,7 @@ class ExploreResult:
         return ["-".join(str(int(v)) for v in row) for row in self.configs]
 
 
-def _init_state(comp: CompiledSNP, frontier_cap: int, visited_cap: int,
+def _init_state(comp: CompiledAny, frontier_cap: int, visited_cap: int,
                 init: Optional[jnp.ndarray] = None) -> ExploreState:
     m = comp.num_neurons
     c0 = comp.init_config if init is None else jnp.asarray(init, jnp.int32)
@@ -97,7 +102,7 @@ def _init_state(comp: CompiledSNP, frontier_cap: int, visited_cap: int,
     )
 
 
-def _explore_step(state: ExploreState, comp: CompiledSNP,
+def _explore_step(state: ExploreState, comp: CompiledAny,
                   max_branches: int, backend) -> ExploreState:
     """One BFS level: expand, hash, dedup, compact.  Traceable; the body of
     the on-device while_loop in :func:`_explore_loop`."""
@@ -182,7 +187,7 @@ def _explore_step(state: ExploreState, comp: CompiledSNP,
 
 @functools.partial(
     jax.jit, static_argnames=("max_steps", "max_branches", "backend"))
-def _explore_loop(state: ExploreState, comp: CompiledSNP, max_steps: int,
+def _explore_loop(state: ExploreState, comp: CompiledAny, max_steps: int,
                   max_branches: int, backend) -> ExploreState:
     """Entire BFS as one on-device ``lax.while_loop``: runs until the
     frontier drains or ``max_steps`` levels, with zero host round-trips."""
@@ -197,7 +202,7 @@ def _explore_loop(state: ExploreState, comp: CompiledSNP, max_steps: int,
 
 
 def explore(
-    system: SNPSystem | CompiledSNP,
+    system: SNPSystem | CompiledAny,
     *,
     max_steps: int = 64,
     frontier_cap: int = 256,
@@ -215,11 +220,13 @@ def explore(
     ``lax.while_loop``; the host sees only the final state.
 
     ``backend`` selects the transition implementation (``"ref"``,
-    ``"pallas"``, or any registered :class:`~repro.core.backend.StepBackend`
-    instance); the archive is identical across backends.
+    ``"pallas"``, ``"sparse"``, ``"sparse_pallas"``, or any registered
+    :class:`~repro.core.backend.StepBackend` instance); an ``SNPSystem`` is
+    lowered by the backend's own ``compile``; the archive is identical
+    across backends.
     """
-    comp = system if isinstance(system, CompiledSNP) else compile_system(system)
     be = get_backend(backend)
+    comp = system if is_compiled(system) else be.compile(system)
     init_arr = None if init is None else jnp.asarray(init, jnp.int32)
     state = _init_state(comp, frontier_cap, visited_cap, init_arr)
     state = _explore_loop(state, comp, max_steps, max_branches, be)
@@ -251,13 +258,14 @@ def _succ_one(config, comp, max_branches, backend):
 
 
 def successor_set(
-    comp: CompiledSNP, config: Sequence[int], max_branches: int = 64,
-    backend: BackendLike = "ref",
+    system: SNPSystem | CompiledAny, config: Sequence[int],
+    max_branches: int = 64, backend: BackendLike = "ref",
 ) -> List[Tuple[Tuple[int, ...], int]]:
     """Distinct (successor, emission) pairs of one configuration."""
+    be = get_backend(backend)
+    comp = system if is_compiled(system) else be.compile(system)
     c = jnp.asarray(config, jnp.int32)
-    cfgs, valid, emis, ovf = _succ_one(c, comp, max_branches,
-                                       get_backend(backend))
+    cfgs, valid, emis, ovf = _succ_one(c, comp, max_branches, be)
     if bool(ovf):
         raise ValueError("branch overflow; raise max_branches")
     seen, out = set(), []
@@ -270,8 +278,8 @@ def successor_set(
 
 
 def emission_gaps(
-    comp: CompiledSNP, *, max_time: int, max_gap: int,
-    max_branches: int = 64,
+    comp: SNPSystem | CompiledAny, *, max_time: int, max_gap: int,
+    max_branches: int = 64, backend: BackendLike = "ref",
 ) -> set[int]:
     """All gaps between the first two environment emissions, over every
     computation path of length <= ``max_time``.
@@ -281,6 +289,7 @@ def emission_gaps(
     BFS over *augmented* states (config, elapsed-since-first-emission) keeps
     the search polynomial even though the path count is exponential.
     """
+    comp = comp if is_compiled(comp) else get_backend(backend).compile(comp)
     # phase A: no emission yet; phase B: (config, elapsed) since 1st emission
     init = tuple(int(v) for v in np.asarray(comp.init_config))
     phase_a: set = {init}
@@ -290,7 +299,7 @@ def emission_gaps(
         new_a: set = set()
         new_b: set = set()
         for cfg in phase_a:
-            for nxt, emis in successor_set(comp, cfg, max_branches):
+            for nxt, emis in successor_set(comp, cfg, max_branches, backend):
                 if emis > 0:
                     new_b.add((nxt, 0))
                 else:
@@ -298,7 +307,7 @@ def emission_gaps(
         for cfg, elapsed in phase_b:
             if elapsed + 1 > max_gap:
                 continue
-            for nxt, emis in successor_set(comp, cfg, max_branches):
+            for nxt, emis in successor_set(comp, cfg, max_branches, backend):
                 if emis > 0:
                     gaps.add(elapsed + 1)
                 else:
@@ -354,7 +363,7 @@ def _traces_scan(comp, c0s, keys, steps, max_branches, policy, backend):
 
 
 def run_traces(
-    system: SNPSystem | CompiledSNP, *, steps: int,
+    system: SNPSystem | CompiledAny, *, steps: int,
     seeds: Sequence[int] | np.ndarray | jnp.ndarray,
     policy: str = "first", max_branches: int = 64,
     backend: BackendLike = "ref",
@@ -367,10 +376,10 @@ def run_traces(
     batch dimension rides through the backend's ``expand`` (one transition
     per step for the whole batch), which is the serving-path hot loop.
     """
-    comp = system if isinstance(system, CompiledSNP) else compile_system(system)
     if policy not in ("first", "random"):
         raise ValueError(f"unknown policy {policy!r}")
     be = get_backend(backend)
+    comp = system if is_compiled(system) else be.compile(system)
     seeds = jnp.asarray(seeds, jnp.uint32)
     if seeds.ndim != 1:
         raise ValueError(f"seeds must be 1-D, got shape {seeds.shape}")
@@ -381,7 +390,7 @@ def run_traces(
 
 
 def run_trace(
-    system: SNPSystem | CompiledSNP, *, steps: int,
+    system: SNPSystem | CompiledAny, *, steps: int,
     policy: str = "first", seed: int = 0, max_branches: int = 64,
     backend: BackendLike = "ref",
 ):

@@ -16,16 +16,28 @@ width) we need parameterized families, all valid SNPSystems:
 * ``scaled_pi``       — k disjoint copies of the paper's Π fused into one
                         system: tree = product of k independent Π trees;
                         lets us grow the paper's own workload.
+
+Large-system families (bounded synapse degree, O(m·degree) construction —
+the sparse-backend benchmark tier; ``random_system``'s O(m²) edge scan is
+unusable past a few thousand neurons):
+
+* ``ring_lattice``    — each neuron feeds its next ``degree`` ring
+                        neighbors: exact, uniform out-degree.
+* ``torus``           — 2-D wrap-around grid, 4-neighborhood (degree 4).
+* ``power_law``       — preferential attachment: bounded *mean* degree
+                        with heavy-tailed in-degree, the adversarial case
+                        for ELL row packing.
 """
 
 from __future__ import annotations
 
 import random
-from typing import Tuple
+from typing import Optional, Tuple
 
 from .system import Rule, SNPSystem
 
-__all__ = ["ring", "nd_chain", "random_system", "counter", "scaled_pi"]
+__all__ = ["ring", "nd_chain", "random_system", "counter", "scaled_pi",
+           "ring_lattice", "torus", "power_law"]
 
 
 def ring(m: int, produce: int = 1) -> SNPSystem:
@@ -139,3 +151,122 @@ def scaled_pi(copies: int, covering: bool = True) -> SNPSystem:
     return SNPSystem(copies * m0, init, tuple(rules), tuple(syn),
                      output_neuron=copies * m0 - 1,
                      name=f"pi-x{copies}")
+
+
+# ---------------------------------------------------------------------------
+# Large-system families: bounded-degree synapse topologies, O(m·degree)
+# construction, for the sparse-backend benchmark tier.
+# ---------------------------------------------------------------------------
+
+
+def _bounded_rules(m: int, rules_per_neuron: int, max_spikes: int,
+                   rng: random.Random) -> Tuple[Rule, ...]:
+    """Random rules in the same bounded family as :func:`random_system`."""
+    rules = []
+    for i in range(m):
+        for _ in range(rules_per_neuron):
+            consume = rng.randint(1, max_spikes)
+            rules.append(Rule(
+                neuron=i, consume=consume,
+                produce=rng.choice([0, 1, 1, 2]),
+                regex_base=rng.randint(consume, max_spikes),
+                regex_period=rng.choice([0, 0, 1]),
+                covering=rng.random() < 0.5,
+            ))
+    return tuple(rules)
+
+
+def _sparse_family(name: str, m: int, syn, rules_per_neuron: int,
+                   max_spikes: int, seed: int) -> SNPSystem:
+    rng = random.Random(seed)
+    rules = _bounded_rules(m, rules_per_neuron, max_spikes, rng)
+    init = tuple(rng.randint(0, max_spikes) for _ in range(m))
+    return SNPSystem(m, init, rules, tuple(syn), output_neuron=m - 1,
+                     name=name)
+
+
+def ring_lattice(m: int, degree: int = 4, rules_per_neuron: int = 2,
+                 max_spikes: int = 3, seed: int = 0) -> SNPSystem:
+    """Each neuron synapses onto its next ``degree`` ring neighbors:
+    exact, uniform out- and in-degree (the best case for ELL packing)."""
+    if not 1 <= degree < m:
+        raise ValueError(f"need 1 <= degree < m, got degree={degree}, m={m}")
+    syn = [(i, (i + d) % m) for i in range(m) for d in range(1, degree + 1)]
+    return _sparse_family(f"ring-lattice-{m}d{degree}", m, syn,
+                          rules_per_neuron, max_spikes, seed)
+
+
+def torus(rows: int, cols: Optional[int] = None, rules_per_neuron: int = 2,
+          max_spikes: int = 3, seed: int = 0) -> SNPSystem:
+    """2-D wrap-around grid, synapses to the 4-neighborhood (degree 4)."""
+    cols = rows if cols is None else cols
+    if rows < 3 or cols < 3:
+        raise ValueError("torus needs rows, cols >= 3 (distinct neighbors)")
+    m = rows * cols
+    syn = []
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            syn += [(i, r * cols + (c + 1) % cols),
+                    (i, r * cols + (c - 1) % cols),
+                    (i, ((r + 1) % rows) * cols + c),
+                    (i, ((r - 1) % rows) * cols + c)]
+    return _sparse_family(f"torus-{rows}x{cols}", m, syn,
+                          rules_per_neuron, max_spikes, seed)
+
+
+def power_law(m: int, attach: int = 4, rules_per_neuron: int = 2,
+              max_spikes: int = 3, seed: int = 0,
+              max_in: Optional[int] = None) -> SNPSystem:
+    """Preferential attachment (Barabási–Albert): node ``i`` synapses onto
+    ``attach`` distinct earlier nodes sampled by degree.  Mean out-degree
+    is ``attach``; in-degree is heavy-tailed — the adversarial case for the
+    ELL in-adjacency (``K_in`` ≫ mean degree).  ``max_in`` caps hub
+    in-degree (rejection-sampled, with a deterministic fallback scan so a
+    saturated pool cannot stall generation — keep ``max_in >= 2·attach`` to
+    make the fallback rare), bounding ``K_in`` — without it the top hub's
+    in-degree (hence ELL width and step cost) grows with ``m``."""
+    if not 1 <= attach < m:
+        raise ValueError(f"need 1 <= attach < m, got attach={attach}, m={m}")
+    if max_in is not None and max_in < attach:
+        raise ValueError(f"max_in {max_in} < attach {attach}")
+    rng = random.Random(seed ^ 0x5eed)
+    syn = []
+    in_deg = [0] * m
+    # degree-proportional endpoint pool, seeded with a clique of attach+1
+    pool = []
+    for i in range(attach + 1):
+        for j in range(attach + 1):
+            if i != j:
+                syn.append((i, j))
+                pool.append(j)
+                in_deg[j] += 1
+    for i in range(attach + 1, m):
+        targets = set()
+        for _ in range(50 * attach):  # bounded rejection sampling
+            if len(targets) == attach:
+                break
+            j = pool[rng.randrange(len(pool))]
+            if max_in is None or in_deg[j] < max_in:
+                targets.add(j)
+        if len(targets) < attach:
+            # Near-saturated pool (max_in close to attach): top up from an
+            # explicit scan of eligible earlier nodes so generation always
+            # terminates.
+            for j in range(i):
+                if len(targets) == attach:
+                    break
+                if max_in is None or in_deg[j] < max_in:
+                    targets.add(j)
+            if len(targets) < attach:
+                raise ValueError(
+                    f"cannot attach {attach} edges under max_in={max_in} "
+                    f"at node {i}; raise max_in (>= 2*attach recommended)")
+        for j in targets:
+            syn.append((i, j))
+            pool.append(j)
+            in_deg[j] += 1
+        pool.append(i)
+    cap = "" if max_in is None else f"c{max_in}"
+    return _sparse_family(f"power-law-{m}a{attach}{cap}", m, syn,
+                          rules_per_neuron, max_spikes, seed)

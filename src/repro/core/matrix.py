@@ -1,25 +1,47 @@
-"""Matrix encoding of an SNP system (paper §2.2), as JAX-ready arrays.
+"""Matrix encodings of an SNP system (paper §2.2), as JAX-ready arrays.
 
-``compile_system`` lowers an :class:`~repro.core.system.SNPSystem` into a
-:class:`CompiledSNP` — a pytree of device arrays holding the spiking
-transition matrix ``M_Π`` plus per-rule metadata, with rules **sorted by
-owning neuron** so per-neuron segment operations are contiguous.
+Two lowerings of an :class:`~repro.core.system.SNPSystem`, both with rules
+**sorted by owning neuron** so per-neuron segment operations are contiguous:
+
+* :func:`compile_system` — the paper's dense spiking transition matrix
+  ``M_Π`` (:class:`CompiledSNP`); ``O(n·m)`` memory, exact match for the
+  paper's eq. 2 formulation.
+* :func:`compile_system_sparse` — an ELL/segment encoding
+  (:class:`CompiledSparseSNP`) that never materializes ``M_Π``: per-rule
+  ELL-packed column indices/values (width = the *measured*
+  ``max_nnz_per_rule``), per-neuron rule segments, and the ELL-packed
+  in-adjacency of the synapse graph.  Real SNP graphs have bounded synapse
+  out-degree, so ``nnz(M_Π) = O(n·degree)`` while the dense matrix is
+  ``O(n·m)`` — the sparse step backends (``"sparse"``, ``"sparse_pallas"``)
+  run on this encoding in ``O(B·T·m·degree)`` instead of ``O(B·T·n·m)``.
+  Layout details in DESIGN.md §3.
+
+Both compilers build their arrays from vectorized numpy adjacency indexing
+(no per-rule × per-neuron Python loops), so systems with ``m >= 10^4``
+neurons compile in well under a second.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import List, NamedTuple, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
 
-from .system import SNPSystem
+from .system import Rule, SNPSystem
 
-__all__ = ["CompiledSNP", "compile_system"]
+__all__ = [
+    "CompiledSNP",
+    "CompiledSparseSNP",
+    "CompiledAny",
+    "compile_system",
+    "compile_system_sparse",
+    "is_compiled",
+]
 
 
 class CompiledSNP(NamedTuple):
-    """Device-array encoding of an SNP system.
+    """Dense device-array encoding of an SNP system.
 
     Shapes: ``m`` neurons, ``n`` rules (sorted by neuron).
     """
@@ -45,43 +67,248 @@ class CompiledSNP(NamedTuple):
         return self.M.shape[1]
 
 
-def compile_system(system: SNPSystem) -> CompiledSNP:
+class CompiledSparseSNP(NamedTuple):
+    """ELL/segment device-array encoding of an SNP system — no ``O(n·m)``
+    arrays anywhere (DESIGN.md §3).
+
+    Shapes: ``m`` neurons, ``n`` rules (sorted by neuron), ``K`` =
+    ``max_nnz_per_rule`` (measured at compile time), ``R`` =
+    ``max_rules_per_neuron``, ``Kin`` = max synapse in-degree (>= 1).
+
+    Padding convention: index entries beyond a row's real length point at
+    the out-of-range id (neuron ``m`` / rule ``n``); every consumer gathers
+    through a zero-extended table so padding contributes exactly 0.
+    """
+
+    # -- per-rule metadata (identical convention to CompiledSNP) ----------
+    rule_neuron: jnp.ndarray    # (n,)  int32
+    consume: jnp.ndarray        # (n,)  int32
+    produce: jnp.ndarray        # (n,)  int32
+    regex_base: jnp.ndarray     # (n,)  int32
+    regex_period: jnp.ndarray   # (n,)  int32
+    covering: jnp.ndarray       # (n,)  bool
+    env_produce: jnp.ndarray    # (n,)  int32
+    init_config: jnp.ndarray    # (m,)  int32
+    out_neuron: jnp.ndarray     # ()    int32 — output neuron, or m if none
+    rule_order: Tuple[int, ...]
+    # -- per-neuron rule segments (rules are neuron-sorted) ---------------
+    seg_start: jnp.ndarray      # (m,) int32 — first rule index of neuron
+    seg_count: jnp.ndarray      # (m,) int32 — #rules owned by neuron
+    rule_slots: jnp.ndarray     # (R,) int32 == arange(R); carries R in its
+    #                             shape so traced code can size tables
+    # -- ELL rows of M_Π ---------------------------------------------------
+    ell_col: jnp.ndarray        # (n, K) int32 — column (target neuron), pad m
+    ell_val: jnp.ndarray        # (n, K) int32 — value, pad 0
+    ell_nnz: jnp.ndarray        # (n,)  int32 — real row lengths
+    # -- ELL in-adjacency of the synapse graph ----------------------------
+    in_idx: jnp.ndarray         # (m, Kin) int32 — in-neighbors, pad m
+
+    @property
+    def num_rules(self) -> int:
+        return self.rule_neuron.shape[0]
+
+    @property
+    def num_neurons(self) -> int:
+        return self.init_config.shape[0]
+
+    @property
+    def max_nnz_per_rule(self) -> int:
+        return self.ell_col.shape[1]
+
+    @property
+    def max_rules_per_neuron(self) -> int:
+        return self.rule_slots.shape[0]
+
+    @property
+    def max_in_degree(self) -> int:
+        return self.in_idx.shape[1]
+
+
+CompiledAny = Union[CompiledSNP, CompiledSparseSNP]
+
+
+def is_compiled(obj) -> bool:
+    """True for any compiled encoding (dense or sparse)."""
+    return isinstance(obj, (CompiledSNP, CompiledSparseSNP))
+
+
+# ---------------------------------------------------------------------------
+# shared numpy lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def _ragged_arange(counts: np.ndarray) -> np.ndarray:
+    """``concatenate([arange(c) for c in counts])`` without the Python loop."""
+    counts = np.asarray(counts, np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros((0,), np.int64)
+    starts = np.cumsum(counts) - counts
+    return np.arange(total) - np.repeat(starts, counts)
+
+
+class _Lowered(NamedTuple):
+    """Neuron-sorted rule arrays + synapse adjacency, all numpy."""
+
+    order: Tuple[int, ...]
+    rules: List[Rule]
+    neuron: np.ndarray        # (n,) i32
+    consume: np.ndarray       # (n,) i32
+    produce: np.ndarray       # (n,) i32
+    regex_base: np.ndarray
+    regex_period: np.ndarray
+    covering: np.ndarray      # (n,) bool
+    env_produce: np.ndarray   # (n,) i32
+    src: np.ndarray           # (E,) i32 — synapse sources, sorted by (src,dst)
+    dst: np.ndarray           # (E,) i32
+    out_deg: np.ndarray       # (m,) i64
+    out_start: np.ndarray     # (m,) i64 — CSR row starts into src/dst
+
+
+def _lower(system: SNPSystem) -> _Lowered:
     m, n = system.num_neurons, system.num_rules
     if n == 0:
         raise ValueError("system has no rules")
 
     # Stable sort rules by neuron, remembering the original total order so
     # spiking vectors can be reported in the paper's ordering.
-    order = sorted(range(n), key=lambda i: system.rules[i].neuron)
+    neuron0 = np.fromiter((r.neuron for r in system.rules), np.int64, n)
+    order = np.argsort(neuron0, kind="stable")
     rules = [system.rules[i] for i in order]
 
-    syn = set(system.synapses)
-    M = np.zeros((n, m), dtype=np.int32)
-    for i, r in enumerate(rules):
-        M[i, r.neuron] = -r.consume
-        if r.produce > 0:
-            for j in range(m):
-                if (r.neuron, j) in syn:
-                    M[i, j] = r.produce
+    neuron = neuron0[order].astype(np.int32)
+    consume = np.fromiter((r.consume for r in rules), np.int32, n)
+    produce = np.fromiter((r.produce for r in rules), np.int32, n)
+    regex_base = np.fromiter((r.regex_base for r in rules), np.int32, n)
+    regex_period = np.fromiter((r.regex_period for r in rules), np.int32, n)
+    covering = np.fromiter((r.covering for r in rules), bool, n)
+    env_produce = np.where(neuron == system.output_neuron, produce, 0) \
+        .astype(np.int32)
 
-    rule_neuron = np.array([r.neuron for r in rules], dtype=np.int32)
-    env_produce = np.array(
-        [r.produce if r.neuron == system.output_neuron else 0 for r in rules],
-        dtype=np.int32,
-    )
+    syn = np.asarray(system.synapses, np.int64).reshape(-1, 2)
+    o = np.lexsort((syn[:, 1], syn[:, 0]))
+    src, dst = syn[o, 0], syn[o, 1]
+    out_deg = np.bincount(src, minlength=m)
+    out_start = np.cumsum(out_deg) - out_deg
+
+    return _Lowered(order=tuple(int(i) for i in order), rules=rules,
+                    neuron=neuron, consume=consume, produce=produce,
+                    regex_base=regex_base, regex_period=regex_period,
+                    covering=covering, env_produce=env_produce,
+                    src=src.astype(np.int32), dst=dst.astype(np.int32),
+                    out_deg=out_deg, out_start=out_start)
+
+
+def _rule_row_entries(low: _Lowered):
+    """Flat (rule, column, value) triples of the produce entries of M_Π.
+
+    Rule ``i`` (neuron-sorted) with ``produce > 0`` writes ``produce`` into
+    every out-neighbor column of its neuron; the consume entry (its own
+    neuron, value ``-consume``) is handled separately by each caller.
+    Returns ``(rows, pos, cols, vals)`` with ``pos`` the within-row slot.
+    """
+    n = low.neuron.shape[0]
+    prod_rules = np.nonzero(low.produce > 0)[0]
+    deg_r = low.out_deg[low.neuron[prod_rules]]
+    rows = np.repeat(prod_rules, deg_r)
+    pos = _ragged_arange(deg_r)
+    flat = np.repeat(low.out_start[low.neuron[prod_rules]], deg_r) + pos
+    cols = low.dst[flat] if rows.size else np.zeros((0,), np.int32)
+    vals = np.repeat(low.produce[prod_rules], deg_r)
+    return rows.astype(np.int64), pos, cols, vals.astype(np.int32), \
+        prod_rules, deg_r
+
+
+def compile_system(system: SNPSystem) -> CompiledSNP:
+    """Dense lowering (paper eq. 1).  Fully vectorized: the dense ``M`` is
+    built by adjacency indexing, not an ``O(n·m)`` synapse-set scan."""
+    m, n = system.num_neurons, system.num_rules
+    low = _lower(system)
+
+    M = np.zeros((n, m), dtype=np.int32)
+    M[np.arange(n), low.neuron] = -low.consume
+    rows, _, cols, vals, _, _ = _rule_row_entries(low)
+    M[rows, cols] = vals  # no collisions: self-synapses are forbidden
+
     onehot = np.zeros((n, m), dtype=np.int8)
-    onehot[np.arange(n), rule_neuron] = 1
+    onehot[np.arange(n), low.neuron] = 1
 
     return CompiledSNP(
         M=jnp.asarray(M),
-        rule_neuron=jnp.asarray(rule_neuron),
-        consume=jnp.asarray([r.consume for r in rules], dtype=jnp.int32),
-        produce=jnp.asarray([r.produce for r in rules], dtype=jnp.int32),
-        regex_base=jnp.asarray([r.regex_base for r in rules], dtype=jnp.int32),
-        regex_period=jnp.asarray([r.regex_period for r in rules], dtype=jnp.int32),
-        covering=jnp.asarray([r.covering for r in rules], dtype=bool),
+        rule_neuron=jnp.asarray(low.neuron),
+        consume=jnp.asarray(low.consume),
+        produce=jnp.asarray(low.produce),
+        regex_base=jnp.asarray(low.regex_base),
+        regex_period=jnp.asarray(low.regex_period),
+        covering=jnp.asarray(low.covering),
         neuron_onehot=jnp.asarray(onehot),
-        env_produce=jnp.asarray(env_produce),
+        env_produce=jnp.asarray(low.env_produce),
         init_config=jnp.asarray(system.initial_spikes, dtype=jnp.int32),
-        rule_order=tuple(order),
+        rule_order=low.order,
+    )
+
+
+def compile_system_sparse(system: SNPSystem) -> CompiledSparseSNP:
+    """Sparse lowering: ELL rows of ``M_Π`` + per-neuron segments + ELL
+    in-adjacency.  Never allocates anything ``O(n·m)``; memory and compile
+    time are ``O(n·K + m·Kin)`` with measured widths."""
+    m, n = system.num_neurons, system.num_rules
+    low = _lower(system)
+
+    # The sparse step packs (produce, consume) of a fired rule into one
+    # int32 (produce | consume << 16) so the hot per-branch lookup is a
+    # single gather; bounds far beyond any simulable system (spike counts
+    # must stay < 2^24 anyway, DESIGN.md §2).
+    if int(low.produce.max(initial=0)) >= 1 << 16 \
+            or int(low.consume.max(initial=0)) >= 1 << 15:
+        raise ValueError("sparse encoding requires produce < 2^16 and "
+                         "consume < 2^15 per rule")
+
+    # -- per-neuron rule segments -----------------------------------------
+    seg_count = np.bincount(low.neuron, minlength=m).astype(np.int32)
+    seg_start = (np.cumsum(seg_count) - seg_count).astype(np.int32)
+    R = int(max(seg_count.max(), 1))
+
+    # -- ELL rows of M: slot 0 is the consume entry, 1.. the produce fanout
+    rows, pos, cols, vals, prod_rules, deg_r = _rule_row_entries(low)
+    K = int(1 + (deg_r.max() if deg_r.size else 0))
+    ell_col = np.full((n, K), m, dtype=np.int32)
+    ell_val = np.zeros((n, K), dtype=np.int32)
+    ell_col[:, 0] = low.neuron
+    ell_val[:, 0] = -low.consume
+    ell_col[rows, 1 + pos] = cols
+    ell_val[rows, 1 + pos] = vals
+    ell_nnz = np.ones((n,), np.int32)
+    ell_nnz[prod_rules] += deg_r.astype(np.int32)
+
+    # -- ELL in-adjacency (transposed synapse graph) ----------------------
+    # Entries sorted by (target, source); a ragged arange over the in-degree
+    # histogram yields each entry's slot within its target's row.
+    in_deg = np.bincount(low.dst, minlength=m)
+    Kin = int(max(in_deg.max() if in_deg.size else 0, 1))
+    o = np.lexsort((low.src, low.dst))
+    slot = _ragged_arange(in_deg)
+    in_idx = np.full((m, Kin), m, dtype=np.int32)
+    in_idx[low.dst[o], slot] = low.src[o]
+
+    return CompiledSparseSNP(
+        rule_neuron=jnp.asarray(low.neuron),
+        consume=jnp.asarray(low.consume),
+        produce=jnp.asarray(low.produce),
+        regex_base=jnp.asarray(low.regex_base),
+        regex_period=jnp.asarray(low.regex_period),
+        covering=jnp.asarray(low.covering),
+        env_produce=jnp.asarray(low.env_produce),
+        init_config=jnp.asarray(system.initial_spikes, dtype=jnp.int32),
+        out_neuron=jnp.asarray(
+            system.output_neuron if system.output_neuron >= 0 else m,
+            dtype=jnp.int32),
+        rule_order=low.order,
+        seg_start=jnp.asarray(seg_start),
+        seg_count=jnp.asarray(seg_count),
+        rule_slots=jnp.arange(R, dtype=jnp.int32),
+        ell_col=jnp.asarray(ell_col),
+        ell_val=jnp.asarray(ell_val),
+        ell_nnz=jnp.asarray(ell_nnz),
+        in_idx=jnp.asarray(in_idx),
     )

@@ -12,6 +12,10 @@ of ``B`` configurations at once:
 Everything here is shape-static and jit/vmap/shard_map friendly.  The fused
 Pallas TPU kernel (``repro.kernels.snp_step``) implements the same math with
 explicit VMEM tiling; this module doubles as its oracle (``ref.py``).
+The sparse twins (:func:`sparse_branch_info`, :func:`sparse_next_configs`)
+run the same math on the ELL/segment encoding
+(:class:`~repro.core.matrix.CompiledSparseSNP`) in ``O(B·T·nnz)`` with
+bit-identical valid entries — see DESIGN.md §3.
 
 Enumeration order.  Neuron 0 is the most-significant mixed-radix digit:
 branch index ``t ∈ [0, Ψ)`` decodes to ``digit_i = (t // stride_i) % k_i``
@@ -33,19 +37,23 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .matrix import CompiledSNP
+from .matrix import CompiledAny, CompiledSNP, CompiledSparseSNP
 
 __all__ = [
     "applicability",
     "branch_info",
+    "sparse_branch_info",
+    "packed_rule_table",
     "spiking_vectors",
     "next_configs",
+    "sparse_next_configs",
     "StepOut",
 ]
 
 
-def applicability(config: jnp.ndarray, comp: CompiledSNP) -> jnp.ndarray:
+def applicability(config: jnp.ndarray, comp: CompiledAny) -> jnp.ndarray:
     """Boolean mask (..., n): which rules may fire at ``config`` (..., m).
 
     A rule with regex ``{b + t·p}`` is applicable at ``s`` spikes iff
@@ -179,3 +187,172 @@ def next_configs(
     ).astype(jnp.int32)
     return StepOut(configs=out, valid=valid, emissions=emissions,
                    overflow=overflow, spiking=S)
+
+
+# ---------------------------------------------------------------------------
+# Sparse path: the same math on the ELL/segment encoding, O(B·T·m·degree)
+# instead of O(B·T·n·m) — see DESIGN.md §3.
+# ---------------------------------------------------------------------------
+
+
+def sparse_branch_info(config: jnp.ndarray,
+                       comp: CompiledSparseSNP) -> BranchInfo:
+    """:func:`branch_info` on the sparse encoding — bit-identical outputs.
+
+    Per-neuron applicable counts come from a prefix-sum difference over the
+    neuron-sorted rule axis (a segment sum over ``seg_start``/``seg_count``)
+    instead of the dense ``app @ neuron_onehot`` matmul; ranks reuse the
+    same inclusive-cumsum trick.  The float32 stride/Ψ products are the
+    *same operations in the same order* as the dense path, so overflow
+    saturation matches exactly (DESIGN.md §2).
+    """
+    app = applicability(config, comp)
+    app_i = app.astype(jnp.int32)
+    incl = jnp.cumsum(app_i, axis=-1)                        # (..., n)
+    cum0 = jnp.concatenate(
+        [jnp.zeros_like(incl[..., :1]), incl], axis=-1)      # (..., n+1)
+    start = jnp.take(cum0, comp.seg_start, axis=-1)          # (..., m)
+    k = jnp.take(cum0, comp.seg_start + comp.seg_count, axis=-1) - start
+    rank = incl - jnp.take(start, comp.rule_neuron, axis=-1) - 1
+
+    choices = jnp.maximum(k, 1)
+    cf = choices.astype(jnp.float32)
+    suffix = jnp.cumprod(cf[..., ::-1], axis=-1)[..., ::-1]
+    psi = suffix[..., 0]
+    stride = jnp.concatenate(
+        [suffix[..., 1:], jnp.ones_like(cf[..., :1])], axis=-1)
+    alive = jnp.any(app, axis=-1)
+    return BranchInfo(app=app, rank=rank, choices=choices, stride=stride,
+                      psi=psi, alive=alive)
+
+
+def packed_rule_table(info: BranchInfo,
+                      comp: CompiledSparseSNP) -> jnp.ndarray:
+    """``tab`` (..., m, R) int32: ``produce | consume << 16`` of the d-th
+    applicable rule of neuron μ at slot ``[..., μ, d]``, 0 where there is
+    none.  ``O(B·m·R²)`` per *config* (not per branch), built scatter-free:
+    static-index gathers pull each segment's ≤ R rules side by side, a tiny
+    cumsum ranks the applicable ones, and an unrolled R² select places each
+    at its rank slot (XLA scatters cost ~50x a gathered element on CPU; R
+    is small by construction).  The packing (bounds checked by
+    ``compile_system_sparse``) makes the hot per-branch fired-rule lookup a
+    single gather instead of one per attribute."""
+    n = comp.num_rules
+    m = comp.num_neurons
+    R = comp.rule_slots.shape[0]
+    batch = info.app.shape[:-1]
+    app = info.app.reshape(-1, n)
+    B = app.shape[0]
+    slots = comp.rule_slots                                  # (R,) arange
+    seg_idx = jnp.minimum(
+        comp.seg_start[:, None] + slots[None, :], n - 1)     # (m, R)
+    in_seg = slots[None, :] < comp.seg_count[:, None]        # (m, R)
+    packed = comp.produce | (comp.consume << 16)             # (n,)
+    packed_s = jnp.where(in_seg, jnp.take(packed, seg_idx, axis=0), 0)
+    app_s = jnp.take(
+        app, seg_idx.reshape(-1), axis=-1).reshape(B, m, R) & in_seg
+    # rank of slot j within its segment = #applicable among slots <= j, - 1
+    dd = jnp.cumsum(app_s.astype(jnp.int32), axis=-1) - 1    # (B, m, R)
+    cols = [
+        jnp.where(app_s & (dd == d), packed_s[None], 0).sum(axis=-1)
+        for d in range(R)
+    ]
+    return jnp.stack(cols, axis=-1).reshape(*batch, m, R)
+
+
+def _decode_digits(t: jnp.ndarray, info: BranchInfo) -> jnp.ndarray:
+    """Mixed-radix digit per (branch, neuron): ``(t // stride) % choices``
+    as (..., T, m) int32, computed in float32.
+
+    Integer division does not vectorize on CPU (and costs ~20x a float op);
+    f32 division is *exact* here: with ``j = floor(t/stride)``, a wrong
+    floor needs the true quotient within ulp(j)/2 ≤ 2^-23·j of an integer
+    from below, but it sits at least ``1/stride ≥ j/T`` away — impossible
+    for ``T < 2^23``.  Saturated (+inf) strides quotient to 0, matching the
+    dense path's clamped-int division.  Same argument for the modulus.
+    """
+    tf = t.astype(jnp.float32).reshape((1,) * (info.stride.ndim - 1) + (-1, 1))
+    s = info.stride[..., None, :]
+    c = info.choices.astype(jnp.float32)[..., None, :]
+    q = jnp.floor(tf / s)
+    return (q - c * jnp.floor(q / c)).astype(jnp.int32)
+
+
+def _fired_packed(digits: jnp.ndarray, tab: jnp.ndarray) -> jnp.ndarray:
+    """Fired-rule lookup ``tab[..., μ, digits[..., t, μ]]`` as (..., T, m).
+
+    ``R`` is small by construction, so an unrolled select beats a dynamic
+    per-element gather (~8x on CPU); the gather fallback covers rule-heavy
+    systems.  Digits are always < choices ≤ R, and slot 0 of an empty
+    neuron is 0 (no rule fires).
+    """
+    R = tab.shape[-1]
+    if R <= 8:
+        packed_f = jnp.zeros(digits.shape, jnp.int32)
+        for d in range(R):
+            packed_f = jnp.where(
+                digits == d, tab[..., None, :, d], packed_f)
+        return packed_f
+    batch = digits.shape[:-2]
+    T, m = digits.shape[-2:]
+    flat_b = int(np.prod(batch)) if batch else 1
+    offs = (jnp.arange(m, dtype=jnp.int32) * R).reshape(1, 1, m)
+    flat = (digits.reshape(flat_b, T, m) + offs).reshape(flat_b, T * m)
+    out = jnp.take_along_axis(tab.reshape(flat_b, m * R), flat, axis=-1)
+    return out.reshape(*batch, T, m)
+
+
+def sparse_next_configs(
+    config: jnp.ndarray, comp: CompiledSparseSNP, max_branches: int
+) -> StepOut:
+    """One synchronous SNP step on the sparse encoding.
+
+    Produces identical *valid* entries to :func:`next_configs` without ever
+    materializing the ``(..., T, n)`` one-hot spiking tensor or any
+    ``O(n·m)`` matrix:
+
+    1. decode the mixed-radix digit per (branch, neuron)     — (..., T, m);
+    2. one gather into the packed per-config rule table      -> the fired
+       rule's (produce, consume) per neuron;
+    3. contract over the ELL in-adjacency: a fired rule's row of ``M_Π`` is
+       ``-consume`` at its owner plus ``produce`` on the owner's
+       out-neighbors, so ``ΔC[j] = Σ_{i ∈ in(j)} produce_fired[i] -
+       consume_fired[j]`` — a ``K_in``-wide gather/segment-sum;
+    4. the environment emission is the fired produce at the output neuron.
+
+    All arithmetic is int32 (exact); agreement with the dense f32 matmul
+    holds for spike counts < 2^24 (DESIGN.md §2).
+    """
+    m = config.shape[-1]
+    batch = config.shape[:-1]
+    cfg = config.reshape(-1, m)
+    B = cfg.shape[0]
+    T = max_branches
+
+    info = sparse_branch_info(cfg, comp)
+    tab = packed_rule_table(info, comp)                      # (B, m, R)
+
+    t = jnp.arange(T, dtype=jnp.int32)
+    digits = _decode_digits(t, info)                         # (B, T, m)
+    packed_f = _fired_packed(digits, tab)                    # (B, T, m)
+    prod_f = packed_f & 0xFFFF
+    cons_f = packed_f >> 16
+
+    prod_pad = jnp.concatenate(
+        [prod_f, jnp.zeros((B, T, 1), jnp.int32)], axis=-1)  # (B, T, m+1)
+    delta = -cons_f
+    for kk in range(comp.in_idx.shape[1]):  # static K_in, unrolled
+        delta = delta + jnp.take(prod_pad, comp.in_idx[:, kk], axis=-1)
+
+    out = cfg[:, None, :] + delta
+    valid = (t[None, :].astype(jnp.float32) < info.psi[:, None]) \
+        & info.alive[:, None]
+    overflow = info.psi > float(T)
+    emissions = jnp.take(prod_pad, comp.out_neuron, axis=-1)
+    return StepOut(
+        configs=out.reshape(*batch, T, m),
+        valid=valid.reshape(*batch, T),
+        emissions=emissions.reshape(*batch, T),
+        overflow=overflow.reshape(batch),
+        spiking=None,
+    )

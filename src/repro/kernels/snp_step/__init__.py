@@ -1,11 +1,22 @@
-"""Fused SNP transition kernel (Pallas TPU) — decode + S·M + C in VMEM.
+"""Fused SNP transition kernels (Pallas TPU).
 
-Reaches production consumers through
-:class:`repro.core.backend.PallasBackend` (``backend="pallas"``); keep the
-raw entry points here for kernel tests and benchmarks."""
+Two variants behind the step-backend registry:
+
+* dense — decode + S·M + C in VMEM, streaming the ``(n, m)`` matrix
+  through the MXU (:class:`repro.core.backend.PallasBackend`,
+  ``backend="pallas"``);
+* sparse — decode + selection lookup + ELL in-adjacency gather, work
+  proportional to ``nnz(M_Π)``
+  (:class:`repro.core.backend.SparsePallasBackend`,
+  ``backend="sparse_pallas"``).
+
+Keep the raw entry points here for kernel tests and benchmarks."""
 
 from .kernel import snp_step_pallas
 from .ops import snp_step
 from .ref import snp_step_ref
+from .sparse_kernel import snp_step_sparse_pallas
+from .sparse_ops import snp_step_sparse
 
-__all__ = ["snp_step", "snp_step_pallas", "snp_step_ref"]
+__all__ = ["snp_step", "snp_step_pallas", "snp_step_ref",
+           "snp_step_sparse", "snp_step_sparse_pallas"]

@@ -33,6 +33,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 __all__ = ["snp_step_pallas"]
 
 
@@ -155,7 +159,7 @@ def snp_step_pallas(
         scratch_shapes=[
             pltpu.VMEM((block_b, block_t, m), jnp.float32),
         ],
-        compiler_params=None if interpret else pltpu.CompilerParams(
+        compiler_params=None if interpret else _CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,165 @@
+"""Fused *sparse* SNP transition kernel (Pallas, TPU).
+
+The dense kernel (:mod:`.kernel`) streams the ``(n, m)`` matrix through the
+MXU; this kernel never sees an ``O(n·m)`` operand.  For a tile of
+configurations and branch indices it computes, entirely in VMEM,
+
+    digits[b, t, μ]  = (t // stride[b, μ]) % choices[b, μ]       (VPU, f32 —
+                       exact for T < 2^23, see semantics._decode_digits)
+    packed[b, t, μ]  = tab[b, μ, digits[b, t, μ]]                (unrolled
+                       select over the R rule slots — no dynamic gather)
+    ΔC[b, t, j]      = Σ_{k < K_in} produce[b, t, in_idx[j, k]]
+                       - consume[b, t, j]                        (gather/sum)
+    C'[b, t, :]      = C[b, :] + ΔC[b, t, :]
+
+where ``tab`` is the per-config packed rule table (``produce | consume <<
+16`` of the d-th applicable rule per neuron, 0 where none — built by the
+ops wrapper via :func:`repro.core.semantics.packed_rule_table`,
+``O(B·m·R)``) and ``in_idx`` is the ELL-packed synapse in-adjacency
+(DESIGN.md §3).  The environment emission is the fired produce at the
+output neuron.  Work per (b, t) is ``O(m·(1 + K_in))`` — proportional to
+``nnz(M_Π)``, not ``n·m``.
+
+Grid: ``(B/bb, T/bt)`` with the whole neuron axis resident per block; the
+VMEM working set is ``O(bb·bt·m)``, so the ops wrapper shrinks ``bb`` for
+very wide systems.  All arithmetic is int32 (exact).  TPU is the
+compilation *target*; correctness is validated in ``interpret=True`` mode
+against :func:`repro.core.semantics.sparse_next_configs` (the in-kernel
+gathers lower to Mosaic dynamic-gathers on real hardware — revalidate
+bit-for-bit on a TPU before flipping ``interpret=False`` in production,
+see ROADMAP).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
+__all__ = ["snp_step_sparse_pallas"]
+
+
+def _kernel(
+    # inputs (blocks)
+    c_ref,        # (bb, m)     i32 — configurations
+    stride_ref,   # (bb, m)     f32 — mixed-radix strides (may be +inf)
+    choices_ref,  # (bb, m)     i32 — per-neuron choice counts (>= 1)
+    psi_ref,      # (bb, 1)     f32 — number of valid branches
+    tab_ref,      # (bb, m, R)  i32 — packed (produce | consume << 16)
+    inidx_ref,    # (m, Kin)    i32 — ELL in-adjacency, pad m
+    outn_ref,     # (1,)        i32 — output neuron (m if none)
+    # outputs (blocks)
+    out_ref,      # (bb, bt, m) i32 — successor configs
+    valid_ref,    # (bb, bt)    i32
+    emis_ref,     # (bb, bt)    i32
+):
+    j = pl.program_id(1)   # branch-tile index
+    bb, bt, m = out_ref.shape
+    R = tab_ref.shape[2]
+    Kin = inidx_ref.shape[1]
+
+    # Branch ids for this tile; decode one mixed-radix digit per neuron
+    # (f32 division, exact for T < 2^23 — semantics._decode_digits).
+    t = j * bt + jax.lax.broadcasted_iota(jnp.int32, (1, bt, 1), 1)
+    tf = t.astype(jnp.float32)
+    stride = stride_ref[...].reshape(bb, 1, m)
+    choices = choices_ref[...].reshape(bb, 1, m).astype(jnp.float32)
+    q = jnp.floor(tf / stride)
+    digits = (q - choices * jnp.floor(q / choices)).astype(jnp.int32)
+
+    # Fired-rule actions: unrolled select over the R rule slots.
+    tab = tab_ref[...]
+    packed_f = jnp.zeros((bb, bt, m), jnp.int32)
+    for d in range(R):  # static R, unrolled
+        packed_f = jnp.where(
+            digits == d, tab[:, :, d].reshape(bb, 1, m), packed_f)
+    prod_f = packed_f & 0xFFFF
+    cons_f = packed_f >> 16
+
+    # ΔC via the in-adjacency: padding entries (index m) hit the appended
+    # zero column, contributing nothing.
+    prod_pad = jnp.concatenate(
+        [prod_f, jnp.zeros((bb, bt, 1), jnp.int32)], axis=-1)
+    in_idx = inidx_ref[...]
+    delta = -cons_f
+    for k in range(Kin):  # static K_in, unrolled
+        delta = delta + jnp.take(prod_pad, in_idx[:, k], axis=-1)
+
+    out_ref[...] = c_ref[...].reshape(bb, 1, m) + delta
+    tf = t.reshape(1, bt).astype(jnp.float32)
+    valid_ref[...] = (tf < psi_ref[...]).astype(jnp.int32)
+    emis_ref[...] = jnp.take(prod_pad, outn_ref[0], axis=-1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_branches", "block_b", "block_t", "interpret"),
+)
+def snp_step_sparse_pallas(
+    configs: jnp.ndarray,    # (B, m) int32, B % block_b == 0
+    stride: jnp.ndarray,     # (B, m) float32 (saturating, may be +inf)
+    choices: jnp.ndarray,    # (B, m) int32
+    psi: jnp.ndarray,        # (B,) float32
+    tab: jnp.ndarray,        # (B, m, R) int32 packed rule table
+    in_idx: jnp.ndarray,     # (m, Kin) int32
+    out_neuron: jnp.ndarray,  # () int32 — m if no output neuron
+    *,
+    max_branches: int,
+    block_b: int = 8,
+    block_t: int = 32,
+    interpret: bool = True,
+):
+    """Raw tiled kernel call.  Use :mod:`..sparse_ops` for the padded
+    public API."""
+    B, m = configs.shape
+    R = tab.shape[2]
+    Kin = in_idx.shape[1]
+    T = max_branches
+    assert B % block_b == 0 and T % block_t == 0, (
+        "sparse_ops.py must pad shapes to block multiples"
+    )
+    grid = (B // block_b, T // block_t)
+
+    out, valid, emis = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, m, R), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((m, Kin), lambda i, j: (0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, block_t, m), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
+            pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, m), jnp.int32),
+            jax.ShapeDtypeStruct((B, T), jnp.int32),
+            jax.ShapeDtypeStruct((B, T), jnp.int32),
+        ],
+        compiler_params=None if interpret else _CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(
+        configs.astype(jnp.int32),
+        stride.astype(jnp.float32),
+        choices.astype(jnp.int32),
+        psi.reshape(B, 1).astype(jnp.float32),
+        tab.astype(jnp.int32),
+        in_idx.astype(jnp.int32),
+        out_neuron.reshape(1).astype(jnp.int32),
+    )
+    return out, valid.astype(bool), emis

@@ -1,0 +1,83 @@
+"""Public jit'd wrapper around the fused sparse SNP transition kernel.
+
+Mirrors :mod:`.ops` for the dense kernel: computes the cheap ``O(B·m·R)``
+per-config bookkeeping with the reference sparse semantics (applicability,
+ranks, radix strides, and the packed fired-rule table the kernel gathers
+from), pads the batch/branch dimensions to block multiples (padding rows
+decode digit 0 into all-zero tables: no valid branches, no contribution),
+and unpads/masks the results.
+
+On CPU the kernel runs in interpret mode; on TPU pass ``interpret=False``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.matrix import CompiledSparseSNP
+from repro.core.semantics import packed_rule_table, sparse_branch_info
+
+from .sparse_kernel import snp_step_sparse_pallas
+
+__all__ = ["snp_step_sparse"]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_branches", "block_b", "block_t", "interpret"),
+)
+def snp_step_sparse(
+    configs: jnp.ndarray,   # (B, m) int32
+    comp: CompiledSparseSNP,
+    *,
+    max_branches: int,
+    block_b: int = 8,
+    block_t: int = 32,
+    interpret: bool = True,
+):
+    """Fused sparse successor expansion: returns (successors (B,T,m) int32,
+    valid (B,T) bool, emissions (B,T) int32, overflow (B,) bool).
+
+    Bit-identical to :func:`repro.core.semantics.sparse_next_configs` (and
+    hence to the dense oracle on valid entries for spike counts < 2^24).
+    """
+    B, m = configs.shape
+    T = max_branches
+
+    block_b = min(block_b, max(B, 1))
+    block_t = min(block_t, T)
+
+    info = sparse_branch_info(configs, comp)
+    tab = packed_rule_table(info, comp)                      # (B, m, R)
+
+    Bp, Tp = _round_up(B, block_b), _round_up(T, block_t)
+
+    def pad_rows(x, value=0):
+        pads = [(0, Bp - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, pads, constant_values=value)
+
+    out, valid, emis = snp_step_sparse_pallas(
+        pad_rows(configs),
+        # padded configs: stride 1 / choices 1 / psi 0 -> no valid branches
+        pad_rows(info.stride, value=1),
+        pad_rows(info.choices.astype(jnp.int32), value=1),
+        pad_rows(info.psi),
+        pad_rows(tab),
+        comp.in_idx,
+        comp.out_neuron,
+        max_branches=Tp,
+        block_b=block_b, block_t=block_t,
+        interpret=interpret,
+    )
+    out = out[:B, :T]
+    valid = valid[:B, :T] & info.alive[:, None]
+    emis = emis[:B, :T]
+    overflow = info.psi > float(T)
+    return out, valid, emis, overflow

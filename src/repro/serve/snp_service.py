@@ -33,7 +33,7 @@ import numpy as np
 
 from repro.core.backend import BackendLike, get_backend
 from repro.core.engine import run_traces
-from repro.core.matrix import CompiledSNP, compile_system
+from repro.core.matrix import CompiledAny, is_compiled
 from repro.core.system import SNPSystem
 
 __all__ = ["TraceRequest", "TraceResult", "SNPTraceService"]
@@ -47,7 +47,7 @@ def _round_up(x: int, mult: int) -> int:
 class TraceRequest:
     """One trajectory request: which system, how long, how to branch."""
 
-    system: SNPSystem | CompiledSNP
+    system: SNPSystem | CompiledAny
     steps: int
     policy: str = "first"       # "first" | "random"
     seed: int = 0
@@ -94,10 +94,12 @@ class SNPTraceService:
         self.num_traces_served = 0
         self._tickets = itertools.count()
         self._pending: Dict[int, TraceRequest] = {}
-        self._comp_of: Dict[int, CompiledSNP] = {}   # ticket -> compiled
+        self._comp_of: Dict[int, CompiledAny] = {}   # ticket -> compiled
         # compile memoization, keyed by SNPSystem (structural equality);
-        # bounded so a long-lived service can't grow without limit
-        self._compile_cache: Dict[SNPSystem, CompiledSNP] = {}
+        # bounded so a long-lived service can't grow without limit.  The
+        # service backend is fixed at construction, so one cache per
+        # service is one cache per encoding.
+        self._compile_cache: Dict[SNPSystem, CompiledAny] = {}
         self._compile_cache_cap = 64
 
     # -- submission --------------------------------------------------------
@@ -109,14 +111,15 @@ class SNPTraceService:
                 f"steps {request.steps} exceeds service max_steps "
                 f"{self.max_steps}")
         comp = request.system
-        if not isinstance(comp, CompiledSNP):
+        if not is_compiled(comp):
             # SNPSystem is a frozen dataclass: equal systems (even distinct
-            # objects) share one compilation and one batch group.
+            # objects) share one compilation and one batch group.  The
+            # backend owns the lowering (dense vs. sparse encoding).
             if request.system not in self._compile_cache:
                 while len(self._compile_cache) >= self._compile_cache_cap:
                     self._compile_cache.pop(next(iter(self._compile_cache)))
                 self._compile_cache[request.system] = \
-                    compile_system(request.system)
+                    self.backend.compile(request.system)
             comp = self._compile_cache[request.system]
         ticket = next(self._tickets)
         self._pending[ticket] = request
@@ -153,7 +156,7 @@ class SNPTraceService:
         self._comp_of.clear()
         return results
 
-    def _flush(self, comp: CompiledSNP, policy: str, max_branches: int,
+    def _flush(self, comp: CompiledAny, policy: str, max_branches: int,
                tickets: List[int]) -> Dict[int, TraceResult]:
         reqs = [self._pending[t] for t in tickets]
         # submit() enforces steps <= max_steps, so no clamp is needed here

@@ -1,6 +1,13 @@
-"""Step-backend layer tests: registry, ref/pallas equivalence end-to-end
+"""Step-backend layer tests: registry, cross-backend equivalence end-to-end
 through every consumer (explore, run_trace, run_traces), batched trace
-serving, and the snp_service batching front end."""
+serving, and the snp_service batching front end.
+
+Equivalence tests are **registry-driven**: they parametrize over
+``available_backends()`` with ``"ref"`` as the oracle, so any newly
+registered backend (sparse today, whatever comes next) is oracle-checked
+through every consumer with zero test changes.  Each backend compiles its
+own encoding via ``backend.compile`` — exactly the consumer code path.
+"""
 
 import numpy as np
 import pytest
@@ -11,7 +18,8 @@ import jax.numpy as jnp
 from repro.core import (available_backends, compile_system, explore,
                         get_backend, paper_pi, register_backend, run_trace,
                         run_traces)
-from repro.core.backend import PallasBackend, RefBackend
+from repro.core.backend import (PallasBackend, RefBackend, SparseBackend,
+                                SparsePallasBackend)
 from repro.core.generators import nd_chain, random_system
 from repro.serve.snp_service import SNPTraceService, TraceRequest
 
@@ -21,15 +29,20 @@ SYSTEMS = {
     "random-16": (random_system(16, 2, 0.2, seed=4), 32),
 }
 
+NON_REF = [b for b in available_backends() if b != "ref"]
+
 
 # ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 
 def test_registry_contents_and_lookup():
-    assert {"ref", "pallas"} <= set(available_backends())
+    assert {"ref", "pallas", "sparse", "sparse_pallas"} \
+        <= set(available_backends())
     assert get_backend("ref") == RefBackend()
     assert get_backend("pallas").name == "pallas"
+    assert get_backend("sparse") == SparseBackend()
+    assert get_backend("sparse_pallas").name == "sparse_pallas"
     # instances pass through unchanged
     be = PallasBackend(block_t=16)
     assert get_backend(be) is be
@@ -41,17 +54,31 @@ def test_registry_contents_and_lookup():
 
 def test_backend_metadata():
     ref, pal = get_backend("ref"), get_backend("pallas")
-    assert ref.supports_nd_batch and pal.supports_nd_batch
-    assert ref.pad_multiple == 1
+    sp, spp = get_backend("sparse"), get_backend("sparse_pallas")
+    for b in (ref, pal, sp, spp):
+        assert b.supports_nd_batch
+    assert ref.pad_multiple == 1 and sp.pad_multiple == 1
     assert pal.pad_multiple == pal.block_b
-    assert ref.materializes_spiking and not pal.materializes_spiking
+    assert spp.pad_multiple == spp.block_b
+    assert ref.materializes_spiking
+    assert not any(b.materializes_spiking for b in (pal, sp, spp))
 
 
-def test_backends_agree_on_step_out():
+def test_sparse_backends_reject_dense_compilation():
     comp = compile_system(paper_pi(True))
+    cfgs = jnp.asarray([[2, 1, 1]], jnp.int32)
+    for name in ("sparse", "sparse_pallas"):
+        with pytest.raises(TypeError, match="CompiledSparseSNP"):
+            get_backend(name).expand(cfgs, comp, 8)
+
+
+@pytest.mark.parametrize("name", NON_REF)
+def test_backends_agree_on_step_out(name):
+    system = paper_pi(True)
     cfgs = jnp.asarray([[2, 1, 1], [2, 1, 2], [0, 0, 0]], jnp.int32)
-    a = get_backend("ref").expand(cfgs, comp, 8)
-    b = get_backend("pallas").expand(cfgs, comp, 8)
+    ref, be = get_backend("ref"), get_backend(name)
+    a = ref.expand(cfgs, ref.compile(system), 8)
+    b = be.expand(cfgs, be.compile(system), 8)
     va, vb = np.asarray(a.valid), np.asarray(b.valid)
     np.testing.assert_array_equal(va, vb)
     np.testing.assert_array_equal(np.asarray(a.overflow), np.asarray(b.overflow))
@@ -61,49 +88,49 @@ def test_backends_agree_on_step_out():
     np.testing.assert_array_equal(
         np.where(va, np.asarray(a.emissions), 0),
         np.where(vb, np.asarray(b.emissions), 0))
-    assert b.spiking is None  # pallas never materializes S
+    assert b.spiking is None  # only ref materializes S
 
 
 # ---------------------------------------------------------------------------
-# equivalence through the consumers
+# equivalence through the consumers (registry-driven)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("backend", NON_REF)
 @pytest.mark.parametrize("name", sorted(SYSTEMS))
-def test_explore_backend_equivalence(name):
+def test_explore_backend_equivalence(name, backend):
     system, T = SYSTEMS[name]
-    comp = compile_system(system)
     kw = dict(max_steps=6, frontier_cap=128, visited_cap=1024, max_branches=T)
-    ref = explore(comp, backend="ref", **kw)
-    pal = explore(comp, backend="pallas", **kw)
+    ref = explore(system, backend="ref", **kw)
+    got = explore(system, backend=backend, **kw)
     # identical archives *in discovery order*, identical flags
-    np.testing.assert_array_equal(ref.configs, pal.configs)
-    assert ref.num_discovered == pal.num_discovered
-    assert ref.steps == pal.steps
+    np.testing.assert_array_equal(ref.configs, got.configs)
+    assert ref.num_discovered == got.num_discovered
+    assert ref.steps == got.steps
     assert (ref.branch_overflow, ref.frontier_overflow, ref.visited_overflow) \
-        == (pal.branch_overflow, pal.frontier_overflow, pal.visited_overflow)
+        == (got.branch_overflow, got.frontier_overflow, got.visited_overflow)
 
 
-@pytest.mark.parametrize("name", sorted(SYSTEMS))
+@pytest.mark.parametrize("backend", NON_REF)
 @pytest.mark.parametrize("policy", ["first", "random"])
-def test_run_trace_backend_equivalence(name, policy):
-    system, T = SYSTEMS[name]
-    comp = compile_system(system)
-    ref = run_trace(comp, steps=10, policy=policy, seed=11, max_branches=T,
-                    backend="ref")
-    pal = run_trace(comp, steps=10, policy=policy, seed=11, max_branches=T,
-                    backend="pallas")
-    for a, b in zip(ref, pal):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+def test_run_trace_backend_equivalence(policy, backend):
+    for name, (system, T) in sorted(SYSTEMS.items()):
+        ref = run_trace(system, steps=10, policy=policy, seed=11,
+                        max_branches=T, backend="ref")
+        got = run_trace(system, steps=10, policy=policy, seed=11,
+                        max_branches=T, backend=backend)
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_explore_accepts_backend_instance():
-    comp = compile_system(paper_pi(True))
-    be = PallasBackend(block_b=4, block_t=8, block_n=8)
-    res = explore(comp, max_steps=4, frontier_cap=32, visited_cap=256,
-                  max_branches=16, backend=be)
-    ref = explore(comp, max_steps=4, frontier_cap=32, visited_cap=256,
-                  max_branches=16)
-    np.testing.assert_array_equal(res.configs, ref.configs)
+    system = paper_pi(True)
+    for be in (PallasBackend(block_b=4, block_t=8, block_n=8),
+               SparsePallasBackend(block_b=4, block_t=8)):
+        res = explore(system, max_steps=4, frontier_cap=32, visited_cap=256,
+                      max_branches=16, backend=be)
+        ref = explore(system, max_steps=4, frontier_cap=32, visited_cap=256,
+                      max_branches=16)
+        np.testing.assert_array_equal(res.configs, ref.configs)
 
 
 def test_explore_loop_is_on_device_while_loop():
@@ -137,14 +164,15 @@ def test_run_traces_matches_per_seed_run_trace(policy):
         np.testing.assert_array_equal(np.asarray(alive[i]), np.asarray(a))
 
 
-def test_run_traces_backend_equivalence():
-    comp = compile_system(nd_chain(4))
+@pytest.mark.parametrize("backend", NON_REF)
+def test_run_traces_backend_equivalence(backend):
+    system = nd_chain(4)
     seeds = list(range(6))
-    ref = run_traces(comp, steps=8, seeds=seeds, policy="random",
+    ref = run_traces(system, steps=8, seeds=seeds, policy="random",
                      max_branches=32, backend="ref")
-    pal = run_traces(comp, steps=8, seeds=seeds, policy="random",
-                     max_branches=32, backend="pallas")
-    for a, b in zip(ref, pal):
+    got = run_traces(system, steps=8, seeds=seeds, policy="random",
+                     max_branches=32, backend=backend)
+    for a, b in zip(ref, got):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -215,6 +243,16 @@ def test_service_chunks_oversized_groups_and_pads_short_ones():
         c, _, _ = run_trace(pi, steps=3, policy="random", seed=s)
         np.testing.assert_array_equal(results[tickets[s]].configs,
                                       np.asarray(c))
+
+
+def test_service_with_sparse_backend_matches_ref_service():
+    svc = SNPTraceService(batch_size=4, step_bucket=4, backend="sparse")
+    pi = paper_pi(True)
+    t = svc.submit(TraceRequest(pi, steps=6, policy="random", seed=3))
+    got = svc.drain()[t]
+    c, e, a = run_trace(pi, steps=6, policy="random", seed=3)
+    np.testing.assert_array_equal(got.configs, np.asarray(c))
+    np.testing.assert_array_equal(got.emissions, np.asarray(e))
 
 
 def test_service_validates_requests():

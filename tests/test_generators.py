@@ -82,3 +82,30 @@ def test_scaled_pi_is_disjoint_product():
     assert r1.num_discovered < r2.num_discovered <= r1.num_discovered ** 2
     for row in r2.configs:
         assert tuple(row[:m0]) in factor and tuple(row[m0:]) in factor
+
+
+def test_sparse_topology_generators_are_bounded_degree():
+    from repro.core.generators import power_law, ring_lattice, torus
+
+    rl = ring_lattice(64, degree=5, seed=1)
+    assert all(rl.out_degree(i) == 5 for i in range(64))
+    tor = torus(4, 6, seed=1)
+    assert tor.num_neurons == 24
+    assert all(tor.out_degree(i) == 4 for i in range(24))
+    pl_ = power_law(80, attach=3, seed=1, max_in=12)
+    in_deg = [0] * 80
+    for _, j in pl_.synapses:
+        in_deg[j] += 1
+    assert max(in_deg) <= 12
+    assert all(pl_.out_degree(i) == 3 for i in range(4, 80))
+
+
+def test_power_law_terminates_under_tight_in_degree_cap():
+    """max_in close to attach used to spin forever in rejection sampling;
+    it must now either generate (cap honored) or fail fast."""
+    from repro.core.generators import power_law
+
+    with pytest.raises(ValueError, match="max_in"):
+        power_law(12, attach=4, max_in=4)
+    with pytest.raises(ValueError, match="attach"):
+        power_law(10, attach=3, max_in=2)   # guard: max_in < attach
