@@ -1,8 +1,10 @@
 """Benchmark harness.  One module per paper table/figure:
 
-* bench_snp  — transition-step throughput vs system size (paper §5 timing)
-* bench_tree — full computation-tree exploration (paper §5 run / Fig. 4)
-* bench_lm   — LM substrate step times (framework baseline)
+* bench_snp   — transition-step throughput vs system size (paper §5 timing)
+* bench_tree  — full computation-tree exploration (paper §5 run / Fig. 4)
+* bench_serve — trace-serving front end: sync/async/mesh (EXPERIMENTS.md
+  §Serving)
+* bench_lm    — LM substrate step times (framework baseline)
 
 Prints ``name,us_per_call,derived`` CSV.  Roofline-based TPU projections
 are produced by the dry-run (src/repro/launch/dryrun.py), not here.
@@ -12,10 +14,10 @@ import sys
 
 
 def main() -> None:
-    from . import bench_lm, bench_paper_mode, bench_snp, bench_tree
+    from . import bench_lm, bench_paper_mode, bench_serve, bench_snp, bench_tree
 
     print("name,us_per_call,derived")
-    for mod in (bench_snp, bench_tree, bench_paper_mode, bench_lm):
+    for mod in (bench_snp, bench_tree, bench_serve, bench_paper_mode, bench_lm):
         for name, us, derived in mod.rows():
             print(f"{name},{us:.1f},{derived}")
             sys.stdout.flush()

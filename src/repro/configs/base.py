@@ -79,7 +79,7 @@ class ArchConfig:
     schedule: str = "cosine"        # cosine | wsd (minicpm)
 
     # which attention shapes this arch supports (long_500k needs
-    # sub-quadratic state — DESIGN.md §4)
+    # sub-quadratic state — DESIGN.md §5)
     supports_long_context: bool = False
 
     def __post_init__(self):
@@ -183,7 +183,7 @@ def shape_for(arch: "ArchConfig", shape_name: str) -> ShapeSpec:
     if shape_name == "long_500k" and not arch.supports_long_context:
         raise ValueError(
             f"{arch.name} is pure full-attention; long_500k is skipped "
-            "(DESIGN.md §4)")
+            "(DESIGN.md §5)")
     return spec
 
 

@@ -16,7 +16,9 @@ Public API:
 * :func:`repro.core.engine.explore` — computation-tree BFS (paper Alg. 1)
   as one on-device ``lax.while_loop``.
 * :func:`repro.core.engine.run_traces` — batched trajectory serving.
-* :mod:`repro.core.distributed` — multi-chip exploration (shard_map).
+* :mod:`repro.core.distributed` — multi-chip workloads (shard_map):
+  ``explore_distributed`` (hash-partitioned BFS) and
+  ``run_traces_distributed`` (data-parallel trace serving, DESIGN.md §4).
 * :mod:`repro.core.generators` — synthetic system families for scaling.
 """
 

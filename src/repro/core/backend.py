@@ -92,7 +92,28 @@ class StepBackend(Protocol):
 
     def compile(self, system: SNPSystem) -> CompiledAny:
         """Lower ``system`` to the encoding this backend's ``expand``
-        consumes (host-side, not traceable)."""
+        consumes.  The contract every implementation must honor:
+
+        * **host-side, not traceable** — runs numpy/Python freely; never
+          called inside ``jit``/``scan``/``shard_map``.
+        * **returns a compiled encoding** — an object for which
+          :func:`repro.core.matrix.is_compiled` is True, and whose arrays
+          form a jax pytree (consumers pass it through ``jit`` and
+          ``shard_map`` as data, replicated ``P()`` on meshes).
+        * **deterministic** — structurally equal systems (``SNPSystem`` is
+          a frozen dataclass) must lower to semantically identical
+          encodings.  Consumers rely on this to memoize: every entry point
+          compiles at most once per call, and
+          :class:`~repro.serve.snp_service.SNPTraceService` keeps a
+          FIFO-bounded ``{system: compiled}`` cache keyed by structural
+          equality, so ``compile`` may be arbitrarily expensive but must
+          not be stateful.
+        * **owns the encoding choice** — dense vs. sparse is invisible to
+          consumers; ``expand`` must reject a foreign encoding with
+          ``TypeError`` (see ``_require_sparse``) rather than
+          mis-interpret it.  Pre-compiled objects passed by callers skip
+          ``compile`` entirely, so the check lives in ``expand``.
+        """
         ...
 
     def expand(self, configs: jnp.ndarray, comp: CompiledAny,

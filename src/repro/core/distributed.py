@@ -1,7 +1,15 @@
-"""Multi-chip SNP computation-tree exploration (shard_map).
+"""Multi-chip SNP workloads (shard_map): tree exploration + trace serving.
+
+Two entry points share the mesh plumbing:
+
+* :func:`explore_distributed` — hash-partitioned BFS over the computation
+  tree (frontier and visited set sharded by config hash);
+* :func:`run_traces_distributed` — data-parallel batched trajectory
+  serving: the batch axis of :func:`repro.core.engine.run_traces` sharded
+  over the mesh, bit-identical to the single-device path (DESIGN.md §4).
 
 The paper runs on one GPU; at fleet scale both the frontier and the visited
-set must shard.  The scheme (DESIGN.md §2):
+set must shard.  The exploration scheme (DESIGN.md §2):
 
 * **hash ownership** — configuration with hash ``h`` is owned by device
   ``h mod n_dev``.  Ownership decides (a) which visited-shard a config is
@@ -29,7 +37,7 @@ devices to the frontier partition).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,12 +50,23 @@ except ImportError:                   # pragma: no cover - older jax
     from jax.experimental.shard_map import shard_map
 
 from .backend import BackendLike, get_backend
-from .engine import ExploreResult
+from .engine import ExploreResult, _traces_scan
 from .hashing import SENTINEL, config_hash
 from .matrix import CompiledAny, is_compiled
 from .system import SNPSystem
 
-__all__ = ["explore_distributed"]
+__all__ = ["explore_distributed", "run_traces_distributed"]
+
+
+def _flat_mesh(mesh: Optional[Mesh]) -> Tuple[Mesh, str]:
+    """Resolve ``mesh`` to a 1-D mesh + axis name, flattening N-d meshes
+    (SNP serving and exploration are pure data parallelism, so every mesh
+    axis contributes its devices to the one batch/frontier axis)."""
+    if mesh is None:
+        return Mesh(np.array(jax.devices()), ("x",)), "x"
+    if len(mesh.axis_names) == 1:
+        return mesh, mesh.axis_names[0]
+    return Mesh(mesh.devices.reshape(-1), ("x",)), "x"
 
 
 def _device_step(comp, frontier, frontier_valid, visited_hi, visited_lo,
@@ -168,17 +187,7 @@ def explore_distributed(
     serves the expansion on every chip with no changes here."""
     be = get_backend(backend)
     comp = system if is_compiled(system) else be.compile(system)
-    if mesh is None:
-        devs = np.array(jax.devices())
-        mesh = Mesh(devs, ("x",))
-        axis = "x"
-    else:
-        axis = mesh.axis_names[0] if len(mesh.axis_names) == 1 else None
-        if axis is None:
-            # flatten all axes of an N-d mesh into one exploration axis
-            devs = mesh.devices.reshape(-1)
-            mesh = Mesh(devs, ("x",))
-            axis = "x"
+    mesh, axis = _flat_mesh(mesh)
     ndev = mesh.devices.size
     m = comp.num_neurons
     F, V, T = frontier_cap, visited_cap, max_branches
@@ -256,3 +265,72 @@ def explore_distributed(
         frontier_overflow=bool(flags[1]),
         visited_overflow=bool(flags[2]),
     )
+
+
+# ---------------------------------------------------------------------------
+# Distributed trace serving: data-parallel run_traces over the mesh
+# ---------------------------------------------------------------------------
+
+
+def run_traces_distributed(
+    system: SNPSystem | CompiledAny, *, steps: int,
+    seeds: Sequence[int] | np.ndarray | jnp.ndarray,
+    policy: str = "first", max_branches: int = 64,
+    backend: BackendLike = "ref",
+    mesh: Optional[Mesh] = None,
+):
+    """Mesh-sharded :func:`repro.core.engine.run_traces` (DESIGN.md §4).
+
+    Trajectories are independent, so serving a batch over ``ndev`` devices
+    is pure data parallelism: the batch axis is sharded over the (flattened)
+    mesh, each device runs the same per-shard ``lax.scan``, and no
+    collectives are needed.  Per-trace PRNG keys mean trace ``b`` depends
+    only on ``seeds[b]``, so the result is **bit-identical** to the
+    single-device :func:`~repro.core.engine.run_traces` — padding the batch
+    up to a mesh multiple (with seed-0 dummies, sliced off on return) is
+    therefore free.
+
+    Returns ``(configs (B, steps, m), emissions (B, steps),
+    alive (B, steps))`` with ``B = len(seeds)``, exactly like the
+    single-device path.
+    """
+    if policy not in ("first", "random"):
+        raise ValueError(f"unknown policy {policy!r}")
+    be = get_backend(backend)
+    comp = system if is_compiled(system) else be.compile(system)
+    seeds = np.asarray(seeds, np.uint32)
+    if seeds.ndim != 1:
+        raise ValueError(f"seeds must be 1-D, got shape {seeds.shape}")
+    mesh, axis = _flat_mesh(mesh)
+    ndev = mesh.devices.size
+
+    B = seeds.shape[0]
+    Bp = ((max(B, 1) + ndev - 1) // ndev) * ndev
+    padded = np.zeros((Bp,), np.uint32)
+    padded[:B] = seeds
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(padded))     # (Bp, 2)
+    c0s = jnp.broadcast_to(comp.init_config,
+                           (Bp,) + comp.init_config.shape)       # (Bp, m)
+
+    fn = _traces_shard_fn(mesh, axis, steps, max_branches, policy, be)
+    cfgs, emis, alive = fn(comp, c0s, keys)
+    return cfgs[:B], emis[:B], alive[:B]
+
+
+@functools.lru_cache(maxsize=128)
+def _traces_shard_fn(mesh, axis, steps, max_branches, policy, backend):
+    """One jitted shard_map per (mesh, statics): meshes compare by value,
+    so a service calling with an equal mesh every flush reuses the
+    executable instead of re-tracing per call."""
+    return jax.jit(
+        shard_map(
+            functools.partial(_traces_scan, steps=steps,
+                              max_branches=max_branches, policy=policy,
+                              backend=backend),
+            mesh=mesh,
+            in_specs=(P(), P(axis), P(axis)),
+            out_specs=(P(axis), P(axis), P(axis)),
+            # same reasoning as explore_distributed: pallas_call has no
+            # replication rule, and every output spec is explicit anyway
+            check_rep=False,
+        ))

@@ -31,8 +31,12 @@ overflow conditions are detected and reported, never silently dropped:
   exploration stays sound, only the "discovered" count may double-count;
 * ``visited_overflow``  — visited set is full; same soundness argument.
 
-The multi-chip version (hash-partitioned visited set, all_to_all exchange)
-lives in :mod:`repro.core.distributed`.
+The multi-chip versions live in :mod:`repro.core.distributed`:
+hash-partitioned BFS (``explore_distributed``) and data-parallel batched
+trace serving (``run_traces_distributed``, bit-identical to
+:func:`run_traces` — DESIGN.md §4).  The serving front end over
+:func:`run_traces` (request batching, async futures drain) is
+:class:`repro.serve.snp_service.SNPTraceService`.
 """
 
 from __future__ import annotations
@@ -319,7 +323,10 @@ def emission_gaps(
 
 
 # ---------------------------------------------------------------------------
-# Trace serving: single path and batched paths
+# Trace serving: the batched scan and its single-path wrapper.  The batched
+# path (`run_traces`) is the serving primitive; `run_trace` is a B=1 view of
+# it, and `core.distributed.run_traces_distributed` shards its batch axis
+# over a mesh (both bit-identical by per-trace PRNG keys).
 # ---------------------------------------------------------------------------
 
 

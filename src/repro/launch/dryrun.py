@@ -251,7 +251,7 @@ def main():
         for shape in shapes:
             if shape == "long_500k" and not cfg.supports_long_context:
                 print(f"[dryrun] {name:24s} long_500k    SKIP "
-                      "(pure full attention, DESIGN.md §4)", flush=True)
+                      "(pure full attention, DESIGN.md §5)", flush=True)
                 continue
             for multi in meshes:
                 try:

@@ -1,10 +1,15 @@
-"""Batched serving driver: prefill a request batch, stream decode steps.
+"""Batched serving drivers: the LM path (prefill + streamed decode) and the
+SNP trace path (mesh-backed async service).
 
-CPU-runnable with --smoke; on a pod the same code path serves the full
-config with sequence-sharded KV caches.
+CPU-runnable with --smoke; on a pod the same code paths serve the full
+config with sequence-sharded KV caches (LM) or the whole mesh as one
+data-parallel trace axis (SNP, DESIGN.md §4).
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
         --batch 4 --prompt-len 64 --gen 32
+
+    PYTHONPATH=src python -m repro.launch.serve --snp \
+        --batch 64 --requests 256 --gen 32 --max-delay-ms 5
 """
 
 from __future__ import annotations
@@ -21,21 +26,64 @@ from repro.configs.smoke import reduced
 from repro.data import DataConfig, make_batch
 from repro.launch.train import build_mesh_for_available
 from repro.models import init_params
-from repro.serve import make_decode_step, make_prefill_step
+from repro.serve import (SNPTraceService, TraceRequest, make_decode_step,
+                         make_prefill_step, make_trace_runner)
 from repro.sharding import make_plan
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+def serve_snp(args) -> None:
+    """Stand up the mesh-backed async SNP trace service and serve a burst.
 
+    The mesh is the plan's full device set flattened onto one ``traces``
+    axis (`plan.trace_mesh()`); every flush of the service shards its
+    batch over it via :func:`repro.core.distributed.run_traces_distributed`
+    — bit-identical to single-device serving, so this driver doubles as a
+    correctness check on whatever devices are available.
+    """
+    from repro.core import paper_pi
+
+    mesh = build_mesh_for_available()
+    plan = make_plan(mesh)
+    trace_mesh = plan.trace_mesh()
+    runner = make_trace_runner(mesh=trace_mesh)
+    system = paper_pi(covering=True)
+
+    n, G = args.requests, args.gen
+    with SNPTraceService(batch_size=args.batch, step_bucket=8,
+                         backend=args.backend, runner=runner,
+                         async_mode=True,
+                         max_delay_ms=args.max_delay_ms) as svc:
+        print(f"[serve-snp] mesh {trace_mesh.devices.size}-device, "
+              f"batch {args.batch}, max_delay {args.max_delay_ms} ms, "
+              f"backend {args.backend}")
+        done = {}
+        t0 = time.perf_counter()
+        futs = []
+        for s in range(n):
+            fut = svc.submit(TraceRequest(system, steps=G, policy="random",
+                                          seed=s))
+            # completion timestamps via callback: waiting on futs in order
+            # would attribute earlier futures' wait to later ones
+            fut.add_done_callback(
+                lambda f, s=s: done.setdefault(s, time.perf_counter()))
+            futs.append(fut)
+        for f in futs:
+            f.result()
+        dt = time.perf_counter() - t0
+        calls = svc.num_device_calls
+    # outside the with-block: close() joined the drain thread, so every
+    # done-callback has run (result() alone doesn't guarantee the last
+    # future's callback fired before the waiter woke)
+    lat_ms = np.asarray([done[s] - t0 for s in range(n)]) * 1e3
+    print(f"[serve-snp] {n} traces x {G} steps in {dt*1e3:.1f} ms "
+          f"({n / dt:.0f} traces/s, {calls} device calls)")
+    print(f"[serve-snp] completion latency p50={np.percentile(lat_ms, 50):.1f} ms "
+          f"p99={np.percentile(lat_ms, 99):.1f} ms")
+    emis = np.asarray(futs[0].result().emissions)
+    print(f"[serve-snp] sample spike train (req 0): {emis.tolist()}")
+
+
+def serve_lm(args):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
@@ -86,6 +134,36 @@ def main(argv=None):
             row = gen[b] if not cfg.codebooks else gen[b, 0]
             print(f"  req{b}: {row[:16].tolist()}")
     return gen
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--snp", action="store_true",
+                    help="serve SNP traces (mesh-backed async service) "
+                         "instead of the LM path")
+    ap.add_argument("--arch", default=None,
+                    help="LM config name (required without --snp)")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="request batch (default: 4 for the LM path, 256 — "
+                         "the service batch_size — for --snp)")
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    # SNP service knobs
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--max-delay-ms", type=float, default=5.0)
+    ap.add_argument("--backend", default="ref")
+    args = ap.parse_args(argv)
+
+    if args.batch is None:
+        args.batch = 256 if args.snp else 4
+    if args.snp:
+        return serve_snp(args)
+    if args.arch is None:
+        ap.error("--arch is required without --snp")
+    return serve_lm(args)
 
 
 if __name__ == "__main__":

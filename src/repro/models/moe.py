@@ -7,7 +7,7 @@ divides ``num_experts``, expert-TP otherwise — sharding/specs.py decides).
 Tokens over capacity are dropped (contribute zero) and counted in the aux
 outputs; the load-balance auxiliary loss follows Switch/GShard.
 
-Scalability note (DESIGN.md §5): the dispatch/combine one-hots are
+Scalability note (DESIGN.md §6): the dispatch/combine one-hots are
 O(T²·k·cf/E) in token count T — quadratic.  ``moe_layer`` therefore
 processes tokens in fixed-size chunks under ``lax.scan``: dispatch memory is
 bounded by one chunk (default 4096 tokens) regardless of sequence length,

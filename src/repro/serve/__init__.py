@@ -1,14 +1,19 @@
 """Serving substrate.
 
 * :mod:`repro.serve.serve_step` — LM prefill/decode steps with
-  sequence-sharded caches.
+  sequence-sharded caches, plus :func:`make_trace_runner` (the SNP device
+  call: single-device or mesh-sharded).
 * :mod:`repro.serve.snp_service` — batched SNP trace serving: heterogeneous
   (system, steps, policy, seed) requests padded into fixed-size device
-  batches over :func:`repro.core.engine.run_traces`.
+  batches over :func:`repro.core.engine.run_traces`; synchronous
+  submit/drain or an async futures mode with a background flush thread
+  (DESIGN.md §4).
 """
 
-from .serve_step import make_decode_step, make_prefill_step, sample_token
+from .serve_step import (make_decode_step, make_prefill_step,
+                         make_trace_runner, sample_token)
 from .snp_service import SNPTraceService, TraceRequest, TraceResult
 
 __all__ = ["make_prefill_step", "make_decode_step", "sample_token",
+           "make_trace_runner",
            "SNPTraceService", "TraceRequest", "TraceResult"]

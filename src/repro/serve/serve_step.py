@@ -1,4 +1,4 @@
-"""Serving substrate: batched prefill and decode step factories.
+"""Serving substrate: batched step factories (LM prefill/decode + SNP traces).
 
 ``prefill_step`` consumes a (B, S) request batch, returns last-position
 logits + a filled KV/state cache.  ``decode_step`` advances every sequence
@@ -10,6 +10,12 @@ for ``jax.jit`` with shardings from the plan:
   statistics per shard which XLA's SPMD partitioner combines with one small
   all-reduce (flash-decode); the 500k-token cache never gathers.
 * MoE decode uses exact capacity (no drops), matching teacher forcing.
+
+``make_trace_runner`` is the SNP analog: it builds the device call that
+:class:`repro.serve.snp_service.SNPTraceService` runs per flush — the
+single-device :func:`~repro.core.engine.run_traces`, or the mesh-sharded
+:func:`~repro.core.distributed.run_traces_distributed` when a mesh is
+given (DESIGN.md §4).
 """
 
 from __future__ import annotations
@@ -23,7 +29,27 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.models import forward, init_cache
 
-__all__ = ["make_prefill_step", "make_decode_step", "sample_token"]
+__all__ = ["make_prefill_step", "make_decode_step", "sample_token",
+           "make_trace_runner"]
+
+
+def make_trace_runner(*, mesh=None) -> Callable:
+    """A :func:`~repro.core.engine.run_traces`-compatible callable for
+    :class:`~repro.serve.snp_service.SNPTraceService`.
+
+    ``mesh=None`` returns the single-device path unchanged; with a mesh
+    every flush shards its batch axis over the (flattened) mesh via
+    :func:`~repro.core.distributed.run_traces_distributed` — bit-identical
+    results either way, so a service can be re-pointed at a mesh without
+    changing anything its callers observe.
+    """
+    # Local imports: repro.serve must stay importable without pulling the
+    # SNP core (and its jax tracing) into LM-only entry points at load.
+    if mesh is None:
+        from repro.core.engine import run_traces
+        return run_traces
+    from repro.core.distributed import run_traces_distributed
+    return functools.partial(run_traces_distributed, mesh=mesh)
 
 
 def sample_token(logits: jnp.ndarray, key, temperature: float = 0.0):

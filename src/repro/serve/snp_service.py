@@ -3,31 +3,41 @@
 The engine's :func:`~repro.core.engine.run_traces` is the device-side hot
 loop (one ``lax.scan``, whole batch through one ``StepBackend.expand`` per
 step); this module is the host-side front end that makes it a service.
-Callers :meth:`~SNPTraceService.submit` trace requests that differ in
-system, step count, policy and seed; :meth:`~SNPTraceService.drain` groups
-compatible requests, pads every group to a **fixed** batch size and step
-count (so the jit cache stays small and device shapes never churn), runs
-one jitted call per padded batch, and slices each caller's trajectory back
-out.
+Architecture notes — batching/bucketing rules, the group key, the async
+drain state machine, and the mesh sharding layout — live in DESIGN.md §4;
+the short version:
 
-Batching rules:
+* **sync mode** (default): :meth:`~SNPTraceService.submit` returns a
+  ticket; :meth:`~SNPTraceService.drain` groups compatible requests, pads
+  every group to a fixed batch size and step bucket, runs one jitted call
+  per padded batch, and returns ``{ticket: TraceResult}``.
+* **async mode** (``async_mode=True``): :meth:`submit` returns a
+  :class:`concurrent.futures.Future`; a background flush thread fires as
+  soon as a group fills a whole batch or the group's oldest request has
+  waited ``max_delay_ms``.  Errors raised by a flush propagate into the
+  affected futures; :meth:`close` flushes everything still pending and
+  joins the thread.
 
-* requests with the same (compiled system, policy, max_branches) share a
-  batch — seeds and step counts are free per request (steps are padded to
-  the group's bucket and sliced on the way out);
-* groups larger than ``batch_size`` are chunked into full batches;
-* short groups are padded with dummy seeds whose results are discarded.
+Per-trace PRNG keys mean padding/batching/flush-timing never changes a
+trajectory: the result for a request is bit-identical to a solo
+:func:`~repro.core.engine.run_trace` with the same seed, and async results
+are bit-identical to a synchronous :meth:`drain` of the same requests.
 
-Per-trace PRNG keys mean padding/batching never changes a trajectory: the
-result for a request is bit-identical to a solo
-:func:`~repro.core.engine.run_trace` with the same seed.
+The device call is pluggable via ``runner`` (a
+:func:`~repro.core.engine.run_traces`-compatible callable) so the same
+front end drives the single-device path or the mesh-sharded
+:func:`~repro.core.distributed.run_traces_distributed`
+(:func:`repro.serve.serve_step.make_trace_runner` builds either).
 """
 
 from __future__ import annotations
 
 import itertools
+import threading
+import time
+from concurrent.futures import Future
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -77,19 +87,37 @@ class SNPTraceService:
     256-request burst in **one** jitted call.  ``step_bucket`` quantizes
     requested step counts upward so distinct ``steps`` values don't each
     compile a fresh scan.
+
+    ``runner`` overrides the device call (default
+    :func:`~repro.core.engine.run_traces`); pass
+    :func:`repro.serve.serve_step.make_trace_runner`'s mesh-backed runner
+    to shard every flush over devices.  ``async_mode`` switches
+    :meth:`submit` to return futures drained by a background flush thread
+    (see the module docstring and DESIGN.md §4).
     """
 
     def __init__(self, *, batch_size: int = 256, step_bucket: int = 16,
                  backend: BackendLike = "ref",
-                 max_steps: Optional[int] = None) -> None:
+                 max_steps: Optional[int] = None,
+                 runner: Optional[Callable] = None,
+                 compile_cache_cap: int = 64,
+                 async_mode: bool = False,
+                 max_delay_ms: float = 10.0) -> None:
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
         if step_bucket < 1:
             raise ValueError("step_bucket must be >= 1")
+        if compile_cache_cap < 1:
+            raise ValueError("compile_cache_cap must be >= 1")
+        if max_delay_ms < 0:
+            raise ValueError("max_delay_ms must be >= 0")
         self.batch_size = batch_size
         self.step_bucket = step_bucket
         self.max_steps = max_steps
         self.backend = get_backend(backend)
+        self.runner = run_traces if runner is None else runner
+        self.async_mode = async_mode
+        self.max_delay_ms = max_delay_ms
         self.num_device_calls = 0          # observability: jitted launches
         self.num_traces_served = 0
         self._tickets = itertools.count()
@@ -100,75 +128,148 @@ class SNPTraceService:
         # service backend is fixed at construction, so one cache per
         # service is one cache per encoding.
         self._compile_cache: Dict[SNPSystem, CompiledAny] = {}
-        self._compile_cache_cap = 64
+        self._compile_cache_cap = compile_cache_cap
+        # async state (all mutated under the one condition's lock)
+        self._cv = threading.Condition()
+        self._futures: Dict[int, Future] = {}
+        self._submit_t: Dict[int, float] = {}
+        self._closed = False
+        self._thread: Optional[threading.Thread] = None
+        if async_mode:
+            self._thread = threading.Thread(
+                target=self._drain_loop, name="snp-service-drain", daemon=True)
+            self._thread.start()
 
     # -- submission --------------------------------------------------------
 
-    def submit(self, request: TraceRequest) -> int:
-        """Queue a request; returns a ticket to look up in :meth:`drain`."""
+    def _compile(self, request: TraceRequest) -> CompiledAny:
+        if is_compiled(request.system):
+            return request.system
+        # SNPSystem is a frozen dataclass: equal systems (even distinct
+        # objects) share one compilation and one batch group.  The
+        # backend owns the lowering (dense vs. sparse encoding).  The
+        # compile itself runs *outside* the lock — it may be arbitrarily
+        # expensive (StepBackend.compile contract) and must not stall the
+        # drain thread past other groups' max_delay_ms deadlines.  Two
+        # racing submitters may both compile; first insert wins and both
+        # use it (compiles of equal systems are semantically identical),
+        # keeping one batch group per system.
+        with self._cv:
+            comp = self._compile_cache.get(request.system)
+        if comp is None:
+            comp = self.backend.compile(request.system)
+            with self._cv:
+                if request.system not in self._compile_cache:
+                    while len(self._compile_cache) >= self._compile_cache_cap:
+                        self._compile_cache.pop(
+                            next(iter(self._compile_cache)))
+                    self._compile_cache[request.system] = comp
+                comp = self._compile_cache[request.system]
+        return comp
+
+    def submit(self, request: TraceRequest):
+        """Queue a request.
+
+        Sync mode: returns an ``int`` ticket to look up in :meth:`drain`.
+        Async mode: returns a :class:`~concurrent.futures.Future` resolving
+        to the request's :class:`TraceResult` (or the flush's exception).
+        """
         if self.max_steps is not None and request.steps > self.max_steps:
             raise ValueError(
                 f"steps {request.steps} exceeds service max_steps "
                 f"{self.max_steps}")
-        comp = request.system
-        if not is_compiled(comp):
-            # SNPSystem is a frozen dataclass: equal systems (even distinct
-            # objects) share one compilation and one batch group.  The
-            # backend owns the lowering (dense vs. sparse encoding).
-            if request.system not in self._compile_cache:
-                while len(self._compile_cache) >= self._compile_cache_cap:
-                    self._compile_cache.pop(next(iter(self._compile_cache)))
-                self._compile_cache[request.system] = \
-                    self.backend.compile(request.system)
-            comp = self._compile_cache[request.system]
-        ticket = next(self._tickets)
-        self._pending[ticket] = request
-        self._comp_of[ticket] = comp
-        return ticket
+        comp = self._compile(request)   # outside the lock: may be expensive
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("service is closed")
+            ticket = next(self._tickets)
+            self._pending[ticket] = request
+            self._comp_of[ticket] = comp
+            if not self.async_mode:
+                return ticket
+            fut: Future = Future()
+            self._futures[ticket] = fut
+            self._submit_t[ticket] = time.monotonic()
+            self._cv.notify_all()
+            return fut
 
     @property
     def pending(self) -> int:
-        return len(self._pending)
+        with self._cv:
+            return len(self._pending)
 
-    # -- draining ----------------------------------------------------------
+    # -- grouping ----------------------------------------------------------
 
     def _group_key(self, ticket: int) -> Tuple:
         r = self._pending[ticket]
         return (id(self._comp_of[ticket]), r.policy, r.max_branches)
 
+    def _groups(self) -> Dict[Tuple, List[int]]:
+        by_group: Dict[Tuple, List[int]] = {}
+        for ticket in sorted(self._pending):
+            by_group.setdefault(self._group_key(ticket), []).append(ticket)
+        return by_group
+
+    def _take(self, tickets: List[int]) -> List[TraceRequest]:
+        """Remove ``tickets`` from the pending maps (lock held)."""
+        reqs = [self._pending.pop(t) for t in tickets]
+        for t in tickets:
+            self._comp_of.pop(t)
+            self._submit_t.pop(t, None)
+        return reqs
+
+    # -- synchronous draining ----------------------------------------------
+
     def drain(self) -> Dict[int, TraceResult]:
         """Serve every pending request; returns ``{ticket: TraceResult}``.
 
         One jitted :func:`run_traces` call per (group, full-batch chunk).
+        Sync mode only — in async mode the background thread drains and
+        results arrive through the submit futures.
         """
+        if self.async_mode:
+            raise RuntimeError(
+                "drain() is sync-mode only; async results arrive via the "
+                "futures returned by submit()")
         results: Dict[int, TraceResult] = {}
-        by_group: Dict[Tuple, List[int]] = {}
-        for ticket in sorted(self._pending):
-            by_group.setdefault(self._group_key(ticket), []).append(ticket)
-
-        for (_, policy, max_branches), tickets in by_group.items():
-            comp = self._comp_of[tickets[0]]
-            for lo in range(0, len(tickets), self.batch_size):
-                chunk = tickets[lo:lo + self.batch_size]
-                results.update(self._flush(comp, policy, max_branches, chunk))
-
-        self._pending.clear()
-        self._comp_of.clear()
+        with self._cv:
+            batches = []
+            for (_, policy, max_branches), tickets in self._groups().items():
+                comp = self._comp_of[tickets[0]]
+                for lo in range(0, len(tickets), self.batch_size):
+                    chunk = tickets[lo:lo + self.batch_size]
+                    batches.append((comp, policy, max_branches, chunk,
+                                    [self._pending[t] for t in chunk]))
+        for comp, policy, max_branches, chunk, reqs in batches:
+            results.update(self._run_batch(comp, policy, max_branches,
+                                           chunk, reqs))
+        # all-or-nothing: requests leave the pending maps only after every
+        # batch served.  If any runner call raises, the whole drain stays
+        # pending and a retry drain() re-serves it — re-running a chunk
+        # that already succeeded is free of harm (traces are deterministic
+        # functions of their seeds), whereas popping per chunk would lose
+        # served results when a later chunk fails.
+        with self._cv:
+            for _, _, _, chunk, _ in batches:
+                self._take(chunk)
         return results
 
-    def _flush(self, comp: CompiledAny, policy: str, max_branches: int,
-               tickets: List[int]) -> Dict[int, TraceResult]:
-        reqs = [self._pending[t] for t in tickets]
+    # -- the device call ---------------------------------------------------
+
+    def _run_batch(self, comp: CompiledAny, policy: str, max_branches: int,
+                   tickets: List[int], reqs: List[TraceRequest],
+                   ) -> Dict[int, TraceResult]:
         # submit() enforces steps <= max_steps, so no clamp is needed here
         steps = _round_up(max(r.steps for r in reqs), self.step_bucket)
         seeds = np.zeros((self.batch_size,), np.uint32)   # dummy pad: seed 0
         seeds[:len(reqs)] = [r.seed for r in reqs]
 
-        cfgs, emis, alive = run_traces(
+        cfgs, emis, alive = self.runner(
             comp, steps=steps, seeds=seeds, policy=policy,
             max_branches=max_branches, backend=self.backend)
-        self.num_device_calls += 1
-        self.num_traces_served += len(reqs)
+        with self._cv:
+            self.num_device_calls += 1
+            self.num_traces_served += len(reqs)
 
         cfgs, emis, alive = (np.asarray(cfgs), np.asarray(emis),
                              np.asarray(alive))
@@ -178,3 +279,88 @@ class SNPTraceService:
                            alive=alive[i, :r.steps])
             for i, (t, r) in enumerate(zip(tickets, reqs))
         }
+
+    # -- asynchronous draining ---------------------------------------------
+    #
+    # State machine (DESIGN.md §4): a group is FILLING until either
+    # (a) it holds >= batch_size requests -> its full chunks flush now, or
+    # (b) its oldest request is older than max_delay_ms -> the whole group
+    #     (one padded partial chunk) flushes now, or
+    # (c) the service closes -> everything flushes.
+    # The background thread sleeps until the earliest deadline or a submit
+    # notification, whichever comes first.
+
+    def _take_ready(self, now: float, flush_all: bool) -> List[Tuple]:
+        """Pop every chunk that must flush now (lock held)."""
+        delay = self.max_delay_ms / 1e3
+        batches: List[Tuple] = []
+        for (_, policy, max_branches), tickets in self._groups().items():
+            comp = self._comp_of[tickets[0]]
+            take: List[int] = []
+            if flush_all or (
+                    now - self._submit_t[tickets[0]] >= delay):
+                take = tickets
+            elif len(tickets) >= self.batch_size:
+                n_full = (len(tickets) // self.batch_size) * self.batch_size
+                take = tickets[:n_full]
+            for lo in range(0, len(take), self.batch_size):
+                chunk = take[lo:lo + self.batch_size]
+                futs = [self._futures.pop(t) for t in chunk]
+                batches.append((comp, policy, max_branches, chunk,
+                                self._take(chunk), futs))
+        return batches
+
+    def _next_deadline(self, now: float) -> Optional[float]:
+        """Seconds until the earliest group deadline (lock held)."""
+        if not self._submit_t:
+            return None
+        oldest = min(self._submit_t.values())
+        return max(0.0, oldest + self.max_delay_ms / 1e3 - now)
+
+    def _drain_loop(self) -> None:
+        while True:
+            with self._cv:
+                now = time.monotonic()
+                batches = self._take_ready(now, flush_all=self._closed)
+                if not batches:
+                    if self._closed:
+                        return
+                    self._cv.wait(timeout=self._next_deadline(now))
+                    continue
+            for comp, policy, max_branches, tickets, reqs, futs in batches:
+                # claim RUNNING state first: a caller-cancelled future must
+                # be skipped, not written to (set_result on a cancelled
+                # Future raises and would kill this thread); once RUNNING,
+                # cancel() can no longer win the race.
+                live = [fut.set_running_or_notify_cancel() for fut in futs]
+                try:
+                    results = self._run_batch(
+                        comp, policy, max_branches, tickets, reqs)
+                except BaseException as e:  # propagate into the futures
+                    for fut, ok in zip(futs, live):
+                        if ok:
+                            fut.set_exception(e)
+                else:
+                    for t, fut, ok in zip(tickets, futs, live):
+                        if ok:
+                            fut.set_result(results[t])
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def close(self) -> None:
+        """Flush everything pending and stop the drain thread (async mode);
+        idempotent, and a no-op beyond marking closed in sync mode."""
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def __enter__(self) -> "SNPTraceService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -251,6 +251,16 @@ class ShardingPlan:
     def named(self, spec: P) -> NamedSharding:
         return NamedSharding(self.mesh, spec)
 
+    # ---- SNP trace serving --------------------------------------------------
+    def trace_mesh(self) -> Mesh:
+        """The 1-D serving mesh for
+        :func:`repro.core.distributed.run_traces_distributed`: all devices
+        of the plan's mesh flattened onto one ``traces`` axis — trace
+        serving is pure data parallelism (DESIGN.md §4), so the model/TP
+        axes contribute their devices to the batch partition instead of
+        idling.  Requires a concrete mesh (AbstractMesh has no devices)."""
+        return Mesh(self.mesh.devices.reshape(-1), ("traces",))
+
 
 def make_plan(mesh: Mesh, **opts) -> ShardingPlan:
     names = mesh.axis_names

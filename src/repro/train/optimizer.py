@@ -3,7 +3,7 @@
 Optimizer state is a pytree congruent with params (first/second moments in
 f32), so the sharding plan's param specs apply verbatim to the state: the
 optimizer shards exactly like FSDP params, which is what makes 314B-scale
-training state fit (DESIGN.md §5).
+training state fit (DESIGN.md §6).
 """
 
 from __future__ import annotations

@@ -99,6 +99,58 @@ def test_distributed_backend_pallas_matches_ref():
     assert "OK" in proc.stdout
 
 
+def test_run_traces_distributed_matches_single_device_1dev():
+    """In-process single-device check: the shard_map path must be
+    bit-identical to run_traces on a 1-device mesh (no subprocess)."""
+    import numpy as np
+    from repro.core import paper_pi, run_traces
+    from repro.core.distributed import run_traces_distributed
+
+    pi = paper_pi(True)
+    for policy in ("first", "random"):
+        kw = dict(steps=12, seeds=[0, 1, 7, 42, 9], policy=policy,
+                  max_branches=16)
+        a = run_traces(pi, **kw)
+        b = run_traces_distributed(pi, **kw)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("ndev", [8])
+def test_run_traces_distributed_matches_single_device_multidev(ndev):
+    proc = _run(ndev, """
+        import jax, numpy as np
+        from repro.core import paper_pi, run_traces
+        from repro.core.distributed import run_traces_distributed
+        from repro.core.generators import nd_chain
+
+        assert len(jax.devices()) == %d
+        for system, B, policy in [(paper_pi(True), 16, "random"),
+                                  (paper_pi(True), 5, "random"),  # pad path
+                                  (nd_chain(4), 8, "first")]:
+            kw = dict(steps=10, seeds=list(range(B)), policy=policy,
+                      max_branches=16)
+            a = run_traces(system, **kw)
+            b = run_traces_distributed(system, **kw)
+            for x, y in zip(a, b):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        print("OK")
+    """ % ndev)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK" in proc.stdout
+
+
+def test_run_traces_distributed_rejects_bad_input():
+    from repro.core import paper_pi
+    from repro.core.distributed import run_traces_distributed
+
+    with pytest.raises(ValueError, match="policy"):
+        run_traces_distributed(paper_pi(True), steps=4, seeds=[0],
+                               policy="greedy")
+    with pytest.raises(ValueError, match="1-D"):
+        run_traces_distributed(paper_pi(True), steps=4, seeds=[[0, 1]])
+
+
 def test_distributed_drains_finite_tree():
     proc = _run(4, """
         from repro.core import compile_system

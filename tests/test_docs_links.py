@@ -1,0 +1,75 @@
+"""Tier-1 enforcement of the docs layer: every internal link in the repo's
+markdown set must resolve (same checker CI runs — ``tools/check_links.py``)."""
+
+import importlib.util
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_links", REPO / "tools" / "check_links.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_readme_exists_with_required_sections():
+    readme = REPO / "README.md"
+    assert readme.exists(), "top-level README.md is required"
+    text = readme.read_text()
+    for needed in ("Quickstart", "backend", "DESIGN.md", "EXPERIMENTS.md"):
+        assert needed in text, f"README.md lacks {needed!r}"
+
+
+def test_all_doc_links_resolve():
+    mod = _checker()
+    errors = []
+    for name in mod.DEFAULT_DOCS:
+        path = REPO / name
+        if path.exists():
+            errors += mod.check_file(path)
+    assert not errors, "\n".join(str(e) for e in errors)
+
+
+def test_checker_flags_broken_links(tmp_path):
+    mod = _checker()
+    md = tmp_path / "doc.md"
+    md.write_text("# Title\n[ok](doc.md) [bad](missing.md) "
+                  "[ok2](#title) [bad2](#nope)\n")
+    errors = mod.check_file(md)
+    assert len(errors) == 2
+    assert any("missing.md" in e for e in errors)
+    assert any("nope" in e for e in errors)
+
+
+def test_checker_handles_caret_text_and_titled_links(tmp_path):
+    """Regression: link text with '^' and targets with a "title" part must
+    still be parsed (an earlier regex silently skipped both)."""
+    mod = _checker()
+    md = tmp_path / "doc.md"
+    md.write_text('# Title\n[O(n^2) path](gone.md) '
+                  '[titled](also-gone.md "a title")\n')
+    errors = mod.check_file(md)
+    assert len(errors) == 2
+
+
+def test_checker_ignores_fenced_code_and_suffixes_duplicate_headings(
+        tmp_path):
+    mod = _checker()
+    md = tmp_path / "doc.md"
+    md.write_text("# Part\ntext\n```bash\n# not a heading\n"
+                  "[not a link](gone.md)\n```\n# Part\n"
+                  "[dup ok](#part-1) [phantom](#not-a-heading)\n")
+    errors = mod.check_file(md)
+    assert len(errors) == 1            # fenced 'link' skipped, dup-1 valid
+    assert "not-a-heading" in errors[0]
+
+
+def test_github_slugging():
+    mod = _checker()
+    assert mod.github_slug("§4 Serving architecture") == \
+        "4-serving-architecture"
+    assert mod.github_slug("Paper → module map") == "paper--module-map"

@@ -161,3 +161,13 @@ def test_batch_specs_musicgen_codebooks():
     plan = make_plan(_fake_mesh((2, 2)))
     specs = plan.batch_specs(cfg, batch)
     assert specs["tokens"] == P("data", None, None)
+
+
+def test_trace_mesh_flattens_all_devices():
+    """SNP trace serving treats the whole mesh as one data axis: the plan's
+    trace mesh must be 1-D over every device (concrete mesh required)."""
+    devs = np.array(jax.devices())
+    plan = make_plan(Mesh(devs.reshape(-1, 1), ("data", "model")))
+    tm = plan.trace_mesh()
+    assert tm.axis_names == ("traces",)
+    assert tm.devices.size == devs.size

@@ -1,0 +1,109 @@
+"""Markdown link checker for the repo docs (stdlib only; CI + tier-1).
+
+Verifies every internal link in the given markdown files:
+
+* relative file targets (``[engine](src/repro/core/engine.py)``) must exist
+  on disk, resolved against the linking file's directory;
+* anchor targets (``DESIGN.md#4-serving-architecture`` or in-file
+  ``#quickstart``) must match a heading of the target file under GitHub's
+  slug rules (lowercase, punctuation stripped, spaces -> hyphens);
+* external links (``http(s)://``, ``mailto:``) are skipped — CI must not
+  fail on third-party outages.
+
+Usage: ``python tools/check_links.py [FILE ...]`` (defaults to the repo's
+doc set); exits 1 and prints one line per broken link.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+DEFAULT_DOCS = ("README.md", "DESIGN.md", "EXPERIMENTS.md", "ROADMAP.md",
+                "PAPER.md", "CHANGES.md")
+
+# link text: anything but brackets; target: up to ')' or whitespace, with
+# an optional "title" part after the target
+_LINK = re.compile(r"\[[^\]\[]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop everything but word chars /
+    spaces / hyphens, spaces to hyphens (`§5 Foo` -> `5-foo`)."""
+    s = heading.strip().lower()
+    s = re.sub(r"[`*_]", "", s)              # inline markup doesn't anchor
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def _md_lines(path: Path):
+    """Markdown lines outside fenced code blocks (a ``# comment`` in a bash
+    fence is not a heading, and fenced text can't hold links)."""
+    fenced = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            continue
+        if not fenced:
+            yield line
+
+
+def _anchors(path: Path) -> set:
+    out: set = set()
+    counts: dict = {}
+    for line in _md_lines(path):
+        m = _HEADING.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(1))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        # GitHub suffixes repeated headings: slug, slug-1, slug-2, ...
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def check_file(path: Path) -> list:
+    """All broken internal links of one markdown file."""
+    errors = []
+    text = "\n".join(_md_lines(path))
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        file_part, _, anchor = target.partition("#")
+        dest = (path.parent / file_part).resolve() if file_part else path
+        if not dest.exists():
+            errors.append(f"{path}: broken link target {target!r}")
+            continue
+        if anchor:
+            if dest.suffix.lower() not in (".md", ".markdown"):
+                continue   # anchors into non-markdown: not checkable
+            if anchor not in _anchors(dest):
+                errors.append(
+                    f"{path}: broken anchor {target!r} "
+                    f"(no heading slugs to {anchor!r} in {dest.name})")
+    return errors
+
+
+def main(argv: list) -> int:
+    root = Path(__file__).resolve().parent.parent
+    files = [Path(a) for a in argv] if argv else \
+        [root / d for d in DEFAULT_DOCS if (root / d).exists()]
+    errors = []
+    for f in files:
+        if not f.exists():
+            errors.append(f"{f}: file not found")
+            continue
+        errors += check_file(f)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'OK' if not errors else f'{len(errors)} broken links'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
