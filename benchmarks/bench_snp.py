@@ -10,7 +10,7 @@ projections come from the dry-run roofline) and the sparse ELL backends
 are benchmarked via one API, and any future backend is picked up by name
 only.
 
-Two tiers:
+Three tiers:
 
 * the **standard sweep** (m <= 2048, Erdős–Rényi/scaled-Π systems) runs
   the dense baselines and the sparse backends side by side;
@@ -19,7 +19,16 @@ Two tiers:
   backends stop being runnable: ``m=8192`` already means a 0.5 GB dense
   ``M_Π`` and ~0.5 TFLOP per expansion, so dense rows are not attempted
   past the 2048 cross-over point and the sparse ``O(B·T·nnz)`` path sweeps
-  alone (EXPERIMENTS.md §Sparse).
+  alone (EXPERIMENTS.md §Sparse);
+* the **hybrid tier** (power-law *without* ``max_in``, m up to 32768) is
+  the heavy-tailed stress for the plan layer: pure ELL pads every
+  in-adjacency row to the top hub's in-degree (and unrolls that many
+  gathers per step), the hybrid ELL+COO plan
+  (:class:`repro.core.plan.SystemPlan`) caps the ELL part at the auto hub
+  threshold and segment-sums the tail.  Pure ELL is measured only at the
+  smallest size — past it the hub width is the bottleneck and hybrid
+  sweeps alone, mirroring the dense/sparse split above
+  (EXPERIMENTS.md §Hybrid).
 
 Run as a module to emit ``BENCH_snp.json`` (step + tree rows):
 ``PYTHONPATH=src python -m benchmarks.bench_snp`` (``--quick`` for the
@@ -38,6 +47,7 @@ import numpy as np
 from repro.core.backend import PallasBackend, SparsePallasBackend, get_backend
 from repro.core.generators import (power_law, random_system, ring_lattice,
                                    scaled_pi, torus)
+from repro.core.plan import SystemPlan
 
 # Every registered backend family is swept; the kernel backends get
 # CPU-friendly blocks (the ops wrappers clamp them to the problem anyway).
@@ -125,6 +135,52 @@ def large_rows(quick: bool = False):
     return out
 
 
+def hybrid_rows(quick: bool = False):
+    """Heavy-tail tier: unbounded power-law hubs, ELL vs hybrid plan.
+
+    Derived fields: the ``ell`` row is the 1.0x baseline where both run;
+    every hybrid row also reports ``padX.XXx`` — its total in-adjacency
+    slots (ELL padding + COO tail) relative to the pure-ELL layout of the
+    same graph, the memory quantity the plan minimizes."""
+    reps = 2 if quick else 3
+    sizes = ((512, 32, 16),) if quick else \
+        ((512, 32, 16), (2048, 16, 16), (8192, 8, 8), (32768, 8, 8))
+    # The pure-ELL step unrolls Kin gathers and the unbounded hub's Kin
+    # grows with m (~212 already at m=512): past 512 the ELL baseline is
+    # the bottleneck being demonstrated, so hybrid sweeps alone there.
+    ell_max_m = 512
+    sp = get_backend("sparse")
+    rng = np.random.default_rng(3)
+    out = []
+    for m, B, T in sizes:
+        system = power_law(m, 4, seed=2)            # no max_in: real hubs
+        plan = SystemPlan.for_system(system)
+        comp_h = sp.compile(system, plan=plan)
+        # Pure-ELL slot count is analytic (m rows padded to the hub
+        # in-degree): at m=32768 the hub is ~4.7k wide, so actually
+        # compiling that encoding would allocate ~0.6 GB of padding just
+        # to read one number — only compile it where it is timed.
+        in_deg = np.bincount(
+            np.asarray(system.synapses)[:, 1], minlength=m)
+        ell_slots = m * max(1, int(in_deg.max()))
+        pad = comp_h.in_adjacency_slots / ell_slots
+        cfgs = jnp.asarray(rng.integers(0, 4, size=(B, m)), jnp.int32)
+        us_e = None
+        if m <= ell_max_m:
+            comp_e = sp.compile(system)             # pure ELL
+            assert comp_e.in_adjacency_slots == ell_slots
+            us_e = _time(_expand, cfgs, comp_e, T, sp, reps=reps)
+            out.append((f"hybrid/power_law/ell/m{m}_Kin"
+                        f"{comp_e.max_in_degree}_B{B}_T{T}", us_e,
+                        f"{B * T / us_e:.1f}exp/us"))
+        us_h = _time(_expand, cfgs, comp_h, T, sp, reps=reps)
+        rel = "ell n/a" if us_e is None else f"{us_h / us_e:.2f}x_ell"
+        out.append((f"hybrid/power_law/hybrid/m{m}_Kin"
+                    f"{comp_h.max_in_degree}_B{B}_T{T}", us_h,
+                    f"{rel},pad{pad:.2f}x"))
+    return out
+
+
 def main(path: str = "BENCH_snp.json", quick: bool = False) -> None:
     """Emit step- and tree-level rows for every backend as one JSON file."""
     from . import bench_tree
@@ -133,6 +189,7 @@ def main(path: str = "BENCH_snp.json", quick: bool = False) -> None:
         "rows": [
             {"name": name, "us_per_call": us, "derived": derived}
             for name, us, derived in (rows(quick) + large_rows(quick)
+                                      + hybrid_rows(quick)
                                       + bench_tree.rows(quick))
         ],
     }

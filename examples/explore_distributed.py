@@ -1,23 +1,56 @@
 """Distributed SNP exploration: shard the computation-tree search over
 many devices (hash-partitioned frontier + visited set, all_to_all
-exchange).
+exchange), optionally with the neuron axis of every config sharded too
+(``--plan neuron_axis``: frontier/archive rows carry only their device's
+neuron slice and only halo segments cross devices — DESIGN.md §2).
 
 Run with fake devices on CPU:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/explore_distributed.py
+
+    # heavy-tailed graph (unbounded hubs), neuron-axis sharded frontier
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/explore_distributed.py \
+            --graph power_law --plan neuron_axis
 """
 
+import argparse
 import time
 
 import jax
 
 from repro.core import compile_system, explore
 from repro.core.distributed import explore_distributed
-from repro.core.generators import random_system, scaled_pi
+from repro.core.generators import power_law, random_system, scaled_pi
+from repro.sharding import neuron_axis
+
+GRAPHS = ("random", "power_law")
+
+
+def _graph(name: str, ndev: int):
+    if name == "power_law":
+        # Unbounded hubs (max_in=None): the heavy-tailed in-degree family
+        # the hybrid ELL+COO plan targets; deterministic in its seed.
+        return power_law(64, 4, seed=5), dict(
+            max_steps=6, frontier_cap=4096 // ndev,
+            visited_cap=32768 // ndev, max_branches=64)
+    return random_system(64, 2, 0.08, seed=5), dict(
+        max_steps=8, frontier_cap=8192 // ndev,
+        visited_cap=65536 // ndev, max_branches=64)
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--graph", choices=GRAPHS, default="random",
+                    help="64-neuron comparison topology")
+    ap.add_argument("--plan", choices=("dense_rows", "neuron_axis"),
+                    default="dense_rows",
+                    help="dense_rows: hash-partitioned full config rows; "
+                         "neuron_axis: per-device neuron slices + halo "
+                         "exchange (SystemPlan sharding)")
+    args = ap.parse_args()
+
     ndev = len(jax.devices())
     print(f"devices: {ndev}")
 
@@ -30,18 +63,24 @@ def main():
           f"{res.steps} levels, {time.time()-t0:.2f}s "
           f"(overflow: {res.branch_overflow})")
 
-    print("\n-- random 64-neuron system --")
-    comp = compile_system(random_system(64, 2, 0.08, seed=5))
+    system, kw = _graph(args.graph, ndev)
+    print(f"\n-- {system.name} ({args.plan}) --")
     t0 = time.time()
-    res = explore_distributed(comp, max_steps=8,
-                              frontier_cap=8192 // ndev,
-                              visited_cap=65536 // ndev, max_branches=64)
-    single = explore(comp, max_steps=8, frontier_cap=8192,
-                     visited_cap=65536, max_branches=64)
+    if args.plan == "neuron_axis":
+        # Global frontier bookkeeping, per-device neuron slices.
+        res = explore_distributed(system, plan=neuron_axis(ndev),
+                                  **{**kw, "frontier_cap": kw["frontier_cap"]
+                                     * ndev})
+    else:
+        res = explore_distributed(compile_system(system), **kw)
+    dt = time.time() - t0
+    single = explore(compile_system(system),
+                     **{**kw, "frontier_cap": kw["frontier_cap"] * ndev,
+                        "visited_cap": kw["visited_cap"] * ndev})
     agree = ({tuple(r) for r in res.configs}
              == {tuple(r) for r in single.configs})
     print(f"distributed {res.num_discovered} vs single "
-          f"{single.num_discovered}; sets agree: {agree} "
+          f"{single.num_discovered} in {dt:.2f}s; sets agree: {agree} "
           f"(overflow d={res.frontier_overflow} s={single.frontier_overflow})")
 
 

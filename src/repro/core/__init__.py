@@ -13,6 +13,13 @@ Public API:
   oracle / ``"pallas"`` fused kernel / ``"sparse"`` ELL gather /
   ``"sparse_pallas"`` fused sparse kernel) behind one registry; every
   consumer takes ``backend=`` and lowers via ``backend.compile``.
+* :mod:`repro.core.plan` — partition/encoding planning
+  (:class:`~repro.core.plan.SystemPlan`): per-block encoding choice
+  (dense / ELL / hybrid ELL+COO for heavy-tailed graphs) and the optional
+  neuron-axis partition (:func:`~repro.core.plan.compile_sharded`)
+  consumed by ``explore_distributed``.  Every ``backend.compile`` and
+  consumer entry point accepts ``plan=``; the default plan is
+  bit-identical to the historical encodings.
 * :func:`repro.core.engine.explore` — computation-tree BFS (paper Alg. 1)
   as one on-device ``lax.while_loop``.
 * :func:`repro.core.engine.run_traces` — batched trajectory serving.
@@ -29,6 +36,8 @@ from .engine import (ExploreResult, emission_gaps, explore, run_trace,
                      run_traces, successor_set)
 from .matrix import (CompiledSNP, CompiledSparseSNP, compile_system,
                      compile_system_sparse, is_compiled)
+from .plan import (ShardedCompiled, SystemPlan, auto_hub_threshold,
+                   compile_sharded, is_sharded)
 from .semantics import (applicability, branch_info, next_configs,
                         sparse_next_configs, spiking_vectors)
 from .system import Rule, SNPSystem, paper_pi
@@ -37,6 +46,8 @@ __all__ = [
     "SNPSystem", "Rule", "paper_pi",
     "CompiledSNP", "CompiledSparseSNP", "compile_system",
     "compile_system_sparse", "is_compiled",
+    "SystemPlan", "ShardedCompiled", "auto_hub_threshold",
+    "compile_sharded", "is_sharded",
     "applicability", "branch_info", "next_configs", "sparse_next_configs",
     "spiking_vectors",
     "StepBackend", "RefBackend", "PallasBackend", "SparseBackend",

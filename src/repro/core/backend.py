@@ -31,12 +31,20 @@ workload.  This module is that seam:
   :func:`available_backends` — so new backends land as plugins without
   touching the consumers.
 
-Each backend also owns its *compilation*: ``backend.compile(system)``
-lowers an :class:`~repro.core.system.SNPSystem` to the encoding its
-``expand`` consumes (dense :class:`~repro.core.matrix.CompiledSNP` for
-ref/pallas, :class:`~repro.core.matrix.CompiledSparseSNP` for the sparse
-pair).  Consumers resolve backends by name and call ``compile`` once, so a
-new encoding lights up every workload with no consumer changes.
+Each backend also owns its *compilation*: ``backend.compile(system,
+plan=...)`` lowers an :class:`~repro.core.system.SNPSystem` to the
+encoding its ``expand`` consumes (dense
+:class:`~repro.core.matrix.CompiledSNP` for ref/pallas,
+:class:`~repro.core.matrix.CompiledSparseSNP` for the sparse pair).  The
+optional :class:`~repro.core.plan.SystemPlan` chooses the storage layout
+— ``"hybrid"`` caps the ELL in-adjacency at a hub threshold and spills
+heavy tails to a COO segment; ``num_shards > 1`` lowers to a
+:class:`~repro.core.plan.ShardedCompiled` neuron-axis partition for
+``explore_distributed``.  The **default plan is bit-identical** to each
+backend's historical encoding, and a plan a backend cannot honor is a
+``ValueError``, never a silent reinterpretation.  Consumers resolve
+backends by name and call ``compile`` once, so a new encoding lights up
+every workload with no consumer changes.
 
 Backends are frozen dataclasses: hashable, so they ride through
 ``jax.jit(..., static_argnames=("backend",))`` unchanged.
@@ -44,13 +52,15 @@ Backends are frozen dataclasses: hashable, so they ride through
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
-from typing import Dict, Protocol, Tuple, Union, runtime_checkable
+from typing import Dict, Optional, Protocol, Tuple, Union, runtime_checkable
 
 import jax.numpy as jnp
 
 from .matrix import (CompiledAny, CompiledSNP, CompiledSparseSNP,
                      compile_system, compile_system_sparse)
+from .plan import ShardedCompiled, SystemPlan, compile_sharded
 from .semantics import StepOut, next_configs, sparse_next_configs
 from .system import SNPSystem
 
@@ -63,6 +73,7 @@ __all__ = [
     "register_backend",
     "get_backend",
     "available_backends",
+    "compile_with_plan",
 ]
 
 
@@ -90,7 +101,8 @@ class StepBackend(Protocol):
     pad_multiple: int
     materializes_spiking: bool
 
-    def compile(self, system: SNPSystem) -> CompiledAny:
+    def compile(self, system: SNPSystem,
+                plan: Optional[SystemPlan] = None) -> CompiledAny:
         """Lower ``system`` to the encoding this backend's ``expand``
         consumes.  The contract every implementation must honor:
 
@@ -113,6 +125,13 @@ class StepBackend(Protocol):
           ``TypeError`` (see ``_require_sparse``) rather than
           mis-interpret it.  Pre-compiled objects passed by callers skip
           ``compile`` entirely, so the check lives in ``expand``.
+        * **honors the plan or refuses it** — ``plan=None`` (or the
+          default :class:`~repro.core.plan.SystemPlan`) must produce the
+          backend's historical encoding **bit-identically**; an encoding
+          request the backend cannot realize (e.g. ``"hybrid"`` on a
+          dense backend) raises ``ValueError``; ``plan.num_shards > 1``
+          lowers through :func:`repro.core.plan.compile_sharded` where
+          supported (the sparse family) and raises elsewhere.
         """
         ...
 
@@ -133,6 +152,52 @@ def _require_sparse(comp, backend_name: str) -> CompiledSparseSNP:
     return comp
 
 
+def _plan_or_default(plan: Optional[SystemPlan]) -> SystemPlan:
+    return SystemPlan() if plan is None else plan
+
+
+def _require_encoding(plan: SystemPlan, backend_name: str,
+                      allowed: Tuple[str, ...]) -> None:
+    if plan.encoding not in allowed:
+        raise ValueError(
+            f"backend {backend_name!r} cannot realize plan encoding "
+            f"{plan.encoding!r} (supported: {allowed}); pick a matching "
+            "backend or drop the plan")
+
+
+def _dense_compile(plan: Optional[SystemPlan], backend_name: str,
+                   system: SNPSystem) -> CompiledSNP:
+    plan = _plan_or_default(plan)
+    _require_encoding(plan, backend_name, ("auto", "dense"))
+    if plan.num_shards > 1:
+        raise ValueError(
+            f"backend {backend_name!r} is dense-only; neuron-axis "
+            "sharding (plan.num_shards > 1) needs a sparse-family backend "
+            "and explore_distributed")
+    return compile_system(system)
+
+
+def _sparse_compile(plan: Optional[SystemPlan], backend_name: str,
+                    system: SNPSystem
+                    ) -> Union[CompiledSparseSNP, ShardedCompiled]:
+    plan = _plan_or_default(plan)
+    _require_encoding(plan, backend_name, ("auto", "ell", "hybrid"))
+    if plan.num_shards > 1:
+        return compile_sharded(system, plan)
+    return compile_system_sparse(
+        system, hub_threshold=plan.resolved_hub_threshold(system))
+
+
+def compile_with_plan(backend: "StepBackend", system: SNPSystem,
+                      plan: Optional[SystemPlan]) -> CompiledAny:
+    """``backend.compile`` with an optional plan, tolerating third-party
+    backends that predate the plan parameter (they only ever see the
+    default plan, which is the identity)."""
+    if plan is None:
+        return backend.compile(system)
+    return backend.compile(system, plan=plan)
+
+
 @dataclass(frozen=True)
 class RefBackend:
     """Pure-jnp reference semantics (the repo's oracle)."""
@@ -142,8 +207,9 @@ class RefBackend:
     pad_multiple: int = 1
     materializes_spiking: bool = True
 
-    def compile(self, system: SNPSystem) -> CompiledSNP:
-        return compile_system(system)
+    def compile(self, system: SNPSystem,
+                plan: Optional[SystemPlan] = None) -> CompiledSNP:
+        return _dense_compile(plan, self.name, system)
 
     def expand(self, configs: jnp.ndarray, comp: CompiledSNP,
                max_branches: int) -> StepOut:
@@ -172,8 +238,9 @@ class PallasBackend:
     def pad_multiple(self) -> int:
         return self.block_b
 
-    def compile(self, system: SNPSystem) -> CompiledSNP:
-        return compile_system(system)
+    def compile(self, system: SNPSystem,
+                plan: Optional[SystemPlan] = None) -> CompiledSNP:
+        return _dense_compile(plan, self.name, system)
 
     def expand(self, configs: jnp.ndarray, comp: CompiledSNP,
                max_branches: int) -> StepOut:
@@ -217,8 +284,10 @@ class SparseBackend:
     pad_multiple: int = 1
     materializes_spiking: bool = False
 
-    def compile(self, system: SNPSystem) -> CompiledSparseSNP:
-        return compile_system_sparse(system)
+    def compile(self, system: SNPSystem,
+                plan: Optional[SystemPlan] = None
+                ) -> Union[CompiledSparseSNP, ShardedCompiled]:
+        return _sparse_compile(plan, self.name, system)
 
     def expand(self, configs: jnp.ndarray, comp: CompiledSparseSNP,
                max_branches: int) -> StepOut:
@@ -248,14 +317,27 @@ class SparsePallasBackend:
     def pad_multiple(self) -> int:
         return self.block_b
 
-    def compile(self, system: SNPSystem) -> CompiledSparseSNP:
-        return compile_system_sparse(system)
+    def compile(self, system: SNPSystem,
+                plan: Optional[SystemPlan] = None
+                ) -> Union[CompiledSparseSNP, ShardedCompiled]:
+        return _sparse_compile(plan, self.name, system)
 
     def expand(self, configs: jnp.ndarray, comp: CompiledSparseSNP,
                max_branches: int) -> StepOut:
         from repro.kernels.snp_step.sparse_ops import snp_step_sparse
 
         comp = _require_sparse(comp, self.name)
+        if comp.is_hybrid:
+            # The fused kernel has no COO segment-sum stage yet; a hybrid
+            # plan must not shape-crash it.  Warn once (warnings dedup by
+            # call site) and serve through the jnp sparse path, which is
+            # bit-identical on valid entries.
+            warnings.warn(
+                "sparse_pallas: the fused kernel does not support the "
+                "hybrid ELL+COO encoding yet; falling back to the "
+                "'sparse' gather/segment-sum backend for this system",
+                UserWarning, stacklevel=2)
+            return sparse_next_configs(configs, comp, max_branches)
         m = configs.shape[-1]
         batch = configs.shape[:-1]
         flat = configs.reshape(-1, m)

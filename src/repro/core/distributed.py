@@ -28,6 +28,21 @@ set must shard.  The exploration scheme (DESIGN.md §2):
   regenerated and explored later: soundness is preserved (same argument as
   the single-chip engine).
 
+For **large m** (the ROADMAP's ``m >= 10^5`` regime) the dense-row
+exchange above stops scaling: every shipped candidate costs ``O(m)``.
+Passing a :class:`~repro.core.plan.SystemPlan` with ``num_shards == ndev``
+flips ``explore_distributed`` into the **neuron-axis-sharded** scheme
+(DESIGN.md §2): the frontier, archive and every candidate carry only their
+``mloc = ceil(m/ndev)`` neuron slice per device; expansion runs the sparse
+reference math on the local slice and exchanges only the *touched
+segments* — the fired produce of halo neurons along synapses that cross a
+shard boundary, a static ``O(cut)`` payload per step instead of ``O(m)``
+rows.  The batch-hash ownership scheme stays: global config hashes are
+recovered from additive per-slice partials
+(:func:`~repro.core.hashing.zobrist_hash` + one ``psum``) and each device
+still dedups exactly the candidates it hash-owns against its local
+visited shard.
+
 The per-step program is one jit(shard_map(...)) over a 1-D device axis —
 on the production mesh this is the flattened ``(pod, data, model)`` axes
 (SNP exploration is pure data parallelism; the model axes contribute their
@@ -49,10 +64,14 @@ try:                                  # jax >= 0.6 exposes it at top level
 except ImportError:                   # pragma: no cover - older jax
     from jax.experimental.shard_map import shard_map
 
-from .backend import BackendLike, get_backend
+from .backend import BackendLike, compile_with_plan, get_backend
 from .engine import ExploreResult, _traces_scan
-from .hashing import SENTINEL, config_hash
+from .hashing import SENTINEL, config_hash, zobrist_hash
 from .matrix import CompiledAny, is_compiled
+from .plan import (ShardArrays, ShardedCompiled, SystemPlan, compile_sharded,
+                   is_sharded, shard_view)
+from .semantics import (_decode_digits, _fired_packed, packed_rule_table,
+                        sparse_branch_info)
 from .system import SNPSystem
 
 __all__ = ["explore_distributed", "run_traces_distributed"]
@@ -164,17 +183,253 @@ def _device_step(comp, frontier, frontier_valid, visited_hi, visited_lo,
             flags, total_new)
 
 
+# ---------------------------------------------------------------------------
+# Neuron-axis sharded exploration (SystemPlan.num_shards == ndev)
+# ---------------------------------------------------------------------------
+
+
+def _psum_u32(x, axis):
+    """psum for uint32 lanes: wraparound int32 all-reduce, bitcast back."""
+    s = jax.lax.psum(jax.lax.bitcast_convert_type(x, jnp.int32), axis)
+    return jax.lax.bitcast_convert_type(s, jnp.uint32)
+
+
+def _sharded_step(arrs: ShardArrays, frontier, fvalid, visited_hi,
+                  visited_lo, archive, archive_n, flags, *, axis, ndev,
+                  mloc, hmax, max_branches):
+    """Per-device body of the neuron-axis-sharded BFS level.
+
+    Device ``d`` holds only the ``(F, mloc)`` neuron slice of the
+    (replicated-membership) frontier; all *bookkeeping* (validity, branch
+    counts, dedup verdicts, selection) is computed identically on every
+    device from psum/all_gather-combined scalars, so the devices stay in
+    lockstep without any O(m) exchange:
+
+    1. local branch info on the slice; the mixed-radix strides cross shard
+       boundaries, so each local stride is multiplied by the product of
+       the *downstream* shards' branch totals (one ``all_gather`` of ndev
+       scalars per config);
+    2. fired produce/consume per local neuron; the halo exchange ships
+       only the produce values along boundary-crossing synapses (static
+       ``send_idx`` metadata from the plan) with one tiled ``all_to_all``;
+    3. candidate slices = local slice + local delta (ELL gather over the
+       extended [local | halo] index space);
+    4. global hashes from additive per-slice partials (one psum); each
+       device dedups the candidates it hash-owns against its local
+       visited shard and the verdicts are psum-combined;
+    5. every device appends the same selected candidates (its slice of
+       them) to its archive shard.
+    """
+    F = frontier.shape[0]
+    T = max_branches
+    K = F * T
+    V = visited_hi.shape[0]
+    A = archive.shape[0]
+    S = ndev
+    idx = jax.lax.axis_index(axis)
+    view = shard_view(arrs)
+
+    # --- local branch info + cross-shard radix combine --------------------
+    info = sparse_branch_info(frontier, view)
+    tots = jax.lax.all_gather(info.psi, axis)                # (S, F)
+    after = (jnp.arange(S) > idx)[:, None]
+    below = jnp.prod(jnp.where(after, tots, 1.0), axis=0)    # (F,)
+    psi = jnp.prod(tots, axis=0)                             # (F,) replicated
+    stride = info.stride * below[:, None]
+    alive = jax.lax.psum(
+        jnp.any(info.app, axis=-1).astype(jnp.int32), axis) > 0
+
+    # --- fired actions on the local slice ---------------------------------
+    tab = packed_rule_table(info, view)                      # (F, mloc, R)
+    t = jnp.arange(T, dtype=jnp.int32)
+    digits = _decode_digits(t, info._replace(stride=stride))  # (F, T, mloc)
+    packed_f = _fired_packed(digits, tab)
+    prod_f = packed_f & 0xFFFF
+    cons_f = packed_f >> 16
+
+    # --- halo exchange: only the touched segments cross devices -----------
+    prod_pad = jnp.concatenate(
+        [prod_f, jnp.zeros((F, T, 1), jnp.int32)], axis=-1)
+    send = jnp.take(prod_pad, arrs.send_idx[0].reshape(-1), axis=-1)
+    recv = jax.lax.all_to_all(
+        send.reshape(F, T, S, hmax), axis, 2, 2, tiled=True)
+    prod_ext = jnp.concatenate(
+        [prod_f, recv.reshape(F, T, S * hmax),
+         jnp.zeros((F, T, 1), jnp.int32)], axis=-1)
+    delta = -cons_f
+    in_idx = arrs.in_idx[0]
+    for k in range(in_idx.shape[1]):  # static K_in, unrolled
+        delta = delta + jnp.take(prod_ext, in_idx[:, k], axis=-1)
+    cand = (frontier[:, None, :] + delta).reshape(K, mloc)
+    valid = ((t[None, :].astype(jnp.float32) < psi[:, None])
+             & alive[:, None] & fvalid[:, None]).reshape(K)
+    branch_ovf = jnp.any((psi > float(T)) & fvalid)
+
+    # --- global hashes from additive slice partials -----------------------
+    hi, lo = zobrist_hash(cand, offset=idx * mloc)
+    hi = jnp.where(valid, _psum_u32(hi, axis), SENTINEL)
+    lo = jnp.where(valid, _psum_u32(lo, axis), SENTINEL)
+
+    # --- dedup: each device judges the candidates it hash-owns ------------
+    owner = jnp.where(valid, (hi % np.uint32(S)).astype(jnp.int32), S)
+    mine = owner == idx
+    chi = jnp.where(mine, hi, SENTINEL)
+    clo = jnp.where(mine, lo, SENTINEL)
+    all_hi = jnp.concatenate([visited_hi, chi])
+    all_lo = jnp.concatenate([visited_lo, clo])
+    payload = jnp.concatenate(
+        [jnp.full((V,), K, jnp.int32), jnp.arange(K, dtype=jnp.int32)])
+    is_cand = jnp.concatenate(
+        [jnp.zeros((V,), jnp.int32), mine.astype(jnp.int32)])
+    s_hi, s_lo, s_cand, s_payload = jax.lax.sort(
+        (all_hi, all_lo, is_cand, payload), num_keys=3)
+    eq_prev = jnp.concatenate([
+        jnp.zeros((1,), bool),
+        (s_hi[1:] == s_hi[:-1]) & (s_lo[1:] == s_lo[:-1])])
+    new_sorted = (s_cand == 1) & ~eq_prev
+    new_local = jnp.zeros((K,), bool).at[s_payload].set(
+        new_sorted, mode="drop")
+    new_mask = jax.lax.psum(new_local.astype(jnp.int32), axis) > 0
+
+    # --- replicated selection + per-device state updates ------------------
+    n_new = jnp.sum(new_mask, dtype=jnp.int32)
+    order = jnp.argsort(jnp.logical_not(new_mask), stable=True)
+    sel = order[:F]
+    n_ins = jnp.minimum(n_new, F)
+    ins = jnp.arange(F) < n_ins
+    next_frontier = cand[sel]
+
+    sel_mine = mine[sel] & ins
+    ins_hi = jnp.where(sel_mine, hi[sel], SENTINEL)
+    ins_lo = jnp.where(sel_mine, lo[sel], SENTINEL)
+    visited_n = jnp.sum(visited_hi != SENTINEL) + jnp.sum(
+        (visited_hi == SENTINEL) & (visited_lo != SENTINEL))
+    n_mine = jnp.sum(sel_mine, dtype=jnp.int32)
+    m_hi, m_lo = jax.lax.sort(
+        (jnp.concatenate([visited_hi, ins_hi]),
+         jnp.concatenate([visited_lo, ins_lo])), num_keys=2)
+    visited_ovf = (visited_n + n_mine) > V
+
+    arch_idx = jnp.where(ins, archive_n + jnp.arange(F), A)
+    archive = archive.at[arch_idx].set(next_frontier, mode="drop")
+    archive_n = jnp.minimum(archive_n + n_ins, A)
+
+    flags = flags | jnp.stack([branch_ovf, n_new > F, visited_ovf])[None, :]
+    return (next_frontier, ins, m_hi[:V], m_lo[:V], archive, archive_n,
+            flags, n_ins)
+
+
+def _explore_neuron_sharded(
+    comp: ShardedCompiled, mesh: Mesh, axis: str, *, max_steps: int,
+    frontier_cap: int, visited_cap: int, max_branches: int,
+    init: Optional[Sequence[int]] = None,
+) -> ExploreResult:
+    """Host driver for the neuron-axis-sharded BFS.  ``frontier_cap`` is
+    the *global* frontier width (its membership bookkeeping is replicated;
+    only the neuron slices are per-device), ``visited_cap`` stays per
+    device (hash-owned shards, as in the dense-row scheme)."""
+    S, mloc = comp.num_shards, comp.shard_size
+    F, V, T = frontier_cap, visited_cap, max_branches
+    A = S * V   # global archive rows; each device stores its (A, mloc) slice
+    arrs = comp.arrays
+
+    if init is None:
+        init_full = np.asarray(arrs.init_loc).reshape(-1)
+    else:
+        init_full = np.zeros((S * mloc,), np.int32)
+        init_full[: comp.num_neurons] = np.asarray(init, np.int32)
+    hi0, lo0 = zobrist_hash(jnp.asarray(init_full))
+    hi0, lo0 = int(np.asarray(hi0)), int(np.asarray(lo0))
+    owner0 = hi0 % S
+    init_slices = init_full.reshape(S, mloc)
+
+    frontier = np.zeros((S * F, mloc), np.int32)
+    archive = np.zeros((S * A, mloc), np.int32)
+    for d in range(S):
+        frontier[d * F] = init_slices[d]
+        archive[d * A] = init_slices[d]
+    fvalid = np.zeros((F,), bool)
+    fvalid[0] = True
+    vhi = np.full((S * V,), int(SENTINEL), np.uint32)
+    vlo = np.full((S * V,), int(SENTINEL), np.uint32)
+    vhi[owner0 * V] = hi0
+    vlo[owner0 * V] = lo0
+    flags = np.zeros((S, 3), bool)
+
+    shard = NamedSharding(mesh, P(axis))
+    repl = NamedSharding(mesh, P())
+    comp_specs = ShardArrays(
+        rule_neuron=P(axis), consume=P(axis), produce=P(axis),
+        regex_base=P(axis), regex_period=P(axis), covering=P(axis),
+        seg_start=P(axis), seg_count=P(axis), rule_slots=P(),
+        in_idx=P(axis), send_idx=P(axis), out_local=P(axis),
+        init_loc=P(axis))
+    arrs_dev = jax.device_put(
+        arrs, jax.tree.map(lambda s: NamedSharding(mesh, s), comp_specs,
+                           is_leaf=lambda x: isinstance(x, P)))
+    state = (
+        jax.device_put(frontier, shard),
+        jax.device_put(jnp.asarray(fvalid), repl),
+        jax.device_put(vhi, shard), jax.device_put(vlo, shard),
+        jax.device_put(archive, shard),
+        jax.device_put(jnp.asarray(1, jnp.int32), repl),
+        jax.device_put(flags, shard),
+    )
+
+    step_fn = jax.jit(
+        shard_map(
+            functools.partial(_sharded_step, axis=axis, ndev=S, mloc=mloc,
+                              hmax=comp.halo_width, max_branches=T),
+            mesh=mesh,
+            in_specs=(comp_specs, P(axis), P(), P(axis), P(axis), P(axis),
+                      P(), P(axis)),
+            out_specs=(P(axis), P(), P(axis), P(axis), P(axis), P(),
+                       P(axis), P()),
+            check_rep=False,
+        ))
+
+    steps = 0
+    drained = False
+    for _ in range(max_steps):
+        (f, fv, hi, lo, arc, an, fl, total_new) = step_fn(arrs_dev, *state)
+        state = (f, fv, hi, lo, arc, an, fl)
+        steps += 1
+        if int(total_new) == 0:
+            drained = True
+            break
+
+    _, _, _, _, archive, archive_n, flags = state
+    n = int(archive_n)
+    m = comp.num_neurons
+    if n:
+        arc = np.asarray(archive).reshape(S, A, mloc)
+        configs = np.concatenate(list(arc), axis=1)[:n, :m]
+    else:
+        configs = np.zeros((0, m), np.int32)
+    flags = np.asarray(flags).reshape(S, 3).any(axis=0)
+    return ExploreResult(
+        configs=configs,
+        num_discovered=n,
+        steps=steps,
+        exhausted=drained and not flags.any(),
+        branch_overflow=bool(flags[0]),
+        frontier_overflow=bool(flags[1]),
+        visited_overflow=bool(flags[2]),
+    )
+
+
 def explore_distributed(
-    system: SNPSystem | CompiledAny,
+    system: SNPSystem | CompiledAny | ShardedCompiled,
     *,
     mesh: Optional[Mesh] = None,
     max_steps: int = 64,
-    frontier_cap: int = 64,       # per device
+    frontier_cap: int = 64,       # per device (global under a sharded plan)
     visited_cap: int = 2048,      # per device
     max_branches: int = 32,
     send_cap: Optional[int] = None,   # per (src,dst) pair
     init: Optional[Sequence[int]] = None,
     backend: BackendLike = "ref",
+    plan: Optional[SystemPlan] = None,
 ) -> ExploreResult:
     """Hash-partitioned multi-device BFS.  Semantics identical to
     :func:`repro.core.engine.explore`; scaling is linear in devices for
@@ -184,11 +439,49 @@ def explore_distributed(
     registry as the single-chip engine — :mod:`repro.core.backend`); each
     device runs ``backend.expand`` on its frontier shard inside the
     shard_map body, so e.g. the fused Pallas kernel or the sparse ELL path
-    serves the expansion on every chip with no changes here."""
-    be = get_backend(backend)
-    comp = system if is_compiled(system) else be.compile(system)
+    serves the expansion on every chip with no changes here.
+
+    ``plan`` (:class:`~repro.core.plan.SystemPlan`) selects the storage
+    layout.  With ``plan.num_shards == ndev`` the run switches to the
+    **neuron-axis-sharded** scheme (module docstring / DESIGN.md §2):
+    every frontier/archive row carries only its device's neuron slice and
+    the per-step exchange is the static halo of boundary-crossing
+    synapses, ``O(touched)`` instead of ``O(m)``.  That path runs the
+    sparse reference math directly (``backend`` must be ``"ref"`` or
+    ``"sparse"``; the fused kernels don't slice yet); ``frontier_cap`` is
+    then the global frontier width."""
     mesh, axis = _flat_mesh(mesh)
     ndev = mesh.devices.size
+    sharded_plan = plan is not None and plan.num_shards > 1
+    if is_sharded(system) or sharded_plan:
+        if is_sharded(system):
+            comp = system
+        else:
+            if not isinstance(system, SNPSystem):
+                raise ValueError(
+                    "neuron-axis sharded exploration needs the SNPSystem "
+                    "(or a pre-lowered ShardedCompiled), not a single-"
+                    f"device encoding ({type(system).__name__})")
+            comp = compile_sharded(system, plan)
+        if comp.num_shards != ndev:
+            raise ValueError(
+                f"plan.num_shards ({comp.num_shards}) must equal the mesh "
+                f"device count ({ndev}); build the plan with "
+                "sharding.specs.neuron_axis(ndev)")
+        be = get_backend(backend)
+        if be.name not in ("ref", "sparse"):
+            raise ValueError(
+                "neuron-axis sharded exploration runs the jnp sparse step "
+                "on each neuron slice; kernel backends "
+                "('pallas', 'sparse_pallas') are not supported under a "
+                f"sharded plan yet (got {be.name!r})")
+        return _explore_neuron_sharded(
+            comp, mesh, axis, max_steps=max_steps,
+            frontier_cap=frontier_cap, visited_cap=visited_cap,
+            max_branches=max_branches, init=init)
+    be = get_backend(backend)
+    comp = system if is_compiled(system) \
+        else compile_with_plan(be, system, plan)
     m = comp.num_neurons
     F, V, T = frontier_cap, visited_cap, max_branches
     C = send_cap if send_cap is not None else max(16, (F * T) // max(ndev, 1))
@@ -278,6 +571,7 @@ def run_traces_distributed(
     policy: str = "first", max_branches: int = 64,
     backend: BackendLike = "ref",
     mesh: Optional[Mesh] = None,
+    plan: Optional[SystemPlan] = None,
 ):
     """Mesh-sharded :func:`repro.core.engine.run_traces` (DESIGN.md §4).
 
@@ -296,8 +590,13 @@ def run_traces_distributed(
     """
     if policy not in ("first", "random"):
         raise ValueError(f"unknown policy {policy!r}")
+    if plan is not None and plan.num_shards > 1:
+        raise ValueError("trace serving shards the batch axis, not the "
+                         "neuron axis; plan.num_shards > 1 is only "
+                         "consumed by explore_distributed")
     be = get_backend(backend)
-    comp = system if is_compiled(system) else be.compile(system)
+    comp = system if is_compiled(system) \
+        else compile_with_plan(be, system, plan)
     seeds = np.asarray(seeds, np.uint32)
     if seeds.ndim != 1:
         raise ValueError(f"seeds must be 1-D, got shape {seeds.shape}")

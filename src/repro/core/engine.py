@@ -49,13 +49,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .backend import BackendLike, get_backend
+from .backend import BackendLike, compile_with_plan, get_backend
 from .hashing import SENTINEL, config_hash
 from .matrix import CompiledAny, is_compiled
+from .plan import SystemPlan
 from .system import SNPSystem
 
 __all__ = ["ExploreState", "ExploreResult", "explore", "successor_set",
            "emission_gaps", "run_trace", "run_traces"]
+
+
+def _resolve_comp(system, be, plan: Optional[SystemPlan]) -> CompiledAny:
+    """Single-device lowering: a pre-compiled encoding passes through, an
+    ``SNPSystem`` lowers via ``backend.compile(system, plan=...)``.  Plans
+    asking for a neuron-axis partition belong to ``explore_distributed``."""
+    if plan is not None and plan.num_shards > 1:
+        raise ValueError(
+            "plan.num_shards > 1 (neuron-axis sharding) is only consumed "
+            "by repro.core.distributed.explore_distributed")
+    return system if is_compiled(system) \
+        else compile_with_plan(be, system, plan)
 
 
 class ExploreState(NamedTuple):
@@ -214,6 +227,7 @@ def explore(
     max_branches: int = 64,
     init: Optional[Sequence[int]] = None,
     backend: BackendLike = "ref",
+    plan: Optional[SystemPlan] = None,
 ) -> ExploreResult:
     """BFS-explore the computation tree (paper Algorithm 1).
 
@@ -228,9 +242,14 @@ def explore(
     :class:`~repro.core.backend.StepBackend` instance); an ``SNPSystem`` is
     lowered by the backend's own ``compile``; the archive is identical
     across backends.
+
+    ``plan`` (:class:`~repro.core.plan.SystemPlan`) tunes the storage
+    layout the backend lowers to (e.g. ``encoding="hybrid"`` for
+    heavy-tailed graphs); the default plan is bit-identical to passing
+    none.
     """
     be = get_backend(backend)
-    comp = system if is_compiled(system) else be.compile(system)
+    comp = _resolve_comp(system, be, plan)
     init_arr = None if init is None else jnp.asarray(init, jnp.int32)
     state = _init_state(comp, frontier_cap, visited_cap, init_arr)
     state = _explore_loop(state, comp, max_steps, max_branches, be)
@@ -264,10 +283,11 @@ def _succ_one(config, comp, max_branches, backend):
 def successor_set(
     system: SNPSystem | CompiledAny, config: Sequence[int],
     max_branches: int = 64, backend: BackendLike = "ref",
+    plan: Optional[SystemPlan] = None,
 ) -> List[Tuple[Tuple[int, ...], int]]:
     """Distinct (successor, emission) pairs of one configuration."""
     be = get_backend(backend)
-    comp = system if is_compiled(system) else be.compile(system)
+    comp = _resolve_comp(system, be, plan)
     c = jnp.asarray(config, jnp.int32)
     cfgs, valid, emis, ovf = _succ_one(c, comp, max_branches, be)
     if bool(ovf):
@@ -374,6 +394,7 @@ def run_traces(
     seeds: Sequence[int] | np.ndarray | jnp.ndarray,
     policy: str = "first", max_branches: int = 64,
     backend: BackendLike = "ref",
+    plan: Optional[SystemPlan] = None,
 ):
     """Batched trajectory serving: B independent paths in one jitted scan.
 
@@ -386,7 +407,7 @@ def run_traces(
     if policy not in ("first", "random"):
         raise ValueError(f"unknown policy {policy!r}")
     be = get_backend(backend)
-    comp = system if is_compiled(system) else be.compile(system)
+    comp = _resolve_comp(system, be, plan)
     seeds = jnp.asarray(seeds, jnp.uint32)
     if seeds.ndim != 1:
         raise ValueError(f"seeds must be 1-D, got shape {seeds.shape}")
@@ -400,6 +421,7 @@ def run_trace(
     system: SNPSystem | CompiledAny, *, steps: int,
     policy: str = "first", seed: int = 0, max_branches: int = 64,
     backend: BackendLike = "ref",
+    plan: Optional[SystemPlan] = None,
 ):
     """Single-path simulation (deterministic or uniformly random branch).
 
@@ -410,5 +432,5 @@ def run_trace(
     """
     cfgs, emis, alive = run_traces(
         system, steps=steps, seeds=[seed], policy=policy,
-        max_branches=max_branches, backend=backend)
+        max_branches=max_branches, backend=backend, plan=plan)
     return cfgs[0], emis[0], alive[0]

@@ -221,11 +221,21 @@ def power_law(m: int, attach: int = 4, rules_per_neuron: int = 2,
     """Preferential attachment (Barabási–Albert): node ``i`` synapses onto
     ``attach`` distinct earlier nodes sampled by degree.  Mean out-degree
     is ``attach``; in-degree is heavy-tailed — the adversarial case for the
-    ELL in-adjacency (``K_in`` ≫ mean degree).  ``max_in`` caps hub
+    ELL in-adjacency (``K_in`` ≫ mean degree).
+
+    ``max_in=None`` (the default) is the **unbounded-hub** family: the top
+    hub's in-degree — hence a pure-ELL ``K_in`` and its padding — grows
+    with ``m``, which is exactly the workload the hybrid ELL+COO plan
+    (``SystemPlan(encoding="hybrid")``, DESIGN.md §3) exists for; the
+    hybrid benchmark tier sweeps this family.  ``max_in`` caps hub
     in-degree (rejection-sampled, with a deterministic fallback scan so a
-    saturated pool cannot stall generation — keep ``max_in >= 2·attach`` to
-    make the fallback rare), bounding ``K_in`` — without it the top hub's
-    in-degree (hence ELL width and step cost) grows with ``m``."""
+    saturated pool cannot stall generation — keep ``max_in >= 2·attach``
+    to make the fallback rare), bounding ``K_in`` for the pure-ELL tiers.
+
+    Deterministic in ``(m, attach, rules_per_neuron, max_spikes, seed,
+    max_in)`` on every Python version: candidate targets are drawn from a
+    seeded PRNG and committed in sorted order (never in hash/set order),
+    so equal arguments always build the identical system."""
     if not 1 <= attach < m:
         raise ValueError(f"need 1 <= attach < m, got attach={attach}, m={m}")
     if max_in is not None and max_in < attach:
@@ -250,9 +260,10 @@ def power_law(m: int, attach: int = 4, rules_per_neuron: int = 2,
             if max_in is None or in_deg[j] < max_in:
                 targets.add(j)
         if len(targets) < attach:
-            # Near-saturated pool (max_in close to attach): top up from an
-            # explicit scan of eligible earlier nodes so generation always
-            # terminates.
+            # Near-saturated pool (max_in close to attach), or an extreme
+            # hub-dominated pool in the unbounded family: top up from an
+            # explicit ascending scan of eligible earlier nodes so
+            # generation always terminates, deterministically.
             for j in range(i):
                 if len(targets) == attach:
                     break
@@ -262,7 +273,7 @@ def power_law(m: int, attach: int = 4, rules_per_neuron: int = 2,
                 raise ValueError(
                     f"cannot attach {attach} edges under max_in={max_in} "
                     f"at node {i}; raise max_in (>= 2*attach recommended)")
-        for j in targets:
+        for j in sorted(targets):
             syn.append((i, j))
             pool.append(j)
             in_deg[j] += 1

@@ -14,7 +14,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["config_hash", "SENTINEL"]
+__all__ = ["config_hash", "zobrist_hash", "SENTINEL"]
 
 # Sorts after every real hash; used for invalid / empty slots.
 SENTINEL = np.uint32(0xFFFFFFFF)
@@ -67,4 +67,39 @@ def config_hash(configs: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     hi = _fmix32(h1 ^ np.uint32(m))
     m_mix = np.uint32((m * int(_GOLDEN)) % (1 << 32))
     lo = _fmix32(h2 + m_mix)
+    return hi, lo
+
+
+_Z1 = np.uint32(0x9E3779B1)
+_Z2 = np.uint32(0x85EBCA77)
+_ZV1 = np.uint32(0x27D4EB2F)
+_ZV2 = np.uint32(0x165667B1)
+
+
+def zobrist_hash(configs: jnp.ndarray,
+                 offset=0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sum-combinable (Zobrist-style) 2 x uint32 hash of config *slices*.
+
+    Each (global position, value) pair is mixed through the murmur
+    finalizer independently and the lanes are **summed** (mod 2^32), so
+    partial hashes of disjoint neuron ranges *add up* to the hash of the
+    concatenated configuration:
+
+        ``zobrist(c) == Σ_d zobrist(c[lo_d:hi_d], offset=lo_d)``
+
+    That additivity is what the neuron-axis-sharded frontier needs — each
+    device hashes only its ``(..., mloc)`` slice (``offset`` = its global
+    neuron offset, may be traced) and one ``psum`` yields the global hash
+    (DESIGN.md §2).  Weaker ordering structure than :func:`config_hash`'s
+    polynomial lanes, but each summand is fully avalanched, so collisions
+    stay at the 2^-64 birthday level.
+    """
+    x = configs.astype(jnp.uint32)
+    k = configs.shape[-1]
+    pos = jnp.arange(k, dtype=jnp.uint32) + \
+        jnp.asarray(offset, dtype=jnp.uint32) + jnp.uint32(1)
+    hi = jnp.sum(_fmix32((pos * _Z1) ^ (x * _ZV1)), axis=-1,
+                 dtype=jnp.uint32)
+    lo = jnp.sum(_fmix32((pos * _Z2) + (x * _ZV2) + _GOLDEN), axis=-1,
+                 dtype=jnp.uint32)
     return hi, lo

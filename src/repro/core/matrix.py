@@ -14,7 +14,12 @@ Two lowerings of an :class:`~repro.core.system.SNPSystem`, both with rules
   out-degree, so ``nnz(M_Π) = O(n·degree)`` while the dense matrix is
   ``O(n·m)`` — the sparse step backends (``"sparse"``, ``"sparse_pallas"``)
   run on this encoding in ``O(B·T·m·degree)`` instead of ``O(B·T·n·m)``.
-  Layout details in DESIGN.md §3.
+  With ``hub_threshold=H`` (requested through a
+  :class:`~repro.core.plan.SystemPlan` with ``encoding="hybrid"``) the ELL
+  in-adjacency is capped at ``H`` entries per neuron and the tail synapses
+  of hub neurons spill into a COO segment (``coo_src``/``coo_dst``,
+  combined by segment-sum) — exact, and no padding blow-up on heavy-tailed
+  graphs (power-law without ``max_in``).  Layout details in DESIGN.md §3.
 
 Both compilers build their arrays from vectorized numpy adjacency indexing
 (no per-rule × per-neuron Python loops), so systems with ``m >= 10^4``
@@ -102,6 +107,9 @@ class CompiledSparseSNP(NamedTuple):
     ell_nnz: jnp.ndarray        # (n,)  int32 — real row lengths
     # -- ELL in-adjacency of the synapse graph ----------------------------
     in_idx: jnp.ndarray         # (m, Kin) int32 — in-neighbors, pad m
+    # -- COO tail of the in-adjacency (hybrid encoding; empty for pure ELL)
+    coo_src: jnp.ndarray        # (Ec,) int32 — tail in-neighbor
+    coo_dst: jnp.ndarray        # (Ec,) int32 — tail target neuron (sorted)
 
     @property
     def num_rules(self) -> int:
@@ -122,6 +130,17 @@ class CompiledSparseSNP(NamedTuple):
     @property
     def max_in_degree(self) -> int:
         return self.in_idx.shape[1]
+
+    @property
+    def is_hybrid(self) -> bool:
+        """True when the in-adjacency carries a COO tail (hybrid plan)."""
+        return self.coo_src.shape[0] > 0
+
+    @property
+    def in_adjacency_slots(self) -> int:
+        """Total in-adjacency storage slots (ELL padding included) — the
+        quantity the hybrid split minimizes on heavy-tailed graphs."""
+        return self.in_idx.size + self.coo_src.shape[0]
 
 
 CompiledAny = Union[CompiledSNP, CompiledSparseSNP]
@@ -248,10 +267,20 @@ def compile_system(system: SNPSystem) -> CompiledSNP:
     )
 
 
-def compile_system_sparse(system: SNPSystem) -> CompiledSparseSNP:
+def compile_system_sparse(system: SNPSystem, *,
+                          hub_threshold: int | None = None
+                          ) -> CompiledSparseSNP:
     """Sparse lowering: ELL rows of ``M_Π`` + per-neuron segments + ELL
     in-adjacency.  Never allocates anything ``O(n·m)``; memory and compile
-    time are ``O(n·K + m·Kin)`` with measured widths."""
+    time are ``O(n·K + m·Kin)`` with measured widths.
+
+    ``hub_threshold=H`` selects the **hybrid** in-adjacency: the ELL part
+    is capped at ``H`` entries per neuron and every further in-synapse of a
+    hub neuron lands in the COO tail (``coo_src``/``coo_dst``, sorted by
+    ``(dst, src)``), so heavy-tailed graphs stop paying ``m·Kin`` padding
+    for one hub.  ``None`` (default) is the pure-ELL layout, bit-identical
+    to the pre-plan encoding.  Callers normally reach this through
+    ``backend.compile(system, plan=...)`` (DESIGN.md §3)."""
     m, n = system.num_neurons, system.num_rules
     low = _lower(system)
 
@@ -283,13 +312,22 @@ def compile_system_sparse(system: SNPSystem) -> CompiledSparseSNP:
 
     # -- ELL in-adjacency (transposed synapse graph) ----------------------
     # Entries sorted by (target, source); a ragged arange over the in-degree
-    # histogram yields each entry's slot within its target's row.
+    # histogram yields each entry's slot within its target's row.  With a
+    # hub threshold, slots >= threshold spill to the COO tail (still in
+    # (target, source) order, so the split is deterministic).
     in_deg = np.bincount(low.dst, minlength=m)
-    Kin = int(max(in_deg.max() if in_deg.size else 0, 1))
+    kin_full = int(max(in_deg.max() if in_deg.size else 0, 1))
+    if hub_threshold is not None and hub_threshold < 1:
+        raise ValueError(f"hub_threshold must be >= 1, got {hub_threshold}")
+    Kin = kin_full if hub_threshold is None else min(kin_full,
+                                                    int(hub_threshold))
     o = np.lexsort((low.src, low.dst))
     slot = _ragged_arange(in_deg)
+    ell_part = slot < Kin
     in_idx = np.full((m, Kin), m, dtype=np.int32)
-    in_idx[low.dst[o], slot] = low.src[o]
+    in_idx[low.dst[o][ell_part], slot[ell_part]] = low.src[o][ell_part]
+    coo_src = low.src[o][~ell_part].astype(np.int32)
+    coo_dst = low.dst[o][~ell_part].astype(np.int32)
 
     return CompiledSparseSNP(
         rule_neuron=jnp.asarray(low.neuron),
@@ -311,4 +349,6 @@ def compile_system_sparse(system: SNPSystem) -> CompiledSparseSNP:
         ell_val=jnp.asarray(ell_val),
         ell_nnz=jnp.asarray(ell_nnz),
         in_idx=jnp.asarray(in_idx),
+        coo_src=jnp.asarray(coo_src),
+        coo_dst=jnp.asarray(coo_dst),
     )

@@ -1,0 +1,360 @@
+"""Partition/encoding planning layer: one `SystemPlan` in front of compile.
+
+The paper's matrix representation makes the SNP transition device-friendly,
+but a monolithic per-device encoding stops at ~10^4 neurons.  Everything a
+compiler must decide *about storage layout* — and nothing about semantics —
+lives here:
+
+* **encoding per neuron block** — ``"dense"`` (the paper's ``M_Π``),
+  ``"ell"`` (PR 2's ELL/segment layout), or ``"hybrid"``: ELL capped at a
+  hub threshold with the tail synapses of heavy neurons spilled into a COO
+  segment combined by segment-sum.  Hybrid is the heavy-tail answer
+  (power-law graphs without ``max_in``): pure ELL pads *every* neuron's
+  in-adjacency row to the top hub's in-degree, hybrid pads only to the
+  threshold (DESIGN.md §3).
+* **neuron-axis partition** — ``num_shards > 1`` lowers to a
+  :class:`ShardedCompiled`: per-shard encodings (stacked so shard ``d``'s
+  slice rides a ``shard_map`` device axis) plus the halo/exchange metadata
+  saying which remote neuron segments each shard's rules read.  Consumed by
+  :func:`repro.core.distributed.explore_distributed` (DESIGN.md §2).
+
+Backends accept a plan in ``compile(system, plan=...)``
+(:mod:`repro.core.backend`); the default plan (``SystemPlan()``) reproduces
+each backend's historical encoding bit-for-bit, so every existing workload
+is unchanged until a plan asks for more.
+
+Decision rules (``SystemPlan.for_system``): let ``mean`` be the mean
+in-degree and ``Kin`` the max.  The auto hub threshold is
+``H = max(4, 4·ceil(mean))`` — wide enough that regular graphs
+(ring lattice, torus, Erdős–Rényi at benchmark densities) keep a zero COO
+tail, tight enough that a power-law hub spills.  Hybrid is chosen iff
+``Kin > 2·H`` (the padding saved is at least half the ELL array);
+otherwise plain ELL.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .system import SNPSystem
+
+__all__ = [
+    "SystemPlan",
+    "ShardArrays",
+    "ShardedCompiled",
+    "auto_hub_threshold",
+    "compile_sharded",
+    "is_sharded",
+]
+
+_ENCODINGS = ("auto", "dense", "ell", "hybrid")
+
+# Dummy padding rules (sharded lowering) use this regex base: applicability
+# requires spikes == 2^24, which the engine's spike-count contract
+# (DESIGN.md §2, counts < 2^24) makes unreachable.
+_NEVER_BASE = 1 << 24
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemPlan:
+    """How to lay an SNP system out on device(s).
+
+    * ``encoding`` — ``"auto"`` (the backend's native layout: dense for
+      ``ref``/``pallas``, ELL for the sparse pair), ``"dense"``, ``"ell"``,
+      or ``"hybrid"`` (ELL capped at ``hub_threshold`` + COO tail).
+    * ``hub_threshold`` — in-degree cap for the hybrid ELL part; ``None``
+      lets :func:`auto_hub_threshold` pick from the degree histogram.
+    * ``num_shards`` — neuron-axis partition count; ``> 1`` lowers through
+      :func:`compile_sharded` and is only consumed by
+      ``explore_distributed`` (one shard per device).
+
+    Frozen and hashable, so a plan can ride through
+    ``jit(static_argnames=...)`` with the backend.
+    """
+
+    encoding: str = "auto"
+    hub_threshold: Optional[int] = None
+    num_shards: int = 1
+
+    def __post_init__(self) -> None:
+        if self.encoding not in _ENCODINGS:
+            raise ValueError(
+                f"unknown encoding {self.encoding!r}; one of {_ENCODINGS}")
+        if self.hub_threshold is not None and self.hub_threshold < 1:
+            raise ValueError(
+                f"hub_threshold must be >= 1, got {self.hub_threshold}")
+        if self.num_shards < 1:
+            raise ValueError(
+                f"num_shards must be >= 1, got {self.num_shards}")
+
+    @staticmethod
+    def default() -> "SystemPlan":
+        """The identity plan: every backend keeps its historical encoding."""
+        return SystemPlan()
+
+    @staticmethod
+    def for_system(system: SNPSystem, *,
+                   num_shards: int = 1) -> "SystemPlan":
+        """Concrete plan from the degree histogram (module docstring
+        rules): hybrid iff the max in-degree is heavy-tailed relative to
+        the mean, else plain ELL.  With ``num_shards > 1`` the encoding
+        stays ELL regardless — the sharded lowering has no COO stage yet
+        (:func:`compile_sharded` refuses the combination; ROADMAP)."""
+        in_deg = _in_degrees(system)
+        h = auto_hub_threshold(in_deg)
+        kin = int(in_deg.max()) if in_deg.size else 0
+        if num_shards == 1 and kin > 2 * h:
+            return SystemPlan(encoding="hybrid", hub_threshold=h)
+        return SystemPlan(encoding="ell", num_shards=num_shards)
+
+    def resolved_hub_threshold(self, system: SNPSystem) -> Optional[int]:
+        """The hub threshold ``compile_system_sparse`` should cap ELL rows
+        at: ``None`` unless this plan asks for the hybrid encoding."""
+        if self.encoding != "hybrid":
+            return None
+        if self.hub_threshold is not None:
+            return self.hub_threshold
+        return auto_hub_threshold(_in_degrees(system))
+
+
+def _in_degrees(system: SNPSystem) -> np.ndarray:
+    syn = np.asarray(system.synapses, np.int64).reshape(-1, 2)
+    return np.bincount(syn[:, 1], minlength=system.num_neurons) \
+        if syn.size else np.zeros((system.num_neurons,), np.int64)
+
+
+def auto_hub_threshold(in_deg: np.ndarray) -> int:
+    """``max(4, 4·ceil(mean nonzero in-degree))`` — see module docstring."""
+    in_deg = np.asarray(in_deg)
+    nz = in_deg[in_deg > 0]
+    mean = float(nz.mean()) if nz.size else 0.0
+    return max(4, 4 * math.ceil(mean))
+
+
+# ---------------------------------------------------------------------------
+# Neuron-axis sharded lowering
+# ---------------------------------------------------------------------------
+
+
+class ShardArrays(NamedTuple):
+    """Stacked per-shard arrays: leading axis ``S`` = shard id, sharded
+    ``P(axis)`` into a ``shard_map`` so device ``d`` sees shard ``d``'s
+    slice.  ``rule_slots`` is the one replicated leaf (it carries ``R`` in
+    its shape for every shard alike).
+
+    Shapes: ``S`` shards, ``mloc = ceil(m/S)`` neurons per shard, ``nloc``
+    = max rules per shard (padded with never-applicable dummies *after*
+    the real, neuron-sorted prefix — the segment tables only cover the
+    real prefix), ``Kin`` = max in-degree, ``Hmax`` = max halo segment
+    between any shard pair.
+
+    ``in_idx`` indexes the *extended* per-device produce buffer
+    ``[local (mloc) | halo (S·Hmax) | zero (1)]``: a remote in-neighbor
+    owned by shard ``o`` at halo slot ``s`` is ``mloc + o·Hmax + s``;
+    padding points at the trailing zero (``mloc + S·Hmax``).
+    ``send_idx[d, p]`` lists the local neuron indices shard ``d`` must
+    ship to peer ``p`` (ascending, padded with ``mloc`` = a zero slot),
+    so one tiled ``all_to_all`` realizes every halo.
+    """
+
+    rule_neuron: jnp.ndarray    # (S, nloc) i32 — local neuron of each rule
+    consume: jnp.ndarray        # (S, nloc) i32
+    produce: jnp.ndarray        # (S, nloc) i32
+    regex_base: jnp.ndarray     # (S, nloc) i32
+    regex_period: jnp.ndarray   # (S, nloc) i32
+    covering: jnp.ndarray       # (S, nloc) bool
+    seg_start: jnp.ndarray      # (S, mloc) i32
+    seg_count: jnp.ndarray      # (S, mloc) i32
+    rule_slots: jnp.ndarray     # (R,) i32 == arange(R)  [replicated]
+    in_idx: jnp.ndarray         # (S, mloc, Kin) i32 — extended space
+    send_idx: jnp.ndarray       # (S, S, Hmax) i32 — local ids, pad mloc
+    out_local: jnp.ndarray      # (S,) i32 — local output neuron or mloc
+    init_loc: jnp.ndarray       # (S, mloc) i32 — C_0 slices (zero padded)
+
+
+class ShardView(NamedTuple):
+    """One shard's de-stacked arrays, duck-typing the ``CompiledSparseSNP``
+    fields that :func:`repro.core.semantics.applicability`,
+    :func:`~repro.core.semantics.sparse_branch_info` and
+    :func:`~repro.core.semantics.packed_rule_table` read — so the sharded
+    device step reuses the sparse reference math verbatim on its local
+    neuron slice."""
+
+    rule_neuron: jnp.ndarray
+    consume: jnp.ndarray
+    produce: jnp.ndarray
+    regex_base: jnp.ndarray
+    regex_period: jnp.ndarray
+    covering: jnp.ndarray
+    seg_start: jnp.ndarray
+    seg_count: jnp.ndarray
+    rule_slots: jnp.ndarray
+
+    @property
+    def num_rules(self) -> int:
+        return self.rule_neuron.shape[0]
+
+    @property
+    def num_neurons(self) -> int:
+        return self.seg_start.shape[0]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShardedCompiled:
+    """Neuron-axis partitioned lowering: stacked shard encodings + halo
+    metadata.  Produced by :func:`compile_sharded`, consumed by
+    ``explore_distributed`` (DESIGN.md §2); the static ints live outside
+    the array pytree so they stay Python constants under ``jit``."""
+
+    arrays: ShardArrays
+    plan: SystemPlan
+    num_neurons: int            # true m (before padding to S·mloc)
+    num_rules: int              # true n (before dummy padding)
+    shard_size: int             # mloc
+    num_shards: int             # S
+    halo_width: int             # Hmax
+
+    @property
+    def init_config(self) -> jnp.ndarray:
+        """Full (m,) initial configuration, reassembled from the slices."""
+        return self.arrays.init_loc.reshape(-1)[: self.num_neurons]
+
+
+def is_sharded(obj) -> bool:
+    return isinstance(obj, ShardedCompiled)
+
+
+def compile_sharded(system: SNPSystem, plan: SystemPlan) -> ShardedCompiled:
+    """Lower ``system`` to ``plan.num_shards`` neuron-axis shards.
+
+    Host-side numpy, same vectorized-adjacency discipline as the other
+    compilers (the only Python loops are over ``S`` and ``S²`` shard
+    pairs).  Every shard gets identical array *shapes* (rules padded with
+    never-applicable dummies, halos padded to the max pair width) so the
+    stacked arrays ride one ``shard_map`` program.
+    """
+    # Local import: matrix imports stay plan-free (plan -> matrix only).
+    from .matrix import _lower, _ragged_arange
+
+    if plan.encoding == "hybrid":
+        # The sharded device step has no COO segment-sum stage yet, and
+        # the compile contract (backend.py) forbids silently downgrading a
+        # requested encoding — refuse instead.
+        raise ValueError(
+            "neuron-axis sharding does not support the hybrid ELL+COO "
+            "encoding yet (the sharded step gathers over per-shard ELL "
+            "rows only — see ROADMAP); use encoding='ell' with "
+            "num_shards > 1")
+    if plan.encoding not in ("auto", "ell"):
+        # Same contract when explore_distributed reaches here directly,
+        # bypassing the backend's _require_encoding check.
+        raise ValueError(
+            f"neuron-axis sharding lowers to per-shard ELL encodings; "
+            f"plan encoding {plan.encoding!r} cannot be realized "
+            "(supported: 'auto', 'ell')")
+    S = plan.num_shards
+    m = system.num_neurons
+    low = _lower(system)
+    n = low.neuron.shape[0]
+    mloc = -(-m // S)
+
+    # -- rules, re-indexed to local neurons, padded with dummies ----------
+    rule_shard = low.neuron.astype(np.int64) // mloc
+    counts = np.bincount(rule_shard, minlength=S)
+    nloc = int(max(1, counts.max()))
+    starts = np.cumsum(counts) - counts
+
+    rn = np.full((S, nloc), mloc - 1, np.int32)
+    cons = np.ones((S, nloc), np.int32)
+    prod = np.zeros((S, nloc), np.int32)
+    base = np.full((S, nloc), _NEVER_BASE, np.int32)
+    period = np.zeros((S, nloc), np.int32)
+    cov = np.zeros((S, nloc), bool)
+    seg_count = np.zeros((S, mloc), np.int32)
+    for d in range(S):
+        k = int(counts[d])
+        sl = slice(int(starts[d]), int(starts[d]) + k)
+        rn[d, :k] = low.neuron[sl] - d * mloc
+        cons[d, :k] = low.consume[sl]
+        prod[d, :k] = low.produce[sl]
+        base[d, :k] = low.regex_base[sl]
+        period[d, :k] = low.regex_period[sl]
+        cov[d, :k] = low.covering[sl]
+        seg_count[d] = np.bincount(rn[d, :k], minlength=mloc)
+    seg_start = (np.cumsum(seg_count, axis=1) - seg_count).astype(np.int32)
+    R = int(max(1, seg_count.max()))
+
+    # -- halo metadata: which locals each shard ships to each peer --------
+    src, dst = low.src.astype(np.int64), low.dst.astype(np.int64)
+    ssh, dsh = src // mloc, dst // mloc
+    halo = {}
+    hmax = 1
+    for o in range(S):
+        for d in range(S):
+            if o == d:
+                continue
+            need = np.unique(src[(dsh == d) & (ssh == o)])
+            if need.size:
+                halo[(o, d)] = need
+                hmax = max(hmax, int(need.size))
+    send_idx = np.full((S, S, hmax), mloc, np.int32)
+    for (o, d), need in halo.items():
+        send_idx[o, d, : need.size] = need - o * mloc
+
+    # -- in-adjacency in extended [local | halo | zero] index space -------
+    in_deg = np.bincount(dst, minlength=m)
+    kin = int(max(1, in_deg.max() if in_deg.size else 0))
+    z = mloc + S * hmax
+    in_idx = np.full((S, mloc, kin), z, np.int32)
+    if src.size:
+        order = np.lexsort((src, dst))
+        s_s, d_s = src[order], dst[order]
+        slot = _ragged_arange(in_deg)
+        e_dsh, e_ssh = d_s // mloc, s_s // mloc
+        ext = np.where(e_ssh == e_dsh, s_s - e_dsh * mloc, -1)
+        for (o, d), need in halo.items():
+            sel = (e_ssh == o) & (e_dsh == d)
+            if sel.any():
+                pos = np.searchsorted(need, s_s[sel])
+                ext[sel] = mloc + o * hmax + pos
+        in_idx[e_dsh, d_s - e_dsh * mloc, slot] = ext
+
+    out_local = np.full((S,), mloc, np.int32)
+    if system.output_neuron >= 0:
+        out_local[system.output_neuron // mloc] = \
+            system.output_neuron % mloc
+
+    init = np.zeros((S * mloc,), np.int32)
+    init[:m] = np.asarray(system.initial_spikes, np.int32)
+
+    arrays = ShardArrays(
+        rule_neuron=jnp.asarray(rn), consume=jnp.asarray(cons),
+        produce=jnp.asarray(prod), regex_base=jnp.asarray(base),
+        regex_period=jnp.asarray(period), covering=jnp.asarray(cov),
+        seg_start=jnp.asarray(seg_start), seg_count=jnp.asarray(seg_count),
+        rule_slots=jnp.arange(R, dtype=jnp.int32),
+        in_idx=jnp.asarray(in_idx), send_idx=jnp.asarray(send_idx),
+        out_local=jnp.asarray(out_local),
+        init_loc=jnp.asarray(init.reshape(S, mloc)),
+    )
+    return ShardedCompiled(arrays=arrays, plan=plan, num_neurons=m,
+                           num_rules=n, shard_size=mloc, num_shards=S,
+                           halo_width=hmax)
+
+
+def shard_view(arrays: ShardArrays) -> ShardView:
+    """Per-device view of stacked arrays whose leading shard axis has
+    already been split away by ``shard_map`` (each field is ``(1, ...)``
+    except the replicated ``rule_slots``)."""
+    return ShardView(
+        rule_neuron=arrays.rule_neuron[0], consume=arrays.consume[0],
+        produce=arrays.produce[0], regex_base=arrays.regex_base[0],
+        regex_period=arrays.regex_period[0], covering=arrays.covering[0],
+        seg_start=arrays.seg_start[0], seg_count=arrays.seg_count[0],
+        rule_slots=arrays.rule_slots,
+    )

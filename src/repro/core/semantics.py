@@ -343,6 +343,14 @@ def sparse_next_configs(
     delta = -cons_f
     for kk in range(comp.in_idx.shape[1]):  # static K_in, unrolled
         delta = delta + jnp.take(prod_pad, comp.in_idx[:, kk], axis=-1)
+    if comp.coo_src.shape[0]:  # hybrid encoding: COO tail via segment-sum
+        # Tail synapses of hub neurons (in-degree past the plan's hub
+        # threshold, DESIGN.md §3): gather the fired produce at each tail
+        # source, segment-sum into the target neurons.  int32, exact.
+        contrib = jnp.take(prod_pad, comp.coo_src, axis=-1)  # (B, T, Ec)
+        tail = jax.ops.segment_sum(
+            jnp.moveaxis(contrib, -1, 0), comp.coo_dst, num_segments=m)
+        delta = delta + jnp.moveaxis(tail, 0, -1)
 
     out = cfg[:, None, :] + delta
     valid = (t[None, :].astype(jnp.float32) < info.psi[:, None]) \

@@ -51,6 +51,16 @@ def snp_step_sparse(
     B, m = configs.shape
     T = max_branches
 
+    if comp.coo_src.shape[0]:
+        # Static-shape check, so this raises at trace time with a real
+        # message instead of a shape crash deep in the kernel.
+        raise NotImplementedError(
+            "snp_step_sparse: the fused kernel supports only the pure-ELL "
+            "in-adjacency; this system was compiled with a hybrid ELL+COO "
+            f"plan ({int(comp.coo_src.shape[0])} tail synapses).  Use "
+            "backend='sparse' (the SparsePallasBackend falls back to it "
+            "automatically with a warning).")
+
     block_b = min(block_b, max(B, 1))
     block_t = min(block_t, T)
 

@@ -1,6 +1,6 @@
 """Logical-axis sharding plans (FSDP + TP + EP + SP) for the production
 mesh."""
 
-from .specs import ShardingPlan, make_plan
+from .specs import ShardingPlan, make_plan, neuron_axis
 
-__all__ = ["ShardingPlan", "make_plan"]
+__all__ = ["ShardingPlan", "make_plan", "neuron_axis"]

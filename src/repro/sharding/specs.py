@@ -23,8 +23,23 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core.plan import SystemPlan
 
-__all__ = ["ShardingPlan", "make_plan"]
+__all__ = ["ShardingPlan", "make_plan", "neuron_axis"]
+
+
+def neuron_axis(num_shards: int, *, encoding: str = "ell",
+                hub_threshold: Optional[int] = None) -> SystemPlan:
+    """A :class:`~repro.core.plan.SystemPlan` that partitions the SNP
+    neuron axis over ``num_shards`` devices — the plan
+    ``explore_distributed`` consumes for its neuron-axis-sharded frontier
+    (one shard per device of the flattened 1-D mesh; DESIGN.md §2).
+    Build it from a live mesh via :meth:`ShardingPlan.neuron_axis` or
+    directly from ``len(jax.devices())``.  ``encoding="hybrid"`` combined
+    with ``num_shards > 1`` is refused at compile time (the sharded step
+    has no COO stage yet — ROADMAP)."""
+    return SystemPlan(encoding=encoding, hub_threshold=hub_threshold,
+                      num_shards=num_shards)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -250,6 +265,17 @@ class ShardingPlan:
 
     def named(self, spec: P) -> NamedSharding:
         return NamedSharding(self.mesh, spec)
+
+    # ---- SNP partition planning ---------------------------------------------
+    def neuron_axis(self, *, encoding: str = "ell",
+                    hub_threshold: Optional[int] = None) -> SystemPlan:
+        """Neuron-axis :class:`~repro.core.plan.SystemPlan` sized to this
+        plan's mesh: all devices (model/TP axes included — SNP exploration
+        is pure data parallelism) contribute one neuron shard each.  Pair
+        it with :meth:`trace_mesh`'s flattening convention and pass to
+        ``explore_distributed(plan=...)``."""
+        return neuron_axis(int(self.mesh.devices.size), encoding=encoding,
+                           hub_threshold=hub_threshold)
 
     # ---- SNP trace serving --------------------------------------------------
     def trace_mesh(self) -> Mesh:

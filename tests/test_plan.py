@@ -1,0 +1,269 @@
+"""SystemPlan layer tests: default-plan bit-identity for every registered
+backend, hybrid ELL+COO encoding round-trips and ref-equivalence (the edge
+cases a split in-adjacency can get wrong: zero tail, all tail, a single
+hub, ruleless neurons), padding-memory wins on unbounded power-law graphs,
+plan validation errors, and the sparse_pallas hybrid fallback."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (SystemPlan, auto_hub_threshold, available_backends,
+                        compile_system, compile_system_sparse, explore,
+                        get_backend, paper_pi)
+from repro.core.generators import power_law, random_system, ring_lattice
+from repro.core.semantics import next_configs, sparse_next_configs
+from repro.core.system import Rule, SNPSystem
+from repro.kernels.snp_step import snp_step_sparse
+from repro.sharding import neuron_axis
+
+SYSTEMS = {
+    "paper-pi": (paper_pi(True), 16),
+    "random-17": (random_system(17, 3, 0.3, seed=3), 32),
+    "ring-lattice-12": (ring_lattice(12, 3, seed=1), 16),
+    "power-law-40": (power_law(40, 3, seed=3), 16),
+}
+
+
+def _assert_same_step(a, b):
+    va, vb = np.asarray(a.valid), np.asarray(b.valid)
+    np.testing.assert_array_equal(va, vb)
+    np.testing.assert_array_equal(np.asarray(a.overflow),
+                                  np.asarray(b.overflow))
+    np.testing.assert_array_equal(
+        np.where(va[..., None], np.asarray(a.configs), 0),
+        np.where(vb[..., None], np.asarray(b.configs), 0))
+    np.testing.assert_array_equal(
+        np.where(va, np.asarray(a.emissions), 0),
+        np.where(vb, np.asarray(b.emissions), 0))
+
+
+def _in_degrees(system):
+    syn = np.asarray(system.synapses).reshape(-1, 2)
+    return np.bincount(syn[:, 1], minlength=system.num_neurons)
+
+
+# ---------------------------------------------------------------------------
+# the plan object
+# ---------------------------------------------------------------------------
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="encoding"):
+        SystemPlan(encoding="csr")
+    with pytest.raises(ValueError, match="hub_threshold"):
+        SystemPlan(encoding="hybrid", hub_threshold=0)
+    with pytest.raises(ValueError, match="num_shards"):
+        SystemPlan(num_shards=0)
+    # hashable (rides through jit static args with the backend)
+    assert hash(SystemPlan()) == hash(SystemPlan.default())
+
+
+def test_for_system_decision_rules():
+    """Hybrid iff the max in-degree is heavy-tailed vs the auto threshold
+    (module docstring of core.plan): regular lattices stay ELL, unbounded
+    power-law hubs flip to hybrid once the hub outgrows 2x the
+    threshold."""
+    lattice = ring_lattice(64, 4, seed=0)
+    assert SystemPlan.for_system(lattice).encoding == "ell"
+    hubby = power_law(400, 3, seed=0)           # max_in=None: unbounded hub
+    in_deg = _in_degrees(hubby)
+    h = auto_hub_threshold(in_deg)
+    assert int(in_deg.max()) > 2 * h            # the family is heavy-tailed
+    plan = SystemPlan.for_system(hubby)
+    assert plan.encoding == "hybrid" and plan.hub_threshold == h
+
+
+def test_neuron_axis_helper():
+    plan = neuron_axis(8)
+    assert plan.num_shards == 8 and plan.encoding == "ell"
+    plan = neuron_axis(4, encoding="hybrid", hub_threshold=6)
+    assert (plan.num_shards, plan.encoding, plan.hub_threshold) == \
+        (4, "hybrid", 6)
+
+
+# ---------------------------------------------------------------------------
+# default plan == pre-refactor output, for every registered backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(available_backends()))
+def test_default_plan_is_bit_identical(name):
+    """Registry-driven: compile with no plan, the default plan, and
+    plan=None must produce identical encodings (leaf-for-leaf) and
+    identical expand outputs for every backend."""
+    system, T = SYSTEMS["random-17"]
+    be = get_backend(name)
+    plain = be.compile(system)
+    planned = be.compile(system, plan=SystemPlan.default())
+    assert jax.tree.structure(plain) == jax.tree.structure(planned)
+    for a, b in zip(jax.tree.leaves(plain), jax.tree.leaves(planned)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    rng = np.random.default_rng(0)
+    cfgs = jnp.asarray(rng.integers(0, 4, size=(5, 17)), jnp.int32)
+    _assert_same_step(be.expand(cfgs, plain, T),
+                      be.expand(cfgs, planned, T))
+
+
+@pytest.mark.parametrize("name", sorted(available_backends()))
+def test_backends_reject_foreign_plan_encodings(name):
+    system = paper_pi(True)
+    be = get_backend(name)
+    dense = be.name in ("ref", "pallas")
+    bad = "hybrid" if dense else "dense"
+    with pytest.raises(ValueError, match="cannot realize"):
+        be.compile(system, plan=SystemPlan(encoding=bad))
+    if dense:
+        with pytest.raises(ValueError, match="dense-only"):
+            be.compile(system, plan=SystemPlan(num_shards=2))
+
+
+def test_single_device_consumers_reject_sharded_plans():
+    from repro.core import run_traces
+    from repro.core.distributed import run_traces_distributed
+
+    with pytest.raises(ValueError, match="explore_distributed"):
+        explore(paper_pi(True), plan=SystemPlan(num_shards=2))
+    with pytest.raises(ValueError, match="explore_distributed"):
+        run_traces(paper_pi(True), steps=4, seeds=[0],
+                   plan=SystemPlan(num_shards=2))
+    with pytest.raises(ValueError, match="explore_distributed"):
+        run_traces_distributed(paper_pi(True), steps=4, seeds=[0],
+                               plan=SystemPlan(num_shards=2))
+
+
+# ---------------------------------------------------------------------------
+# hybrid ELL+COO: encoding round-trips + ref equivalence
+# ---------------------------------------------------------------------------
+
+def _in_adjacency_sets(sp):
+    """{target: sorted in-neighbors} reassembled from ELL part + COO tail."""
+    m = sp.num_neurons
+    out = {j: [] for j in range(m)}
+    ii = np.asarray(sp.in_idx)
+    for j in range(m):
+        out[j] += [int(x) for x in ii[j] if x < m]
+    for s, d in zip(np.asarray(sp.coo_src), np.asarray(sp.coo_dst)):
+        out[int(d)].append(int(s))
+    return {j: sorted(v) for j, v in out.items()}
+
+
+@pytest.mark.parametrize("name", sorted(SYSTEMS))
+@pytest.mark.parametrize("threshold", [1, 2, 1000])
+def test_hybrid_round_trips_and_matches_ref(name, threshold):
+    """ELL part + COO tail must reassemble exactly the synapse graph's
+    in-adjacency at any split point, and the step must stay bit-identical
+    to the dense oracle.  threshold=1 is the all-tail extreme, 1000 the
+    zero-tail extreme (== pure ELL)."""
+    system, T = SYSTEMS[name]
+    dn = compile_system(system)
+    hy = compile_system_sparse(system, hub_threshold=threshold)
+    got = _in_adjacency_sets(hy)
+    for j in range(system.num_neurons):
+        assert got[j] == sorted(i for (i, jj) in system.synapses if jj == j)
+    # split accounting: the ELL width is capped, tail picks up the rest
+    in_deg = _in_degrees(system)
+    assert hy.max_in_degree == min(max(1, int(in_deg.max())), threshold)
+    assert hy.coo_src.shape[0] == int(
+        np.maximum(in_deg - threshold, 0).sum())
+    assert hy.is_hybrid == (hy.coo_src.shape[0] > 0)
+    if threshold == 1000:  # zero tail: arrays equal the pure-ELL lowering
+        pure = compile_system_sparse(system)
+        np.testing.assert_array_equal(np.asarray(hy.in_idx),
+                                      np.asarray(pure.in_idx))
+        assert hy.coo_src.shape == (0,)
+    rng = np.random.default_rng(abs(hash(name)) % 2**31)
+    cfgs = jnp.asarray(rng.integers(0, 5, size=(6, dn.num_neurons)),
+                       jnp.int32)
+    _assert_same_step(next_configs(cfgs, dn, T),
+                      sparse_next_configs(cfgs, hy, T))
+
+
+def test_hybrid_single_hub_and_ruleless_neurons():
+    """One hub with every in-synapse in the tail, fed by ruleless
+    neurons: the segment-sum must still land every contribution."""
+    m = 6
+    rules = (
+        Rule(neuron=0, consume=1, produce=2, regex_base=1, covering=True),
+        Rule(neuron=1, consume=1, produce=1, regex_base=1, covering=True),
+        Rule(neuron=2, consume=1, produce=1, regex_base=1, covering=True),
+        # neurons 3, 4 own no rules; 5 is the hub with no rules either
+    )
+    syn = tuple((i, 5) for i in range(5)) + ((0, 1), (1, 2))
+    system = SNPSystem(m, (1, 1, 1, 0, 0, 0), rules, syn, output_neuron=2)
+    dn = compile_system(system)
+    hy = compile_system_sparse(system, hub_threshold=1)
+    assert hy.is_hybrid and int(np.asarray(hy.coo_dst).max()) == 5
+    cfgs = jnp.asarray([[1, 1, 1, 0, 0, 0], [2, 0, 1, 1, 1, 5],
+                        [0, 0, 0, 0, 0, 0]], jnp.int32)
+    _assert_same_step(next_configs(cfgs, dn, 8),
+                      sparse_next_configs(cfgs, hy, 8))
+
+
+def test_hybrid_strictly_less_padding_on_unbounded_power_law():
+    """Acceptance criterion: on a power-law graph without ``max_in`` the
+    hybrid encoding must spend strictly fewer in-adjacency slots (ELL
+    padding included) than pure ELL, while matching ref exactly."""
+    system = power_law(400, 3, seed=2)          # unbounded hubs
+    plan = SystemPlan.for_system(system)
+    assert plan.encoding == "hybrid"
+    be = get_backend("sparse")
+    pure = compile_system_sparse(system)
+    hy = be.compile(system, plan=plan)
+    assert hy.is_hybrid
+    assert hy.in_adjacency_slots < pure.in_adjacency_slots
+    dn = compile_system(system)
+    rng = np.random.default_rng(7)
+    cfgs = jnp.asarray(rng.integers(0, 4, size=(4, 400)), jnp.int32)
+    _assert_same_step(next_configs(cfgs, dn, 8),
+                      be.expand(cfgs, hy, 8))
+
+
+def test_explore_with_hybrid_plan_matches_ref():
+    system = power_law(24, 3, seed=4)
+    kw = dict(max_steps=4, frontier_cap=128, visited_cap=1024,
+              max_branches=32)
+    ref = explore(system, backend="ref", **kw)
+    got = explore(system, backend="sparse",
+                  plan=SystemPlan(encoding="hybrid", hub_threshold=2), **kw)
+    np.testing.assert_array_equal(ref.configs, got.configs)
+    assert ref.exhausted == got.exhausted
+
+
+# ---------------------------------------------------------------------------
+# sparse_pallas: clear error + fallback, never a shape crash
+# ---------------------------------------------------------------------------
+
+def test_sparse_pallas_ops_reject_hybrid_with_clear_error():
+    system, T = SYSTEMS["power-law-40"]
+    hy = compile_system_sparse(system, hub_threshold=2)
+    cfgs = jnp.zeros((2, system.num_neurons), jnp.int32)
+    with pytest.raises(NotImplementedError, match="hybrid ELL\\+COO"):
+        snp_step_sparse(cfgs, hy, max_branches=T)
+
+
+def test_sparse_pallas_backend_falls_back_on_hybrid_with_warning():
+    system, T = SYSTEMS["power-law-40"]
+    be = get_backend("sparse_pallas")
+    hy = be.compile(system, plan=SystemPlan(encoding="hybrid",
+                                            hub_threshold=2))
+    assert hy.is_hybrid
+    rng = np.random.default_rng(1)
+    cfgs = jnp.asarray(rng.integers(0, 4, size=(3, 40)), jnp.int32)
+    with pytest.warns(UserWarning, match="falling back"):
+        got = be.expand(cfgs, hy, T)
+    ref = get_backend("ref")
+    _assert_same_step(ref.expand(cfgs, ref.compile(system), T), got)
+
+
+def test_sparse_pallas_pure_ell_still_uses_the_kernel():
+    """The fallback must not trigger for pure-ELL encodings."""
+    system, T = SYSTEMS["ring-lattice-12"]
+    be = get_backend("sparse_pallas")
+    comp = be.compile(system)
+    cfgs = jnp.zeros((2, 12), jnp.int32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        be.expand(cfgs, comp, T)

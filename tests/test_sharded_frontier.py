@@ -1,0 +1,182 @@
+"""Neuron-axis-sharded frontier tests (DESIGN.md §2).
+
+The additive-hash algebra and the single-shard degenerate case run
+in-process; multi-device equivalence against the single-device engine runs
+in subprocesses with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+(same convention as ``tests/test_distributed.py`` — the main pytest
+process keeps the default single CPU device)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import SystemPlan, compile_sharded, explore, paper_pi
+from repro.core.distributed import explore_distributed
+from repro.core.generators import power_law, random_system
+from repro.core.hashing import zobrist_hash
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(ndev: int, body: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(body)],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the additive hash the sharded dedup relies on
+# ---------------------------------------------------------------------------
+
+def test_zobrist_partials_add_up_to_the_full_hash():
+    rng = np.random.default_rng(0)
+    cfgs = jnp.asarray(rng.integers(0, 7, size=(5, 12)), jnp.int32)
+    hi, lo = zobrist_hash(cfgs)
+    for cuts in [(4, 8), (1, 2, 3), (6,), ()]:
+        bounds = [0, *cuts, 12]
+        phi = np.zeros(5, np.uint32)
+        plo = np.zeros(5, np.uint32)
+        for a, b in zip(bounds, bounds[1:]):
+            h, l = zobrist_hash(cfgs[:, a:b], offset=a)
+            phi += np.asarray(h)
+            plo += np.asarray(l)
+        np.testing.assert_array_equal(phi, np.asarray(hi))
+        np.testing.assert_array_equal(plo, np.asarray(lo))
+
+
+def test_zobrist_distinguishes_positions_and_values():
+    a = jnp.asarray([[1, 0, 0], [0, 1, 0], [0, 0, 1], [2, 0, 0]], jnp.int32)
+    hi, lo = zobrist_hash(a)
+    pairs = set(zip(np.asarray(hi).tolist(), np.asarray(lo).tolist()))
+    assert len(pairs) == 4
+
+
+# ---------------------------------------------------------------------------
+# compile_sharded structure
+# ---------------------------------------------------------------------------
+
+def test_compile_sharded_partitions_rules_and_halo():
+    system = random_system(10, 2, 0.4, seed=2)
+    sc = compile_sharded(system, SystemPlan(num_shards=4))
+    S, mloc = sc.num_shards, sc.shard_size
+    assert S == 4 and mloc == 3 and sc.num_neurons == 10
+    a = sc.arrays
+    assert a.rule_neuron.shape[0] == S
+    # every send_idx entry is a real local neuron (or the mloc pad)
+    si = np.asarray(a.send_idx)
+    assert ((si >= 0) & (si <= mloc)).all()
+    # in_idx points into [local | halo | zero] space
+    z = mloc + S * sc.halo_width
+    ii = np.asarray(a.in_idx)
+    assert ((ii >= 0) & (ii <= z)).all()
+    # the init slices reassemble C_0
+    np.testing.assert_array_equal(
+        np.asarray(sc.init_config), np.asarray(system.initial_spikes))
+
+
+def test_explore_sharded_single_shard_matches_explore():
+    """S=1 degenerate case in-process: no halo, psum over one device."""
+    pi = paper_pi(True)
+    kw = dict(max_steps=12, frontier_cap=64, visited_cap=512,
+              max_branches=16)
+    rs = explore(pi, **kw)
+    sc = compile_sharded(pi, SystemPlan(num_shards=1))
+    rd = explore_distributed(sc, **kw)
+    assert {tuple(r) for r in rs.configs} == {tuple(r) for r in rd.configs}
+    assert rs.num_discovered == rd.num_discovered
+
+
+def test_sharded_plan_validates_mesh_and_backend():
+    pi = paper_pi(True)
+    with pytest.raises(ValueError, match="num_shards"):
+        explore_distributed(pi, plan=SystemPlan(num_shards=3))  # 1 device
+    # hybrid/dense x sharded are refused, never silently served as ELL
+    with pytest.raises(ValueError, match="COO"):
+        compile_sharded(pi, SystemPlan(encoding="hybrid", num_shards=2))
+    with pytest.raises(ValueError, match="cannot be realized"):
+        compile_sharded(pi, SystemPlan(encoding="dense", num_shards=2))
+    # the auto-planner never pairs hybrid with a sharded run, even on the
+    # heavy-tailed graphs that would pick hybrid single-device
+    heavy = power_law(400, 3, seed=2)
+    assert SystemPlan.for_system(heavy).encoding == "hybrid"
+    auto = SystemPlan.for_system(heavy, num_shards=4)
+    assert auto.encoding == "ell" and auto.num_shards == 4
+    compile_sharded(heavy, auto)  # and that plan actually lowers
+    sc = compile_sharded(pi, SystemPlan(num_shards=1))
+    with pytest.raises(ValueError, match="not supported under a sharded"):
+        explore_distributed(sc, backend="pallas")
+    with pytest.raises(ValueError, match="ShardedCompiled"):
+        from repro.core import compile_system
+        explore_distributed(compile_system(pi),
+                            plan=SystemPlan(num_shards=2, encoding="ell"),
+                            backend="sparse")
+
+
+# ---------------------------------------------------------------------------
+# multi-device equivalence vs the single-device engine (faked 8-dev mesh)
+# ---------------------------------------------------------------------------
+
+def test_sharded_frontier_matches_single_device_8dev():
+    proc = _run(8, """
+        import jax
+        from repro.core import paper_pi, explore
+        from repro.core.distributed import explore_distributed
+        from repro.core.generators import power_law, random_system
+        from repro.sharding import neuron_axis
+
+        assert len(jax.devices()) == 8
+        cases = [
+            # m=3 < 8 shards: most devices hold empty slices
+            (paper_pi(True), dict(max_steps=16, frontier_cap=64,
+                                  visited_cap=512, max_branches=16)),
+            (random_system(9, 2, 0.3, seed=1),
+             dict(max_steps=8, frontier_cap=256, visited_cap=2048,
+                  max_branches=64)),
+            # heavy-tailed in-degree crossing every shard boundary
+            (power_law(26, 3, seed=6),
+             dict(max_steps=4, frontier_cap=128, visited_cap=1024,
+                  max_branches=32)),
+        ]
+        for system, kw in cases:
+            rs = explore(system, **kw)
+            rd = explore_distributed(system, plan=neuron_axis(8), **kw)
+            assert {tuple(r) for r in rd.configs} \\
+                == {tuple(r) for r in rs.configs}, system.name
+            assert rd.num_discovered == rs.num_discovered
+        print("OK")
+    """)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK" in proc.stdout
+
+
+def test_sharded_frontier_overflow_is_flagged_and_sound_4dev():
+    proc = _run(4, """
+        from repro.core import explore
+        from repro.core.distributed import explore_distributed
+        from repro.core.generators import random_system
+        from repro.sharding import neuron_axis
+
+        system = random_system(9, 2, 0.3, seed=1)
+        # tiny global frontier forces frontier overflow
+        rd = explore_distributed(system, plan=neuron_axis(4), max_steps=6,
+                                 frontier_cap=8, visited_cap=512,
+                                 max_branches=64)
+        assert rd.frontier_overflow and not rd.exhausted
+        rs = explore(system, max_steps=10, frontier_cap=8192,
+                     visited_cap=65536, max_branches=64)
+        truth = {tuple(r) for r in rs.configs}
+        assert {tuple(r) for r in rd.configs} <= truth
+        print("OK")
+    """)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK" in proc.stdout

@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Guard the benchmark surface: fail if ``BENCH_snp.json`` silently loses
+a tier or a backend key relative to a baseline.
+
+Benchmarks are regenerated per PR (the CI smoke sweep overwrites the
+file), which makes it easy for a refactor to drop a whole tier — the rows
+just stop being emitted and nobody notices until the perf trajectory has
+a hole.  This check compares the *key structure* (never the timings):
+
+* a **tier** is the first ``/``-segment of a row name (``snp_step``,
+  ``snp_step_large``, ``hybrid``, ``explore``, ``serve``, ...);
+* a **backend/mode key** is any later segment from the known vocabulary
+  (step-backend registry names, plan encodings, serve modes; ``meshN``
+  normalizes to ``mesh`` so the faked device count can vary).
+
+Every (tier, key) pair present in the baseline must be present in the
+candidate; new pairs are always fine.  Timings may drift, coverage may
+only grow.
+
+Usage::
+
+    python tools/check_bench.py [BASELINE] [CANDIDATE]
+
+Defaults: baseline = ``git show HEAD:BENCH_snp.json`` (so a working-tree
+regeneration is checked against the committed file), candidate =
+``BENCH_snp.json``.  CI snapshots the checked-out file before running the
+smoke sweep and passes it explicitly.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import subprocess
+import sys
+
+KNOWN_KEYS = {
+    # step-backend registry names
+    "ref", "pallas", "sparse", "sparse_pallas",
+    # plan encodings (hybrid tier)
+    "ell", "hybrid",
+    # serve modes ("meshN" is normalized separately)
+    "sync", "async",
+}
+_MESH = re.compile(r"^mesh\d+$")
+
+
+def row_keys(payload: dict) -> set:
+    """(tier,) and (tier, key) pairs of every row name."""
+    keys = set()
+    for row in payload.get("rows", []):
+        parts = str(row.get("name", "")).split("/")
+        if not parts or not parts[0]:
+            continue
+        tier = parts[0]
+        keys.add((tier,))
+        for part in parts[1:]:
+            if _MESH.match(part):
+                keys.add((tier, "mesh"))
+            elif part in KNOWN_KEYS:
+                keys.add((tier, part))
+    return keys
+
+
+def _load(path: str) -> dict:
+    if path.startswith("git:"):
+        out = subprocess.run(
+            ["git", "show", path[len("git:"):]],
+            capture_output=True, text=True, check=True)
+        return json.loads(out.stdout)
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(argv: list) -> int:
+    baseline = argv[1] if len(argv) > 1 else "git:HEAD:BENCH_snp.json"
+    candidate = argv[2] if len(argv) > 2 else "BENCH_snp.json"
+    base = _load(baseline)
+    cand = _load(candidate)
+    missing = sorted(row_keys(base) - row_keys(cand))
+    if missing:
+        print(f"check_bench: {candidate} lost {len(missing)} benchmark "
+              f"key(s) present in {baseline}:")
+        for key in missing:
+            print("  - " + "/".join(key))
+        print("Re-emit the missing tier(s) (benchmarks/bench_snp.py, "
+              "benchmarks/bench_serve.py) or, if a tier was retired on "
+              "purpose, update the committed BENCH_snp.json in the same "
+              "change.")
+        return 1
+    print(f"check_bench: OK — {len(row_keys(cand))} keys cover the "
+          f"{len(row_keys(base))} baseline keys")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
