@@ -28,7 +28,14 @@ Three tiers:
   threshold and segment-sums the tail.  Pure ELL is measured only at the
   smallest size — past it the hub width is the bottleneck and hybrid
   sweeps alone, mirroring the dense/sparse split above
-  (EXPERIMENTS.md §Hybrid).
+  (EXPERIMENTS.md §Hybrid);
+* the **hybrid-kernel tier** (same heavy-tailed family, m in
+  {512, 2048, 8192}) compares the jnp ``sparse`` step against the fused
+  ``sparse_pallas`` kernel **on hybrid plans** — the path the kernel
+  lowering layer lifted (the in-kernel COO segment-sum stage, DESIGN.md
+  §3 "Kernel lowering").  On CPU the kernel runs interpret mode, so rows
+  are structure/correctness proxies, not TPU wall-times
+  (EXPERIMENTS.md §Hybrid-kernel).
 
 Run as a module to emit ``BENCH_snp.json`` (step + tree rows):
 ``PYTHONPATH=src python -m benchmarks.bench_snp`` (``--quick`` for the
@@ -78,20 +85,26 @@ def _expand(cfgs, comp, max_branches, backend):
     return out.configs, out.valid, out.emissions, out.overflow
 
 
-def _sweep(tag, system, B, T, backends, rng, reps):
+def _sweep(tag, system, B, T, backends, rng, reps, plan=None,
+           rate_unit="us"):
     """One (system, B, T) point across ``backends``; the first backend in
-    the list is the ``x_ref`` baseline for the rest."""
+    the list is the relative baseline for the rest.  ``plan`` compiles
+    every backend under the same :class:`SystemPlan`; ``rate_unit="ms"``
+    reports the baseline throughput per ms (for tiers whose call times
+    would round exp/us to 0)."""
     out = []
     cfgs = None
     us_ref = None
+    scale = 1e3 if rate_unit == "ms" else 1.0
     for backend in backends:
-        comp = backend.compile(system)
+        comp = backend.compile(system, plan=plan)
         if cfgs is None:
             cfgs = jnp.asarray(
                 rng.integers(0, 4, size=(B, comp.num_neurons)), jnp.int32)
         us = _time(_expand, cfgs, comp, T, backend, reps=reps)
-        derived = (f"{B * T / us:.1f}exp/us" if us_ref is None
-                   else f"{us / us_ref:.2f}x_ref")
+        derived = (f"{B * T / us * scale:.1f}exp/{rate_unit}"
+                   if us_ref is None
+                   else f"{us / us_ref:.2f}x_{backends[0].name}")
         if us_ref is None:
             us_ref = us
         out.append((f"{tag}/{backend.name}/m{comp.num_neurons}"
@@ -181,6 +194,27 @@ def hybrid_rows(quick: bool = False):
     return out
 
 
+def hybrid_kernel_rows(quick: bool = False):
+    """Hybrid-plan kernel tier: ``sparse`` (baseline) vs ``sparse_pallas``
+    on the same hybrid ELL+COO compilation — the in-kernel COO stage the
+    lowering layer added.  Interpret mode on CPU (structure proxy; the
+    TPU story is the ROADMAP validation item)."""
+    reps = 2 if quick else 3
+    sizes = ((512, 8, 8),) if quick else \
+        ((512, 8, 8), (2048, 8, 8), (8192, 4, 8))
+    backends = (get_backend("sparse"), SparsePallasBackend(block_b=4,
+                                                           block_t=8))
+    rng = np.random.default_rng(5)
+    out = []
+    for m, B, T in sizes:
+        system = power_law(m, 4, seed=2)            # no max_in: real hubs
+        plan = SystemPlan.for_system(system)
+        assert plan.encoding == "hybrid"
+        out += _sweep("hybrid_kernel/power_law", system, B, T, backends,
+                      rng, reps, plan=plan, rate_unit="ms")
+    return out
+
+
 def main(path: str = "BENCH_snp.json", quick: bool = False) -> None:
     """Emit step- and tree-level rows for every backend as one JSON file."""
     from . import bench_tree
@@ -190,6 +224,7 @@ def main(path: str = "BENCH_snp.json", quick: bool = False) -> None:
             {"name": name, "us_per_call": us, "derived": derived}
             for name, us, derived in (rows(quick) + large_rows(quick)
                                       + hybrid_rows(quick)
+                                      + hybrid_kernel_rows(quick)
                                       + bench_tree.rows(quick))
         ],
     }

@@ -1,8 +1,9 @@
 """Benchmark harness.  One module per paper table/figure:
 
 * bench_snp   — transition-step throughput vs system size (paper §5
-  timing): the standard sweep plus the large (bounded-degree) and hybrid
-  (heavy-tailed power-law, ELL vs hybrid plan) tiers
+  timing): the standard sweep plus the large (bounded-degree), hybrid
+  (heavy-tailed power-law, ELL vs hybrid plan) and hybrid-kernel
+  (sparse vs sparse_pallas on hybrid plans) tiers
 * bench_tree  — full computation-tree exploration (paper §5 run / Fig. 4)
 * bench_serve — trace-serving front end: sync/async/mesh (EXPERIMENTS.md
   §Serving)
@@ -25,6 +26,7 @@ def main(quick: bool = False) -> None:
         lambda: bench_snp.rows(quick),
         lambda: bench_snp.large_rows(quick),
         lambda: bench_snp.hybrid_rows(quick),
+        lambda: bench_snp.hybrid_kernel_rows(quick),
         lambda: bench_tree.rows(quick),
         lambda: bench_serve.rows(quick),
         lambda: bench_paper_mode.rows(),

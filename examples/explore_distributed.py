@@ -13,6 +13,12 @@ Run with fake devices on CPU:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/explore_distributed.py \
             --graph power_law --plan neuron_axis
+
+    # same sharded BFS, but each device steps its shard through the fused
+    # sparse Pallas kernel (interpret mode on CPU; DESIGN.md §3)
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/explore_distributed.py \
+            --plan neuron_axis --backend sparse_pallas
 """
 
 import argparse
@@ -20,7 +26,7 @@ import time
 
 import jax
 
-from repro.core import compile_system, explore
+from repro.core import available_backends, compile_system, explore
 from repro.core.distributed import explore_distributed
 from repro.core.generators import power_law, random_system, scaled_pi
 from repro.sharding import neuron_axis
@@ -49,10 +55,16 @@ def main():
                     help="dense_rows: hash-partitioned full config rows; "
                          "neuron_axis: per-device neuron slices + halo "
                          "exchange (SystemPlan sharding)")
+    ap.add_argument("--backend", choices=available_backends(),
+                    default="ref",
+                    help="per-shard step backend (registry name); under "
+                         "--plan neuron_axis the fused kernels consume "
+                         "each device's extended-index shard encoding "
+                         "(DESIGN.md §3 'Kernel lowering')")
     args = ap.parse_args()
 
     ndev = len(jax.devices())
-    print(f"devices: {ndev}")
+    print(f"devices: {ndev}, backend: {args.backend}")
 
     print("\n-- paper's Π scaled x8 (24 neurons, 40 rules) --")
     comp = compile_system(scaled_pi(8))
@@ -64,15 +76,25 @@ def main():
           f"(overflow: {res.branch_overflow})")
 
     system, kw = _graph(args.graph, ndev)
-    print(f"\n-- {system.name} ({args.plan}) --")
+    if args.backend in ("pallas", "sparse_pallas"):
+        # Interpret-mode kernel emulation on CPU: keep the demo snappy
+        # (on a TPU with interpret=False the full caps are the point).
+        kw = {**kw, "frontier_cap": max(kw["frontier_cap"] // 16, 8),
+              "visited_cap": max(kw["visited_cap"] // 16, 64),
+              "max_steps": min(kw["max_steps"], 4)}
+    print(f"\n-- {system.name} ({args.plan}, backend={args.backend}) --")
     t0 = time.time()
     if args.plan == "neuron_axis":
-        # Global frontier bookkeeping, per-device neuron slices.
+        # Global frontier bookkeeping, per-device neuron slices; the
+        # backend steps each shard (jnp math or fused kernel).
         res = explore_distributed(system, plan=neuron_axis(ndev),
+                                  backend=args.backend,
                                   **{**kw, "frontier_cap": kw["frontier_cap"]
                                      * ndev})
     else:
-        res = explore_distributed(compile_system(system), **kw)
+        # Pass the raw system: each backend compiles its own encoding
+        # (a pre-compiled dense object would break the sparse family).
+        res = explore_distributed(system, backend=args.backend, **kw)
     dt = time.time() - t0
     single = explore(compile_system(system),
                      **{**kw, "frontier_cap": kw["frontier_cap"] * ndev,

@@ -31,13 +31,15 @@ Public API:
 
 from .backend import (PallasBackend, RefBackend, SparseBackend,
                       SparsePallasBackend, StepBackend, available_backends,
-                      get_backend, register_backend)
+                      get_backend, lower_with_backend, register_backend,
+                      supports_sharded)
 from .engine import (ExploreResult, emission_gaps, explore, run_trace,
                      run_traces, successor_set)
 from .matrix import (CompiledSNP, CompiledSparseSNP, compile_system,
                      compile_system_sparse, is_compiled)
-from .plan import (ShardedCompiled, SystemPlan, auto_hub_threshold,
-                   compile_sharded, is_sharded)
+from .plan import (DenseShardArrays, ShardedCompiled, SystemPlan,
+                   auto_hub_threshold, compile_sharded, is_sharded,
+                   lower_shard_dense)
 from .semantics import (applicability, branch_info, next_configs,
                         sparse_next_configs, spiking_vectors)
 from .system import Rule, SNPSystem, paper_pi
@@ -46,13 +48,15 @@ __all__ = [
     "SNPSystem", "Rule", "paper_pi",
     "CompiledSNP", "CompiledSparseSNP", "compile_system",
     "compile_system_sparse", "is_compiled",
-    "SystemPlan", "ShardedCompiled", "auto_hub_threshold",
-    "compile_sharded", "is_sharded",
+    "SystemPlan", "ShardedCompiled", "DenseShardArrays",
+    "auto_hub_threshold", "compile_sharded", "is_sharded",
+    "lower_shard_dense",
     "applicability", "branch_info", "next_configs", "sparse_next_configs",
     "spiking_vectors",
     "StepBackend", "RefBackend", "PallasBackend", "SparseBackend",
     "SparsePallasBackend",
     "register_backend", "get_backend", "available_backends",
+    "lower_with_backend", "supports_sharded",
     "explore", "ExploreResult", "successor_set", "emission_gaps",
     "run_trace", "run_traces",
 ]

@@ -31,20 +31,24 @@ workload.  This module is that seam:
   :func:`available_backends` — so new backends land as plugins without
   touching the consumers.
 
-Each backend also owns its *compilation*: ``backend.compile(system,
-plan=...)`` lowers an :class:`~repro.core.system.SNPSystem` to the
-encoding its ``expand`` consumes (dense
-:class:`~repro.core.matrix.CompiledSNP` for ref/pallas,
-:class:`~repro.core.matrix.CompiledSparseSNP` for the sparse pair).  The
-optional :class:`~repro.core.plan.SystemPlan` chooses the storage layout
-— ``"hybrid"`` caps the ELL in-adjacency at a hub threshold and spills
-heavy tails to a COO segment; ``num_shards > 1`` lowers to a
-:class:`~repro.core.plan.ShardedCompiled` neuron-axis partition for
-``explore_distributed``.  The **default plan is bit-identical** to each
-backend's historical encoding, and a plan a backend cannot honor is a
-``ValueError``, never a silent reinterpretation.  Consumers resolve
-backends by name and call ``compile`` once, so a new encoding lights up
-every workload with no consumer changes.
+Each backend also owns its *compilation*, driven by the **lowering
+registry** (DESIGN.md §3 "Kernel lowering"): every backend declares
+``supported_encodings()`` — the :class:`~repro.core.plan.SystemPlan`
+encodings its step can realize, first entry = its native layout — and a
+``lower(compiled, plan)`` hook that annotates a built encoding with
+whatever its kernel consumes (e.g. ``PallasBackend`` attaches the dense
+per-shard operands to a :class:`~repro.core.plan.ShardedCompiled`).
+``backend.compile(system, plan=...)`` is then one shared template:
+resolve the plan's encoding against the registry, build it through the
+shared compilers (dense :class:`~repro.core.matrix.CompiledSNP`, ELL /
+hybrid :class:`~repro.core.matrix.CompiledSparseSNP`, neuron-axis
+:class:`~repro.core.plan.ShardedCompiled`), and hand it to ``lower``.
+The **default plan is bit-identical** to each backend's historical
+encoding, and a plan a backend cannot honor is a ``ValueError``, never a
+silent reinterpretation or downgrade.  Consumers resolve backends by name
+and call ``compile`` once, so a new encoding lights up every workload
+with no consumer changes — and plan choice is orthogonal to backend
+choice across the whole matrix.
 
 Backends are frozen dataclasses: hashable, so they ride through
 ``jax.jit(..., static_argnames=("backend",))`` unchanged.
@@ -52,7 +56,6 @@ Backends are frozen dataclasses: hashable, so they ride through
 
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass
 from typing import Dict, Optional, Protocol, Tuple, Union, runtime_checkable
 
@@ -60,7 +63,8 @@ import jax.numpy as jnp
 
 from .matrix import (CompiledAny, CompiledSNP, CompiledSparseSNP,
                      compile_system, compile_system_sparse)
-from .plan import ShardedCompiled, SystemPlan, compile_sharded
+from .plan import (ShardedCompiled, SystemPlan, compile_sharded,
+                   is_sharded, lower_shard_dense)
 from .semantics import StepOut, next_configs, sparse_next_configs
 from .system import SNPSystem
 
@@ -74,6 +78,8 @@ __all__ = [
     "get_backend",
     "available_backends",
     "compile_with_plan",
+    "lower_with_backend",
+    "supports_sharded",
 ]
 
 
@@ -128,11 +134,30 @@ class StepBackend(Protocol):
         * **honors the plan or refuses it** — ``plan=None`` (or the
           default :class:`~repro.core.plan.SystemPlan`) must produce the
           backend's historical encoding **bit-identically**; an encoding
-          request the backend cannot realize (e.g. ``"hybrid"`` on a
-          dense backend) raises ``ValueError``; ``plan.num_shards > 1``
-          lowers through :func:`repro.core.plan.compile_sharded` where
-          supported (the sparse family) and raises elsewhere.
+          request the backend cannot realize (``supported_encodings``)
+          raises ``ValueError``; ``plan.num_shards > 1`` lowers through
+          :func:`repro.core.plan.compile_sharded` where ``"sharded"`` is
+          supported and raises elsewhere.
         """
+        ...
+
+    def supported_encodings(self) -> Tuple[str, ...]:
+        """Plan encodings this backend's lowering can realize — a subset
+        of ``("dense", "ell", "hybrid", "sharded")``, **first entry = the
+        native layout** ``encoding="auto"`` resolves to.  ``"sharded"``
+        additionally marks that the backend's step can consume one shard
+        of a :class:`~repro.core.plan.ShardedCompiled` inside
+        ``explore_distributed``."""
+        ...
+
+    def lower(self, compiled: "CompiledLike",
+              plan: SystemPlan) -> "CompiledLike":
+        """Annotate a built encoding with whatever this backend's step
+        consumes (host-side, deterministic, idempotent — same contract as
+        ``compile``, whose template calls it last).  Also invoked by
+        consumers on *pre-compiled* objects, so a backend can refuse an
+        encoding its kernel cannot lower (``ValueError``) instead of
+        silently downgrading at expand time.  The default is identity."""
         ...
 
     def expand(self, configs: jnp.ndarray, comp: CompiledAny,
@@ -141,6 +166,9 @@ class StepBackend(Protocol):
         ``configs`` (..., T, m), ``valid``/``emissions`` (..., T) and
         ``overflow`` (...,)."""
         ...
+
+
+CompiledLike = Union[CompiledAny, ShardedCompiled]
 
 
 def _require_sparse(comp, backend_name: str) -> CompiledSparseSNP:
@@ -156,36 +184,36 @@ def _plan_or_default(plan: Optional[SystemPlan]) -> SystemPlan:
     return SystemPlan() if plan is None else plan
 
 
-def _require_encoding(plan: SystemPlan, backend_name: str,
-                      allowed: Tuple[str, ...]) -> None:
-    if plan.encoding not in allowed:
+def _registry_compile(backend: "StepBackend", system: SNPSystem,
+                      plan: Optional[SystemPlan]) -> CompiledLike:
+    """The shared ``compile`` template every registered backend delegates
+    to: resolve the plan's encoding against ``supported_encodings()``,
+    build it through the shared compilers, hand it to ``lower``."""
+    plan = _plan_or_default(plan)
+    sup = backend.supported_encodings()
+    if plan.num_shards > 1:
+        # Sharded plans lower to per-shard ELL encodings for every
+        # backend (DESIGN.md §2); compile_sharded owns the encoding
+        # validation there (it refuses hybrid/dense), so only the
+        # 'sharded' capability is the backend's to declare.
+        if "sharded" not in sup:
+            raise ValueError(
+                f"backend {backend.name!r} cannot realize a neuron-axis "
+                f"sharded plan (supported encodings: {sup}); pick a "
+                "backend whose lowering supports 'sharded'")
+        return backend.lower(compile_sharded(system, plan), plan)
+    enc = sup[0] if plan.encoding == "auto" else plan.encoding
+    if enc not in sup:
         raise ValueError(
-            f"backend {backend_name!r} cannot realize plan encoding "
-            f"{plan.encoding!r} (supported: {allowed}); pick a matching "
+            f"backend {backend.name!r} cannot realize plan encoding "
+            f"{plan.encoding!r} (supported: {sup}); pick a matching "
             "backend or drop the plan")
-
-
-def _dense_compile(plan: Optional[SystemPlan], backend_name: str,
-                   system: SNPSystem) -> CompiledSNP:
-    plan = _plan_or_default(plan)
-    _require_encoding(plan, backend_name, ("auto", "dense"))
-    if plan.num_shards > 1:
-        raise ValueError(
-            f"backend {backend_name!r} is dense-only; neuron-axis "
-            "sharding (plan.num_shards > 1) needs a sparse-family backend "
-            "and explore_distributed")
-    return compile_system(system)
-
-
-def _sparse_compile(plan: Optional[SystemPlan], backend_name: str,
-                    system: SNPSystem
-                    ) -> Union[CompiledSparseSNP, ShardedCompiled]:
-    plan = _plan_or_default(plan)
-    _require_encoding(plan, backend_name, ("auto", "ell", "hybrid"))
-    if plan.num_shards > 1:
-        return compile_sharded(system, plan)
-    return compile_system_sparse(
-        system, hub_threshold=plan.resolved_hub_threshold(system))
+    if enc == "dense":
+        built = compile_system(system)
+    else:
+        built = compile_system_sparse(
+            system, hub_threshold=plan.resolved_hub_threshold(system))
+    return backend.lower(built, plan)
 
 
 def compile_with_plan(backend: "StepBackend", system: SNPSystem,
@@ -198,18 +226,47 @@ def compile_with_plan(backend: "StepBackend", system: SNPSystem,
     return backend.compile(system, plan=plan)
 
 
+def lower_with_backend(backend: "StepBackend", compiled: CompiledLike,
+                       plan: Optional[SystemPlan]) -> CompiledLike:
+    """``backend.lower`` on a pre-compiled encoding, tolerating
+    third-party backends that predate the lowering registry (identity)."""
+    lower = getattr(backend, "lower", None)
+    if lower is None:
+        return compiled
+    return lower(compiled, _plan_or_default(plan))
+
+
+def supports_sharded(backend: "StepBackend") -> bool:
+    """Whether the backend may serve a neuron-axis-sharded run
+    (registry-declared; third-party backends without the registry hooks
+    default to no).  The built-in kernel backends step each shard through
+    their own fused kernels; any other backend declaring ``"sharded"`` is
+    served by the jnp sparse shard math, which every registered backend
+    must match bit-for-bit anyway (see the ``expand`` contract)."""
+    sup = getattr(backend, "supported_encodings", None)
+    return sup is not None and "sharded" in sup()
+
+
 @dataclass(frozen=True)
 class RefBackend:
-    """Pure-jnp reference semantics (the repo's oracle)."""
+    """Pure-jnp reference semantics (the repo's oracle).  Under a sharded
+    plan, ``explore_distributed`` runs the jnp sparse math on each shard's
+    slice (DESIGN.md §2)."""
 
     name: str = "ref"
     supports_nd_batch: bool = True
     pad_multiple: int = 1
     materializes_spiking: bool = True
 
+    def supported_encodings(self) -> Tuple[str, ...]:
+        return ("dense", "sharded")
+
+    def lower(self, compiled: CompiledLike, plan: SystemPlan) -> CompiledLike:
+        return compiled
+
     def compile(self, system: SNPSystem,
-                plan: Optional[SystemPlan] = None) -> CompiledSNP:
-        return _dense_compile(plan, self.name, system)
+                plan: Optional[SystemPlan] = None) -> CompiledLike:
+        return _registry_compile(self, system, plan)
 
     def expand(self, configs: jnp.ndarray, comp: CompiledSNP,
                max_branches: int) -> StepOut:
@@ -223,7 +280,10 @@ class PallasBackend:
     ``interpret=True`` (default) emulates the kernel with jittable lax ops
     so the same code path runs on CPU; flip to False on a real TPU.  Block
     shapes are clamped to the problem size by the ops wrapper, so the
-    defaults are safe for small systems too.
+    defaults are safe for small systems too.  Under a sharded plan,
+    ``lower`` attaches the dense per-shard operands
+    (:func:`repro.core.plan.lower_shard_dense`) and the same kernel body
+    consumes one shard per device: ``C' = C + halo·H_adj + S·M_local``.
     """
 
     name: str = "pallas"
@@ -238,9 +298,17 @@ class PallasBackend:
     def pad_multiple(self) -> int:
         return self.block_b
 
+    def supported_encodings(self) -> Tuple[str, ...]:
+        return ("dense", "sharded")
+
+    def lower(self, compiled: CompiledLike, plan: SystemPlan) -> CompiledLike:
+        if is_sharded(compiled):
+            return lower_shard_dense(compiled)
+        return compiled
+
     def compile(self, system: SNPSystem,
-                plan: Optional[SystemPlan] = None) -> CompiledSNP:
-        return _dense_compile(plan, self.name, system)
+                plan: Optional[SystemPlan] = None) -> CompiledLike:
+        return _registry_compile(self, system, plan)
 
     def expand(self, configs: jnp.ndarray, comp: CompiledSNP,
                max_branches: int) -> StepOut:
@@ -284,10 +352,16 @@ class SparseBackend:
     pad_multiple: int = 1
     materializes_spiking: bool = False
 
+    def supported_encodings(self) -> Tuple[str, ...]:
+        return ("ell", "hybrid", "sharded")
+
+    def lower(self, compiled: CompiledLike, plan: SystemPlan) -> CompiledLike:
+        return compiled
+
     def compile(self, system: SNPSystem,
                 plan: Optional[SystemPlan] = None
                 ) -> Union[CompiledSparseSNP, ShardedCompiled]:
-        return _sparse_compile(plan, self.name, system)
+        return _registry_compile(self, system, plan)
 
     def expand(self, configs: jnp.ndarray, comp: CompiledSparseSNP,
                max_branches: int) -> StepOut:
@@ -298,7 +372,12 @@ class SparseBackend:
 @dataclass(frozen=True)
 class SparsePallasBackend:
     """Fused Pallas kernel over the sparse encoding (decode + selection
-    lookup + in-adjacency gather in VMEM).
+    lookup + in-adjacency gather in VMEM), for pure-ELL **and** hybrid
+    ELL+COO plans — the COO tail runs as an in-kernel scatter-free
+    segment-sum stage over the compiler's ``coo_bounds``/``hub_slot``
+    metadata (DESIGN.md §3 "Kernel lowering").  Under a sharded plan the
+    same body consumes one shard per device through the extended
+    ``[local | halo | zero]`` index space.
 
     ``interpret=True`` (default) emulates the kernel on CPU; the grid is
     ``(B/bb, T/bt)`` with the whole neuron axis resident per block, so the
@@ -317,27 +396,35 @@ class SparsePallasBackend:
     def pad_multiple(self) -> int:
         return self.block_b
 
+    def supported_encodings(self) -> Tuple[str, ...]:
+        return ("ell", "hybrid", "sharded")
+
+    def lower(self, compiled: CompiledLike, plan: SystemPlan) -> CompiledLike:
+        # A hybrid encoding the kernel cannot lower must raise here, at
+        # lowering time — never a silent downgrade to the jnp path.  Only
+        # hand-built encodings can trip this: compile_system_sparse always
+        # emits the COO segment metadata.
+        if isinstance(compiled, CompiledSparseSNP) and compiled.is_hybrid \
+                and (compiled.coo_bounds is None
+                     or compiled.hub_slot is None):
+            raise ValueError(
+                "sparse_pallas cannot lower this hybrid ELL+COO encoding: "
+                "it lacks the COO segment metadata (coo_bounds/hub_slot) "
+                "the fused kernel's segment-sum stage consumes; lower the "
+                "system through compile_system_sparse / backend.compile")
+        return compiled
+
     def compile(self, system: SNPSystem,
                 plan: Optional[SystemPlan] = None
                 ) -> Union[CompiledSparseSNP, ShardedCompiled]:
-        return _sparse_compile(plan, self.name, system)
+        return _registry_compile(self, system, plan)
 
     def expand(self, configs: jnp.ndarray, comp: CompiledSparseSNP,
                max_branches: int) -> StepOut:
         from repro.kernels.snp_step.sparse_ops import snp_step_sparse
 
-        comp = _require_sparse(comp, self.name)
-        if comp.is_hybrid:
-            # The fused kernel has no COO segment-sum stage yet; a hybrid
-            # plan must not shape-crash it.  Warn once (warnings dedup by
-            # call site) and serve through the jnp sparse path, which is
-            # bit-identical on valid entries.
-            warnings.warn(
-                "sparse_pallas: the fused kernel does not support the "
-                "hybrid ELL+COO encoding yet; falling back to the "
-                "'sparse' gather/segment-sum backend for this system",
-                UserWarning, stacklevel=2)
-            return sparse_next_configs(configs, comp, max_branches)
+        comp = self.lower(_require_sparse(comp, self.name),
+                          SystemPlan.default())
         m = configs.shape[-1]
         batch = configs.shape[:-1]
         flat = configs.reshape(-1, m)
@@ -382,7 +469,14 @@ def available_backends() -> Tuple[str, ...]:
 
 
 def get_backend(name: BackendLike) -> StepBackend:
-    """Resolve a backend by registry name (or pass an instance through)."""
+    """Resolve a backend by registry name (or pass an instance through).
+
+    Instances are duck-checked against the *pre-registry* core of the
+    protocol (``name`` + ``expand``) rather than the full
+    :class:`StepBackend`, so third-party backends that predate the
+    lowering registry hooks keep resolving — the tolerant
+    :func:`lower_with_backend` / :func:`supports_sharded` helpers cover
+    the missing methods downstream."""
     if isinstance(name, str):
         try:
             return _REGISTRY[name]
@@ -391,7 +485,7 @@ def get_backend(name: BackendLike) -> StepBackend:
                 f"unknown step backend {name!r}; "
                 f"available: {available_backends()}"
             ) from None
-    if isinstance(name, StepBackend):
+    if hasattr(name, "expand") and hasattr(name, "name"):
         return name
     raise TypeError(f"expected backend name or StepBackend, got {type(name)}")
 

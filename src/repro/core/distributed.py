@@ -33,11 +33,12 @@ exchange above stops scaling: every shipped candidate costs ``O(m)``.
 Passing a :class:`~repro.core.plan.SystemPlan` with ``num_shards == ndev``
 flips ``explore_distributed`` into the **neuron-axis-sharded** scheme
 (DESIGN.md §2): the frontier, archive and every candidate carry only their
-``mloc = ceil(m/ndev)`` neuron slice per device; expansion runs the sparse
-reference math on the local slice and exchanges only the *touched
-segments* — the fired produce of halo neurons along synapses that cross a
-shard boundary, a static ``O(cut)`` payload per step instead of ``O(m)``
-rows.  The batch-hash ownership scheme stays: global config hashes are
+``mloc = ceil(m/ndev)`` neuron slice per device; expansion steps the local
+slice through the selected backend — the jnp sparse math or a fused
+Pallas kernel consuming the shard's extended-index encoding (DESIGN.md §3
+"Kernel lowering") — and exchanges only the *touched segments*: the fired
+produce of halo neurons along synapses that cross a shard boundary, a
+static ``O(cut)`` payload per step instead of ``O(m)`` rows.  The batch-hash ownership scheme stays: global config hashes are
 recovered from additive per-slice partials
 (:func:`~repro.core.hashing.zobrist_hash` + one ``psum``) and each device
 still dedups exactly the candidates it hash-owns against its local
@@ -64,12 +65,14 @@ try:                                  # jax >= 0.6 exposes it at top level
 except ImportError:                   # pragma: no cover - older jax
     from jax.experimental.shard_map import shard_map
 
-from .backend import BackendLike, compile_with_plan, get_backend
+from .backend import (BackendLike, PallasBackend, SparsePallasBackend,
+                      compile_with_plan, get_backend, lower_with_backend,
+                      supports_sharded)
 from .engine import ExploreResult, _traces_scan
 from .hashing import SENTINEL, config_hash, zobrist_hash
 from .matrix import CompiledAny, is_compiled
-from .plan import (ShardArrays, ShardedCompiled, SystemPlan, compile_sharded,
-                   is_sharded, shard_view)
+from .plan import (DenseShardArrays, ShardArrays, ShardedCompiled,
+                   SystemPlan, compile_sharded, is_sharded, shard_view)
 from .semantics import (_decode_digits, _fired_packed, packed_rule_table,
                         sparse_branch_info)
 from .system import SNPSystem
@@ -194,9 +197,9 @@ def _psum_u32(x, axis):
     return jax.lax.bitcast_convert_type(s, jnp.uint32)
 
 
-def _sharded_step(arrs: ShardArrays, frontier, fvalid, visited_hi,
+def _sharded_step(arrs: ShardArrays, dense, frontier, fvalid, visited_hi,
                   visited_lo, archive, archive_n, flags, *, axis, ndev,
-                  mloc, hmax, max_branches):
+                  mloc, hmax, max_branches, backend):
     """Per-device body of the neuron-axis-sharded BFS level.
 
     Device ``d`` holds only the ``(F, mloc)`` neuron slice of the
@@ -212,8 +215,12 @@ def _sharded_step(arrs: ShardArrays, frontier, fvalid, visited_hi,
     2. fired produce/consume per local neuron; the halo exchange ships
        only the produce values along boundary-crossing synapses (static
        ``send_idx`` metadata from the plan) with one tiled ``all_to_all``;
-    3. candidate slices = local slice + local delta (ELL gather over the
-       extended [local | halo] index space);
+    3. candidate slices = local slice + local delta, through the
+       ``backend``'s step: the jnp sparse math (``ref``/``sparse``) or a
+       fused kernel consuming the extended [local | halo] encoding
+       (``pallas``/``sparse_pallas`` — DESIGN.md §3 "Kernel lowering");
+       the collective stays out here, so kernel bodies hold no
+       collectives and the halo values are backend-independent;
     4. global hashes from additive per-slice partials (one psum); each
        device dedups the candidates it hash-owns against its local
        visited shard and the verdicts are psum-combined;
@@ -239,28 +246,78 @@ def _sharded_step(arrs: ShardArrays, frontier, fvalid, visited_hi,
     alive = jax.lax.psum(
         jnp.any(info.app, axis=-1).astype(jnp.int32), axis) > 0
 
-    # --- fired actions on the local slice ---------------------------------
-    tab = packed_rule_table(info, view)                      # (F, mloc, R)
     t = jnp.arange(T, dtype=jnp.int32)
-    digits = _decode_digits(t, info._replace(stride=stride))  # (F, T, mloc)
-    packed_f = _fired_packed(digits, tab)
-    prod_f = packed_f & 0xFFFF
-    cons_f = packed_f >> 16
 
-    # --- halo exchange: only the touched segments cross devices -----------
-    prod_pad = jnp.concatenate(
-        [prod_f, jnp.zeros((F, T, 1), jnp.int32)], axis=-1)
-    send = jnp.take(prod_pad, arrs.send_idx[0].reshape(-1), axis=-1)
-    recv = jax.lax.all_to_all(
-        send.reshape(F, T, S, hmax), axis, 2, 2, tiled=True)
-    prod_ext = jnp.concatenate(
-        [prod_f, recv.reshape(F, T, S * hmax),
-         jnp.zeros((F, T, 1), jnp.int32)], axis=-1)
-    delta = -cons_f
-    in_idx = arrs.in_idx[0]
-    for k in range(in_idx.shape[1]):  # static K_in, unrolled
-        delta = delta + jnp.take(prod_ext, in_idx[:, k], axis=-1)
-    cand = (frontier[:, None, :] + delta).reshape(K, mloc)
+    # Dispatch on the concrete built-in kernel backends (their block/
+    # interpret knobs are part of the contract here); any other backend
+    # declaring 'sharded' — including third-party registrations — is
+    # served by the jnp sparse math below, which every registered backend
+    # must match bit-for-bit anyway (backend.py contract).
+    if isinstance(backend, (PallasBackend, SparsePallasBackend)):
+        # Kernel path: decode the fired produce only at the (static) send
+        # positions — same f32 math on the same values as the full decode,
+        # so the halo payload is bit-identical to the jnp path — exchange
+        # it, then run the whole expansion inside the fused kernel.
+        from repro.kernels.snp_step.ops import snp_step_dense_shard
+        from repro.kernels.snp_step.sparse_ops import snp_step_sparse_shard
+
+        send_ids = arrs.send_idx[0].reshape(-1)              # (S·hmax,)
+        smask = send_ids < mloc
+        sid = jnp.minimum(send_ids, mloc - 1)
+        if isinstance(backend, SparsePallasBackend):
+            # the sparse kernel consumes the whole table anyway
+            tab = packed_rule_table(info, view)              # (F, mloc, R)
+            tab_s = jnp.take(tab, sid, axis=1)               # (F, SH, R)
+        else:
+            # the dense kernel works from rank/app/M_local — build the
+            # packed table only at the send positions (a subset view of
+            # the per-neuron segments yields the same math per neuron)
+            tab_s = packed_rule_table(
+                info, view._replace(seg_start=view.seg_start[sid],
+                                    seg_count=view.seg_count[sid]))
+        sub = info._replace(stride=jnp.take(stride, sid, axis=-1),
+                            choices=jnp.take(info.choices, sid, axis=-1))
+        digits_s = _decode_digits(t, sub)                    # (F, T, SH)
+        packed_s = _fired_packed(digits_s, tab_s)
+        prod_send = jnp.where(smask[None, None, :], packed_s & 0xFFFF, 0)
+        halo = jax.lax.all_to_all(
+            prod_send.reshape(F, T, S, hmax), axis, 2, 2,
+            tiled=True).reshape(F, T, S * hmax)
+        if isinstance(backend, SparsePallasBackend):
+            out = snp_step_sparse_shard(
+                frontier, stride, info.choices, psi, tab, arrs.in_idx[0],
+                halo, max_branches=T, block_b=backend.block_b,
+                block_t=backend.block_t, interpret=backend.interpret)
+        else:
+            out = snp_step_dense_shard(
+                frontier, info.rank, info.app, stride, info.choices, psi,
+                dense.onehot[0], dense.M_local[0], dense.hadj[0], halo,
+                max_branches=T, block_b=backend.block_b,
+                block_t=backend.block_t, block_n=backend.block_n,
+                interpret=backend.interpret)
+        cand = out.reshape(K, mloc)
+    else:
+        # jnp path ("ref"/"sparse"): fired actions on the whole slice,
+        # halo send gathered from the full produce table.
+        tab = packed_rule_table(info, view)                  # (F, mloc, R)
+        digits = _decode_digits(t, info._replace(stride=stride))
+        packed_f = _fired_packed(digits, tab)                # (F, T, mloc)
+        prod_f = packed_f & 0xFFFF
+        cons_f = packed_f >> 16
+
+        prod_pad = jnp.concatenate(
+            [prod_f, jnp.zeros((F, T, 1), jnp.int32)], axis=-1)
+        send = jnp.take(prod_pad, arrs.send_idx[0].reshape(-1), axis=-1)
+        recv = jax.lax.all_to_all(
+            send.reshape(F, T, S, hmax), axis, 2, 2, tiled=True)
+        prod_ext = jnp.concatenate(
+            [prod_f, recv.reshape(F, T, S * hmax),
+             jnp.zeros((F, T, 1), jnp.int32)], axis=-1)
+        delta = -cons_f
+        in_idx = arrs.in_idx[0]
+        for k in range(in_idx.shape[1]):  # static K_in, unrolled
+            delta = delta + jnp.take(prod_ext, in_idx[:, k], axis=-1)
+        cand = (frontier[:, None, :] + delta).reshape(K, mloc)
     valid = ((t[None, :].astype(jnp.float32) < psi[:, None])
              & alive[:, None] & fvalid[:, None]).reshape(K)
     branch_ovf = jnp.any((psi > float(T)) & fvalid)
@@ -319,15 +376,25 @@ def _sharded_step(arrs: ShardArrays, frontier, fvalid, visited_hi,
             flags, n_ins)
 
 
+def _sharded_step_dense(arrs, dense, *state, **kw):
+    return _sharded_step(arrs, dense, *state, **kw)
+
+
+def _sharded_step_nodense(arrs, *state, **kw):
+    return _sharded_step(arrs, None, *state, **kw)
+
+
 def _explore_neuron_sharded(
-    comp: ShardedCompiled, mesh: Mesh, axis: str, *, max_steps: int,
-    frontier_cap: int, visited_cap: int, max_branches: int,
+    comp: ShardedCompiled, mesh: Mesh, axis: str, backend, *,
+    max_steps: int, frontier_cap: int, visited_cap: int, max_branches: int,
     init: Optional[Sequence[int]] = None,
 ) -> ExploreResult:
     """Host driver for the neuron-axis-sharded BFS.  ``frontier_cap`` is
     the *global* frontier width (its membership bookkeeping is replicated;
     only the neuron slices are per-device), ``visited_cap`` stays per
-    device (hash-owned shards, as in the dense-row scheme)."""
+    device (hash-owned shards, as in the dense-row scheme).  ``backend``
+    (already resolved + ``lower``-ed into ``comp``) selects the per-shard
+    step — jnp sparse math or a fused kernel (DESIGN.md §3)."""
     S, mloc = comp.num_shards, comp.shard_size
     F, V, T = frontier_cap, visited_cap, max_branches
     A = S * V   # global archive rows; each device stores its (A, mloc) slice
@@ -364,9 +431,13 @@ def _explore_neuron_sharded(
         seg_start=P(axis), seg_count=P(axis), rule_slots=P(),
         in_idx=P(axis), send_idx=P(axis), out_local=P(axis),
         init_loc=P(axis))
-    arrs_dev = jax.device_put(
-        arrs, jax.tree.map(lambda s: NamedSharding(mesh, s), comp_specs,
-                           is_leaf=lambda x: isinstance(x, P)))
+
+    def put(tree, specs):
+        return jax.device_put(
+            tree, jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                               is_leaf=lambda x: isinstance(x, P)))
+
+    arrs_dev = put(arrs, comp_specs)
     state = (
         jax.device_put(frontier, shard),
         jax.device_put(jnp.asarray(fvalid), repl),
@@ -376,13 +447,30 @@ def _explore_neuron_sharded(
         jax.device_put(flags, shard),
     )
 
+    kw = dict(axis=axis, ndev=S, mloc=mloc, hmax=comp.halo_width,
+              max_branches=T, backend=backend)
+    state_in = (P(axis), P(), P(axis), P(axis), P(axis), P(), P(axis))
+    # The dense operands are the largest arrays in the scheme — only ship
+    # them to devices when the selected backend's step actually consumes
+    # them (a pre-lowered comp may carry them for a different backend).
+    if comp.dense is not None and isinstance(backend, PallasBackend):
+        # Dense kernel operands ride the same device axis as the shard
+        # encodings (one slice per device).
+        dense_specs = DenseShardArrays(
+            M_local=P(axis), onehot=P(axis), hadj=P(axis))
+        body = functools.partial(_sharded_step_dense, **kw)
+        in_specs = (comp_specs, dense_specs) + state_in
+        lead = (arrs_dev, put(comp.dense, dense_specs))
+    else:
+        body = functools.partial(_sharded_step_nodense, **kw)
+        in_specs = (comp_specs,) + state_in
+        lead = (arrs_dev,)
+
     step_fn = jax.jit(
         shard_map(
-            functools.partial(_sharded_step, axis=axis, ndev=S, mloc=mloc,
-                              hmax=comp.halo_width, max_branches=T),
+            body,
             mesh=mesh,
-            in_specs=(comp_specs, P(axis), P(), P(axis), P(axis), P(axis),
-                      P(), P(axis)),
+            in_specs=in_specs,
             out_specs=(P(axis), P(), P(axis), P(axis), P(axis), P(),
                        P(axis), P()),
             check_rep=False,
@@ -391,7 +479,7 @@ def _explore_neuron_sharded(
     steps = 0
     drained = False
     for _ in range(max_steps):
-        (f, fv, hi, lo, arc, an, fl, total_new) = step_fn(arrs_dev, *state)
+        (f, fv, hi, lo, arc, an, fl, total_new) = step_fn(*lead, *state)
         state = (f, fv, hi, lo, arc, an, fl)
         steps += 1
         if int(total_new) == 0:
@@ -446,10 +534,12 @@ def explore_distributed(
     **neuron-axis-sharded** scheme (module docstring / DESIGN.md §2):
     every frontier/archive row carries only its device's neuron slice and
     the per-step exchange is the static halo of boundary-crossing
-    synapses, ``O(touched)`` instead of ``O(m)``.  That path runs the
-    sparse reference math directly (``backend`` must be ``"ref"`` or
-    ``"sparse"``; the fused kernels don't slice yet); ``frontier_cap`` is
-    then the global frontier width."""
+    synapses, ``O(touched)`` instead of ``O(m)``.  Any backend whose
+    lowering registry declares ``"sharded"`` serves that path — the jnp
+    sparse math (``"ref"``/``"sparse"``) or the fused kernels consuming a
+    shard's extended-index encoding (``"pallas"``/``"sparse_pallas"``,
+    DESIGN.md §3 "Kernel lowering"); ``frontier_cap`` is then the global
+    frontier width."""
     mesh, axis = _flat_mesh(mesh)
     ndev = mesh.devices.size
     sharded_plan = plan is not None and plan.num_shards > 1
@@ -469,18 +559,19 @@ def explore_distributed(
                 f"device count ({ndev}); build the plan with "
                 "sharding.specs.neuron_axis(ndev)")
         be = get_backend(backend)
-        if be.name not in ("ref", "sparse"):
+        if not supports_sharded(be):
             raise ValueError(
-                "neuron-axis sharded exploration runs the jnp sparse step "
-                "on each neuron slice; kernel backends "
-                "('pallas', 'sparse_pallas') are not supported under a "
-                f"sharded plan yet (got {be.name!r})")
+                f"backend {be.name!r} does not declare the 'sharded' "
+                "encoding in its lowering registry "
+                "(StepBackend.supported_encodings), so it cannot step a "
+                "neuron shard; every built-in backend supports it")
+        comp = lower_with_backend(be, comp, comp.plan)
         return _explore_neuron_sharded(
-            comp, mesh, axis, max_steps=max_steps,
+            comp, mesh, axis, be, max_steps=max_steps,
             frontier_cap=frontier_cap, visited_cap=visited_cap,
             max_branches=max_branches, init=init)
     be = get_backend(backend)
-    comp = system if is_compiled(system) \
+    comp = lower_with_backend(be, system, plan) if is_compiled(system) \
         else compile_with_plan(be, system, plan)
     m = comp.num_neurons
     F, V, T = frontier_cap, visited_cap, max_branches
@@ -595,7 +686,7 @@ def run_traces_distributed(
                          "neuron axis; plan.num_shards > 1 is only "
                          "consumed by explore_distributed")
     be = get_backend(backend)
-    comp = system if is_compiled(system) \
+    comp = lower_with_backend(be, system, plan) if is_compiled(system) \
         else compile_with_plan(be, system, plan)
     seeds = np.asarray(seeds, np.uint32)
     if seeds.ndim != 1:

@@ -49,7 +49,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .backend import BackendLike, compile_with_plan, get_backend
+from .backend import (BackendLike, compile_with_plan, get_backend,
+                      lower_with_backend)
 from .hashing import SENTINEL, config_hash
 from .matrix import CompiledAny, is_compiled
 from .plan import SystemPlan
@@ -60,14 +61,16 @@ __all__ = ["ExploreState", "ExploreResult", "explore", "successor_set",
 
 
 def _resolve_comp(system, be, plan: Optional[SystemPlan]) -> CompiledAny:
-    """Single-device lowering: a pre-compiled encoding passes through, an
+    """Single-device lowering: a pre-compiled encoding passes through the
+    backend's ``lower`` hook (so an encoding the backend's kernel cannot
+    realize raises instead of being silently reinterpreted), an
     ``SNPSystem`` lowers via ``backend.compile(system, plan=...)``.  Plans
     asking for a neuron-axis partition belong to ``explore_distributed``."""
     if plan is not None and plan.num_shards > 1:
         raise ValueError(
             "plan.num_shards > 1 (neuron-axis sharding) is only consumed "
             "by repro.core.distributed.explore_distributed")
-    return system if is_compiled(system) \
+    return lower_with_backend(be, system, plan) if is_compiled(system) \
         else compile_with_plan(be, system, plan)
 
 

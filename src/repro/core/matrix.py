@@ -110,6 +110,15 @@ class CompiledSparseSNP(NamedTuple):
     # -- COO tail of the in-adjacency (hybrid encoding; empty for pure ELL)
     coo_src: jnp.ndarray        # (Ec,) int32 — tail in-neighbor
     coo_dst: jnp.ndarray        # (Ec,) int32 — tail target neuron (sorted)
+    # -- COO lowering metadata: the scatter-free segment-sum form the fused
+    #    kernel consumes (DESIGN.md §3 "Kernel lowering").  ``coo_dst`` is
+    #    sorted, so each hub's tail is one contiguous run: hub ``h`` owns
+    #    entries ``coo_bounds[h]:coo_bounds[h+1]`` and a neuron maps to its
+    #    hub via ``hub_slot`` (``Hn`` = no tail, the zero slot).  ``None``
+    #    only on hand-built encodings that skipped the compiler — the
+    #    kernel refuses those instead of silently downgrading.
+    coo_bounds: jnp.ndarray = None   # (Hn+1,) int32 — per-hub tail offsets
+    hub_slot: jnp.ndarray = None     # (m,) int32 — neuron -> hub index or Hn
 
     @property
     def num_rules(self) -> int:
@@ -329,6 +338,15 @@ def compile_system_sparse(system: SNPSystem, *,
     coo_src = low.src[o][~ell_part].astype(np.int32)
     coo_dst = low.dst[o][~ell_part].astype(np.int32)
 
+    # COO segment metadata (kernel lowering, DESIGN.md §3): coo_dst is
+    # (dst, src)-sorted, so each hub's tail is one contiguous run.
+    hubs, hub_counts = np.unique(coo_dst, return_counts=True)
+    hn = hubs.shape[0]
+    coo_bounds = np.zeros((hn + 1,), np.int32)
+    np.cumsum(hub_counts, out=coo_bounds[1:])
+    hub_slot = np.full((m,), hn, np.int32)
+    hub_slot[hubs] = np.arange(hn, dtype=np.int32)
+
     return CompiledSparseSNP(
         rule_neuron=jnp.asarray(low.neuron),
         consume=jnp.asarray(low.consume),
@@ -351,4 +369,6 @@ def compile_system_sparse(system: SNPSystem, *,
         in_idx=jnp.asarray(in_idx),
         coo_src=jnp.asarray(coo_src),
         coo_dst=jnp.asarray(coo_dst),
+        coo_bounds=jnp.asarray(coo_bounds),
+        hub_slot=jnp.asarray(hub_slot),
     )

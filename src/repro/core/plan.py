@@ -46,10 +46,12 @@ from .system import SNPSystem
 __all__ = [
     "SystemPlan",
     "ShardArrays",
+    "DenseShardArrays",
     "ShardedCompiled",
     "auto_hub_threshold",
     "compile_sharded",
     "is_sharded",
+    "lower_shard_dense",
 ]
 
 _ENCODINGS = ("auto", "dense", "ell", "hybrid")
@@ -103,8 +105,8 @@ class SystemPlan:
         """Concrete plan from the degree histogram (module docstring
         rules): hybrid iff the max in-degree is heavy-tailed relative to
         the mean, else plain ELL.  With ``num_shards > 1`` the encoding
-        stays ELL regardless — the sharded lowering has no COO stage yet
-        (:func:`compile_sharded` refuses the combination; ROADMAP)."""
+        stays ELL regardless — the per-shard lowering is ELL-only
+        (:func:`compile_sharded` refuses the hybrid combination)."""
         in_deg = _in_degrees(system)
         h = auto_hub_threshold(in_deg)
         kin = int(in_deg.max()) if in_deg.size else 0
@@ -204,12 +206,32 @@ class ShardView(NamedTuple):
         return self.seg_start.shape[0]
 
 
+class DenseShardArrays(NamedTuple):
+    """Per-shard *dense* kernel operands (DESIGN.md §3 "Kernel lowering"),
+    attached by ``PallasBackend.lower`` so the fused dense kernel can
+    consume a shard: ``C' = C + halo·hadj + S·M_local``.  Stacked like
+    :class:`ShardArrays` (leading axis ``S``, sharded ``P(axis)``).
+
+    ``M_local[d]`` restricts each local rule's row of ``M_Π`` to shard
+    ``d``'s columns (``-consume`` at the owner, ``produce`` on *local*
+    out-neighbors; dummy padding rules are all-zero — they never fire
+    anyway).  ``hadj[d][s, j] = 1`` iff halo slot ``s`` of the extended
+    index space feeds local neuron ``j`` — remote produce enters as one
+    extra matmul instead of a gather."""
+
+    M_local: jnp.ndarray        # (S, nloc, mloc) i32
+    onehot: jnp.ndarray         # (S, nloc, mloc) i8 — rule→local neuron
+    hadj: jnp.ndarray           # (S, S·Hmax, mloc) i8
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class ShardedCompiled:
     """Neuron-axis partitioned lowering: stacked shard encodings + halo
     metadata.  Produced by :func:`compile_sharded`, consumed by
     ``explore_distributed`` (DESIGN.md §2); the static ints live outside
-    the array pytree so they stay Python constants under ``jit``."""
+    the array pytree so they stay Python constants under ``jit``.
+    ``dense`` is the optional dense-kernel view of the same shards
+    (:class:`DenseShardArrays`), attached by ``PallasBackend.lower``."""
 
     arrays: ShardArrays
     plan: SystemPlan
@@ -218,6 +240,7 @@ class ShardedCompiled:
     shard_size: int             # mloc
     num_shards: int             # S
     halo_width: int             # Hmax
+    dense: Optional[DenseShardArrays] = None
 
     @property
     def init_config(self) -> jnp.ndarray:
@@ -242,14 +265,14 @@ def compile_sharded(system: SNPSystem, plan: SystemPlan) -> ShardedCompiled:
     from .matrix import _lower, _ragged_arange
 
     if plan.encoding == "hybrid":
-        # The sharded device step has no COO segment-sum stage yet, and
-        # the compile contract (backend.py) forbids silently downgrading a
-        # requested encoding — refuse instead.
+        # The per-shard encodings are ELL-only (hub tails widen the halo
+        # instead of spilling to COO), and the compile contract
+        # (backend.py) forbids silently downgrading a requested encoding
+        # — refuse instead.
         raise ValueError(
             "neuron-axis sharding does not support the hybrid ELL+COO "
-            "encoding yet (the sharded step gathers over per-shard ELL "
-            "rows only — see ROADMAP); use encoding='ell' with "
-            "num_shards > 1")
+            "encoding (the sharded step gathers over per-shard ELL "
+            "rows only); use encoding='ell' with num_shards > 1")
     if plan.encoding not in ("auto", "ell"):
         # Same contract when explore_distributed reaches here directly,
         # bypassing the backend's _require_encoding check.
@@ -345,6 +368,47 @@ def compile_sharded(system: SNPSystem, plan: SystemPlan) -> ShardedCompiled:
     return ShardedCompiled(arrays=arrays, plan=plan, num_neurons=m,
                            num_rules=n, shard_size=mloc, num_shards=S,
                            halo_width=hmax)
+
+
+def lower_shard_dense(comp: ShardedCompiled) -> ShardedCompiled:
+    """Attach the dense-kernel operands (:class:`DenseShardArrays`) to a
+    sharded lowering.  Host-side numpy (same contract as the compilers);
+    idempotent — an already-lowered object passes through."""
+    if comp.dense is not None:
+        return comp
+    from .matrix import _ragged_arange  # plan -> matrix only (no cycle)
+    a = comp.arrays
+    S, mloc, hmax = comp.num_shards, comp.shard_size, comp.halo_width
+    nloc = a.rule_neuron.shape[1]
+    rn = np.asarray(a.rule_neuron)
+    cons = np.asarray(a.consume)
+    prod = np.asarray(a.produce)
+    base = np.asarray(a.regex_base)
+    seg_start = np.asarray(a.seg_start)
+    seg_count = np.asarray(a.seg_count)
+    in_idx = np.asarray(a.in_idx)
+
+    M = np.zeros((S, nloc, mloc), np.int32)
+    onehot = np.zeros((S, nloc, mloc), np.int8)
+    hadj = np.zeros((S, S * hmax, mloc), np.int8)
+    for d in range(S):
+        real = np.nonzero(base[d] != _NEVER_BASE)[0]
+        M[d, real, rn[d, real]] = -cons[d, real]
+        onehot[d, real, rn[d, real]] = 1
+        # local synapses: in_idx entries below mloc are local sources; a
+        # source's every rule writes its produce into the target column.
+        jj, kk = np.nonzero(in_idx[d] < mloc)
+        src = in_idx[d][jj, kk]
+        cnt = seg_count[d, src].astype(np.int64)
+        rr = np.repeat(seg_start[d, src], cnt) + _ragged_arange(cnt)
+        np.add.at(M[d], (rr, np.repeat(jj, cnt)), prod[d, rr])
+        # halo slots feeding local neurons (extended-space indices).
+        hj, hk = np.nonzero((in_idx[d] >= mloc) &
+                            (in_idx[d] < mloc + S * hmax))
+        hadj[d][in_idx[d][hj, hk] - mloc, hj] = 1
+    return dataclasses.replace(comp, dense=DenseShardArrays(
+        M_local=jnp.asarray(M), onehot=jnp.asarray(onehot),
+        hadj=jnp.asarray(hadj)))
 
 
 def shard_view(arrays: ShardArrays) -> ShardView:

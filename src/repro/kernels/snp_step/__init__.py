@@ -10,13 +10,21 @@ Two variants behind the step-backend registry:
   (:class:`repro.core.backend.SparsePallasBackend`,
   ``backend="sparse_pallas"``).
 
+Both bodies are parameterized by the plan's encoding metadata
+(DESIGN.md §3 "Kernel lowering"): the sparse kernel carries an in-kernel
+COO segment-sum stage for hybrid ELL+COO plans, and the ``*_shard``
+wrappers consume one neuron shard of a
+:class:`~repro.core.plan.ShardedCompiled` (extended-index / halo form)
+inside ``explore_distributed``.
+
 Keep the raw entry points here for kernel tests and benchmarks."""
 
 from .kernel import snp_step_pallas
-from .ops import snp_step
+from .ops import snp_step, snp_step_dense_shard
 from .ref import snp_step_ref
 from .sparse_kernel import snp_step_sparse_pallas
-from .sparse_ops import snp_step_sparse
+from .sparse_ops import snp_step_sparse, snp_step_sparse_shard
 
-__all__ = ["snp_step", "snp_step_pallas", "snp_step_ref",
-           "snp_step_sparse", "snp_step_sparse_pallas"]
+__all__ = ["snp_step", "snp_step_dense_shard", "snp_step_pallas",
+           "snp_step_ref", "snp_step_sparse", "snp_step_sparse_pallas",
+           "snp_step_sparse_shard"]

@@ -20,6 +20,15 @@ VMEM still stream through.  Block defaults keep the working set
 (digit scratch + onehot/M tiles + S tile) within ~8 MB of VMEM and all
 matmul dims at multiples of the 128-lane MXU.
 
+**Shard consumption** (DESIGN.md §3 "Kernel lowering"): the same body also
+serves one neuron shard of a :class:`~repro.core.plan.ShardedCompiled`.
+The shard's dense lowering (``PallasBackend.lower``) restricts each local
+rule's row to local columns (``M_local``), and the produce of *remote*
+in-neighbors arrives as a halo input (exchanged outside the kernel) that
+is folded in as one extra MXU matmul against the static 0/1 halo
+in-adjacency: ``C' = C + halo·H_adj + S·M_local``.  Dummy padding rules
+are never applicable (``app = 0``), so their rows contribute nothing.
+
 TPU is the compilation *target*; correctness is validated in
 ``interpret=True`` mode against :mod:`repro.kernels.snp_step.ref`.
 """
@@ -40,65 +49,79 @@ _CompilerParams = getattr(pltpu, "CompilerParams",
 __all__ = ["snp_step_pallas"]
 
 
-def _kernel(
-    # inputs (blocks)
-    c_ref,        # (bb, m)  f32 — configurations
-    rank_ref,     # (bb, bn) f32 — per-rule rank among applicable in neuron
-    app_ref,      # (bb, bn) f32 — applicability mask
-    stride_ref,   # (bb, m)  i32 — mixed-radix strides (clamped)
-    choices_ref,  # (bb, m)  i32 — per-neuron choice counts
-    psi_ref,      # (bb, 1)  f32 — number of valid branches
-    onehot_ref,   # (m, bn)  f32 — neuron→rule incidence
-    mat_ref,      # (bn, m)  f32 — M_Π block
-    env_ref,      # (bn, 1)  f32 — environment-emission weights
-    # outputs (blocks)
-    out_ref,      # (bb, bt, m) f32 — successor configs (accumulated over k)
-    valid_ref,    # (bb, bt) i32
-    emis_ref,     # (bb, bt) f32 (accumulated over k)
-    # scratch
-    digit_ref,    # (bb, bt, m) f32 — decoded digits, persists across k
-):
-    j = pl.program_id(1)   # branch-tile index
-    k = pl.program_id(2)   # rule-tile index (innermost, accumulated)
-    bb, bt, m = out_ref.shape
+def _make_kernel(has_halo: bool):
+    """Body specialized to whether a shard halo input is present (keeps
+    the ref list static for ``pallas_call``)."""
 
-    @pl.when(k == 0)
-    def _init():
-        # Branch ids for this tile.
-        t = (j * bt + jax.lax.broadcasted_iota(jnp.int32, (1, bt, 1), 1))
-        stride = stride_ref[...].reshape(bb, 1, m)
-        choices = choices_ref[...].reshape(bb, 1, m)
-        digits = (t // stride) % choices                     # (bb, bt, m) i32
-        digit_ref[...] = digits.astype(jnp.float32)
-        # Output starts at C (broadcast over branches); S·M accumulates in.
-        out_ref[...] = jnp.broadcast_to(
-            c_ref[...].reshape(bb, 1, m), (bb, bt, m)
+    def kernel(*refs):
+        it = iter(refs)
+        c_ref = next(it)        # (bb, m)  f32 — configurations
+        rank_ref = next(it)     # (bb, bn) f32 — rank among applicable
+        app_ref = next(it)      # (bb, bn) f32 — applicability mask
+        stride_ref = next(it)   # (bb, m)  i32 — radix strides (clamped)
+        choices_ref = next(it)  # (bb, m)  i32 — per-neuron choice counts
+        psi_ref = next(it)      # (bb, 1)  f32 — number of valid branches
+        onehot_ref = next(it)   # (m, bn)  f32 — neuron→rule incidence
+        mat_ref = next(it)      # (bn, m)  f32 — M_Π block
+        env_ref = next(it)      # (bn, 1)  f32 — emission weights
+        if has_halo:
+            halo_ref = next(it)  # (bb, bt, H) f32 — remote fired produce
+            hadj_ref = next(it)  # (H, m)      f32 — halo 0/1 in-adjacency
+        out_ref = next(it)      # (bb, bt, m) f32 — accumulated over k
+        valid_ref = next(it)    # (bb, bt) i32
+        emis_ref = next(it)     # (bb, bt) f32 (accumulated over k)
+        digit_ref = next(it)    # (bb, bt, m) f32 scratch, persists across k
+
+        j = pl.program_id(1)   # branch-tile index
+        k = pl.program_id(2)   # rule-tile index (innermost, accumulated)
+        bb, bt, m = out_ref.shape
+
+        @pl.when(k == 0)
+        def _init():
+            # Branch ids for this tile.
+            t = (j * bt + jax.lax.broadcasted_iota(jnp.int32, (1, bt, 1), 1))
+            stride = stride_ref[...].reshape(bb, 1, m)
+            choices = choices_ref[...].reshape(bb, 1, m)
+            digits = (t // stride) % choices                 # (bb, bt, m) i32
+            digit_ref[...] = digits.astype(jnp.float32)
+            # Output starts at C (broadcast over branches) plus, for a
+            # shard, the halo contribution; S·M accumulates in over k.
+            base = jnp.broadcast_to(
+                c_ref[...].reshape(bb, 1, m), (bb, bt, m))
+            if has_halo:
+                base = base + jax.lax.dot_general(
+                    halo_ref[...], hadj_ref[...],
+                    (((2,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )
+            out_ref[...] = base
+            emis_ref[...] = jnp.zeros((bb, bt), jnp.float32)
+            tf = t.reshape(1, bt).astype(jnp.float32)
+            valid_ref[...] = (tf < psi_ref[...]).astype(jnp.int32)
+
+        digits = digit_ref[...]                               # (bb, bt, m)
+        # "gather digit of each rule's neuron" as an MXU matmul with the
+        # 0/1 incidence: digits_r[b,t,i] = Σ_μ digits[b,t,μ]·onehot[μ,i].
+        digits_r = jax.lax.dot_general(
+            digits, onehot_ref[...],
+            (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                     # (bb, bt, bn)
+        s = app_ref[...].reshape(bb, 1, -1) * (
+            digits_r == rank_ref[...].reshape(bb, 1, -1)
+        ).astype(jnp.float32)                                 # (bb, bt, bn)
+        out_ref[...] += jax.lax.dot_general(
+            s, mat_ref[...],
+            (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
         )
-        emis_ref[...] = jnp.zeros((bb, bt), jnp.float32)
-        tf = t.reshape(1, bt).astype(jnp.float32)
-        valid_ref[...] = (tf < psi_ref[...]).astype(jnp.int32)
+        emis_ref[...] += jax.lax.dot_general(
+            s, env_ref[...],
+            (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).reshape(bb, bt)
 
-    digits = digit_ref[...]                                   # (bb, bt, m)
-    # "gather digit of each rule's neuron" as an MXU matmul with the 0/1
-    # incidence matrix: digits_r[b,t,i] = Σ_μ digits[b,t,μ]·onehot[μ,i].
-    digits_r = jax.lax.dot_general(
-        digits, onehot_ref[...],
-        (((2,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )                                                         # (bb, bt, bn)
-    s = app_ref[...].reshape(bb, 1, -1) * (
-        digits_r == rank_ref[...].reshape(bb, 1, -1)
-    ).astype(jnp.float32)                                     # (bb, bt, bn)
-    out_ref[...] += jax.lax.dot_general(
-        s, mat_ref[...],
-        (((2,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
-    emis_ref[...] += jax.lax.dot_general(
-        s, env_ref[...],
-        (((2,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    ).reshape(bb, bt)
+    return kernel
 
 
 @functools.partial(
@@ -116,6 +139,8 @@ def snp_step_pallas(
     onehot: jnp.ndarray,     # (n, m) int8 — rule→neuron incidence
     M: jnp.ndarray,          # (n, m) int32
     env: jnp.ndarray,        # (n,) int32
+    halo: jnp.ndarray = None,   # (B, T, H) int32 — shard halo produce
+    hadj: jnp.ndarray = None,   # (H, m) int8 — halo 0/1 in-adjacency
     *,
     max_branches: int,
     block_b: int = 8,
@@ -123,29 +148,51 @@ def snp_step_pallas(
     block_n: int = 512,
     interpret: bool = True,
 ):
-    """Raw tiled kernel call.  Use :mod:`..ops` for the padded public API."""
+    """Raw tiled kernel call.  Use :mod:`..ops` for the padded public API.
+    ``halo``/``hadj`` select the shard body (module docstring)."""
     B, m = configs.shape
     n = rank.shape[1]
     T = max_branches
     assert B % block_b == 0 and T % block_t == 0 and n % block_n == 0, (
         "ops.py must pad shapes to block multiples"
     )
+    has_halo = halo is not None
     grid = (B // block_b, T // block_t, n // block_n)
 
+    in_specs = [
+        pl.BlockSpec((block_b, m), lambda i, j, k: (i, 0)),
+        pl.BlockSpec((block_b, block_n), lambda i, j, k: (i, k)),
+        pl.BlockSpec((block_b, block_n), lambda i, j, k: (i, k)),
+        pl.BlockSpec((block_b, m), lambda i, j, k: (i, 0)),
+        pl.BlockSpec((block_b, m), lambda i, j, k: (i, 0)),
+        pl.BlockSpec((block_b, 1), lambda i, j, k: (i, 0)),
+        pl.BlockSpec((m, block_n), lambda i, j, k: (0, k)),
+        pl.BlockSpec((block_n, m), lambda i, j, k: (k, 0)),
+        pl.BlockSpec((block_n, 1), lambda i, j, k: (k, 0)),
+    ]
+    operands = [
+        configs.astype(jnp.float32),
+        rank.astype(jnp.float32),
+        app.astype(jnp.float32),
+        stride.astype(jnp.int32),
+        choices.astype(jnp.int32),
+        psi.reshape(B, 1).astype(jnp.float32),
+        onehot.T.astype(jnp.float32),   # (m, n)
+        M.astype(jnp.float32),
+        env.reshape(n, 1).astype(jnp.float32),
+    ]
+    if has_halo:
+        H = halo.shape[-1]
+        in_specs += [
+            pl.BlockSpec((block_b, block_t, H), lambda i, j, k: (i, j, 0)),
+            pl.BlockSpec((H, m), lambda i, j, k: (0, 0)),
+        ]
+        operands += [halo.astype(jnp.float32), hadj.astype(jnp.float32)]
+
     out, valid, emis = pl.pallas_call(
-        _kernel,
+        _make_kernel(has_halo),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, m), lambda i, j, k: (i, 0)),
-            pl.BlockSpec((block_b, block_n), lambda i, j, k: (i, k)),
-            pl.BlockSpec((block_b, block_n), lambda i, j, k: (i, k)),
-            pl.BlockSpec((block_b, m), lambda i, j, k: (i, 0)),
-            pl.BlockSpec((block_b, m), lambda i, j, k: (i, 0)),
-            pl.BlockSpec((block_b, 1), lambda i, j, k: (i, 0)),
-            pl.BlockSpec((m, block_n), lambda i, j, k: (0, k)),
-            pl.BlockSpec((block_n, m), lambda i, j, k: (k, 0)),
-            pl.BlockSpec((block_n, 1), lambda i, j, k: (k, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_b, block_t, m), lambda i, j, k: (i, j, 0)),
             pl.BlockSpec((block_b, block_t), lambda i, j, k: (i, j)),
@@ -163,15 +210,5 @@ def snp_step_pallas(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(
-        configs.astype(jnp.float32),
-        rank.astype(jnp.float32),
-        app.astype(jnp.float32),
-        stride.astype(jnp.int32),
-        choices.astype(jnp.int32),
-        psi.reshape(B, 1).astype(jnp.float32),
-        onehot.T.astype(jnp.float32),   # (m, n)
-        M.astype(jnp.float32),
-        env.reshape(n, 1).astype(jnp.float32),
-    )
+    )(*operands)
     return out.astype(jnp.int32), valid.astype(bool), emis.astype(jnp.int32)

@@ -1,9 +1,16 @@
-"""Public jit'd wrapper around the fused SNP transition kernel.
+"""Public jit'd wrappers around the fused dense SNP transition kernel.
 
 Handles everything the raw kernel assumes away: the cheap O(B·n) branch
 bookkeeping (applicability, ranks, radix strides — computed with the
 reference semantics), padding every dimension to block multiples (padding
 rules never fire: app=0, M rows=0), and unpadding/masking the results.
+
+:func:`snp_step` is the single-device step on a
+:class:`~repro.core.matrix.CompiledSNP`; :func:`snp_step_dense_shard`
+steps one neuron shard of a :class:`~repro.core.plan.ShardedCompiled`
+through the same kernel body's halo form (``C' = C + halo·H_adj +
+S·M_local`` — DESIGN.md §3 "Kernel lowering"), with the bookkeeping and
+the halo exchange owned by ``explore_distributed``'s sharded step.
 
 On CPU the kernel runs in interpret mode; on TPU pass ``interpret=False``.
 """
@@ -20,11 +27,23 @@ from repro.core.semantics import branch_info
 
 from .kernel import snp_step_pallas
 
-__all__ = ["snp_step"]
+__all__ = ["snp_step", "snp_step_dense_shard"]
 
 
 def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
+
+
+def _pad(x, rows=None, cols=None, value=0):
+    """Pad the leading (batch/rule) and/or trailing axis to a block
+    multiple — shared by both wrappers so padding semantics can't
+    diverge."""
+    pads = [(0, 0)] * x.ndim
+    if rows is not None:
+        pads[0] = (0, rows - x.shape[0])
+    if cols is not None:
+        pads[-1] = (0, cols - x.shape[-1])
+    return jnp.pad(x, pads, constant_values=value)
 
 
 @functools.partial(
@@ -63,25 +82,17 @@ def snp_step(
     Bp, Tp, Np = (_round_up(B, block_b), _round_up(T, block_t),
                   _round_up(n, block_n))
 
-    def pad(x, rows=None, cols=None, value=0):
-        pads = [(0, 0)] * x.ndim
-        if rows is not None:
-            pads[0] = (0, rows - x.shape[0])
-        if cols is not None:
-            pads[-1] = (0, cols - x.shape[-1])
-        return jnp.pad(x, pads, constant_values=value)
-
     out, valid, emis = snp_step_pallas(
-        pad(configs, rows=Bp),
-        pad(pad(info.rank, cols=Np, value=-1), rows=Bp),
-        pad(pad(info.app, cols=Np), rows=Bp),
+        _pad(configs, rows=Bp),
+        _pad(_pad(info.rank, cols=Np, value=-1), rows=Bp),
+        _pad(_pad(info.app, cols=Np), rows=Bp),
         # padded configs: stride 1 / choices 1 / psi 0 -> no valid branches
-        pad(stride, rows=Bp, value=1),
-        pad(info.choices, rows=Bp, value=1),
-        pad(info.psi, rows=Bp),
-        pad(comp.neuron_onehot, rows=Np),           # (n, m) pad rules
-        pad(comp.M, rows=Np),
-        pad(comp.env_produce, rows=Np),
+        _pad(stride, rows=Bp, value=1),
+        _pad(info.choices, rows=Bp, value=1),
+        _pad(info.psi, rows=Bp),
+        _pad(comp.neuron_onehot, rows=Np),          # (n, m) pad rules
+        _pad(comp.M, rows=Np),
+        _pad(comp.env_produce, rows=Np),
         max_branches=Tp,
         block_b=block_b, block_t=block_t, block_n=block_n,
         interpret=interpret,
@@ -91,3 +102,57 @@ def snp_step(
     emis = emis[:B, :T]
     overflow = info.psi > float(T)
     return out, valid, emis, overflow
+
+
+def snp_step_dense_shard(
+    configs: jnp.ndarray,   # (B, mloc) int32 — local frontier slices
+    rank: jnp.ndarray,      # (B, nloc) int32 — local-rule ranks
+    app: jnp.ndarray,       # (B, nloc) bool — local-rule applicability
+    stride: jnp.ndarray,    # (B, mloc) f32 — cross-shard-combined strides
+    choices: jnp.ndarray,   # (B, mloc) int32
+    psi: jnp.ndarray,       # (B,) f32 — replicated global Ψ
+    onehot: jnp.ndarray,    # (nloc, mloc) int8 — rule→local-neuron map
+    M_local: jnp.ndarray,   # (nloc, mloc) int32 — local columns of M_Π
+    hadj: jnp.ndarray,      # (H, mloc) int8 — halo 0/1 in-adjacency
+    halo: jnp.ndarray,      # (B, T, H) int32 — received remote produce
+    *,
+    max_branches: int,
+    block_b: int = 8,
+    block_t: int = 128,
+    block_n: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One shard's candidate slices ``(B, T, mloc)`` through the fused
+    dense kernel (``C' = C + halo·H_adj + S·M_local`` — kernel.py module
+    docstring).  Bookkeeping and the halo exchange belong to the caller
+    (``explore_distributed``'s sharded step); this wrapper pads to block
+    multiples and clamps the saturating f32 strides into the kernel's
+    int32 decode.  Traceable inside ``shard_map``."""
+    B, m = configs.shape
+    n = rank.shape[1]
+    T = max_branches
+    block_b = min(block_b, max(B, 1))
+    block_t = min(block_t, T)
+    block_n = min(block_n, _round_up(n, 128))
+    Bp, Tp, Np = (_round_up(B, block_b), _round_up(T, block_t),
+                  _round_up(n, block_n))
+
+    halo_p = jnp.pad(halo, [(0, Bp - B), (0, Tp - T), (0, 0)])
+    out, _, _ = snp_step_pallas(
+        _pad(configs, rows=Bp),
+        _pad(_pad(rank, cols=Np, value=-1), rows=Bp),
+        _pad(_pad(app, cols=Np), rows=Bp),
+        _pad(jnp.minimum(stride, 2.0 ** 30).astype(jnp.int32),
+             rows=Bp, value=1),
+        _pad(choices, rows=Bp, value=1),
+        _pad(psi, rows=Bp),
+        _pad(onehot, rows=Np),
+        _pad(M_local, rows=Np),
+        jnp.zeros((Np,), jnp.int32),    # shard emissions: driver's job
+        halo=halo_p,
+        hadj=hadj,
+        max_branches=Tp,
+        block_b=block_b, block_t=block_t, block_n=block_n,
+        interpret=interpret,
+    )
+    return out[:B, :T]

@@ -20,14 +20,36 @@ ops wrapper via :func:`repro.core.semantics.packed_rule_table`,
 output neuron.  Work per (b, t) is ``O(m·(1 + K_in))`` — proportional to
 ``nnz(M_Π)``, not ``n·m``.
 
+**One body, every ``SystemPlan`` encoding** (DESIGN.md §3 "Kernel
+lowering").  The ELL body above is parameterized by two pieces of encoding
+metadata, both optional and both scatter-free:
+
+* **COO segment-sum stage** (hybrid ELL+COO plans): the compiler sorts the
+  tail by ``(dst, src)`` and records per-hub run offsets
+  (``coo_bounds``) plus a neuron→hub map (``hub_slot``), so the tail
+  contribution is a gather + inclusive ``cumsum`` + two static-shape
+  gathers of run endpoints — never a scatter:
+
+      contrib = produce_fired[coo_src]                 (gather, (bb,bt,Ec))
+      cum0    = [0, cumsum(contrib)]                   (VPU)
+      tail[h] = cum0[bounds[h+1]] - cum0[bounds[h]]    (gather, (bb,bt,Hn))
+      ΔC[j]  += tail_pad[hub_slot[j]]                  (gather, (bb,bt,m))
+
+* **halo extension** (neuron-axis-sharded plans): ``in_idx`` indexes the
+  *extended* produce space ``[local (m) | halo (H) | zero]``; the halo
+  produce values arrive as an extra kernel input (exchanged by
+  ``explore_distributed``'s ``all_to_all`` *outside* the kernel — Pallas
+  bodies hold no collectives), and the output-neuron index must already
+  point at the extended zero slot.
+
 Grid: ``(B/bb, T/bt)`` with the whole neuron axis resident per block; the
-VMEM working set is ``O(bb·bt·m)``, so the ops wrapper shrinks ``bb`` for
-very wide systems.  All arithmetic is int32 (exact).  TPU is the
-compilation *target*; correctness is validated in ``interpret=True`` mode
-against :func:`repro.core.semantics.sparse_next_configs` (the in-kernel
-gathers lower to Mosaic dynamic-gathers on real hardware — revalidate
-bit-for-bit on a TPU before flipping ``interpret=False`` in production,
-see ROADMAP).
+VMEM working set is ``O(bb·bt·(m + H + Ec))``, so the ops wrapper shrinks
+``bb`` for very wide systems.  All arithmetic is int32 (exact).  TPU is
+the compilation *target*; correctness is validated in ``interpret=True``
+mode against :func:`repro.core.semantics.sparse_next_configs` (the
+in-kernel gathers lower to Mosaic dynamic-gathers on real hardware —
+revalidate bit-for-bit on a TPU before flipping ``interpret=False`` in
+production, see ROADMAP).
 """
 
 from __future__ import annotations
@@ -46,56 +68,86 @@ _CompilerParams = getattr(pltpu, "CompilerParams",
 __all__ = ["snp_step_sparse_pallas"]
 
 
-def _kernel(
-    # inputs (blocks)
-    c_ref,        # (bb, m)     i32 — configurations
-    stride_ref,   # (bb, m)     f32 — mixed-radix strides (may be +inf)
-    choices_ref,  # (bb, m)     i32 — per-neuron choice counts (>= 1)
-    psi_ref,      # (bb, 1)     f32 — number of valid branches
-    tab_ref,      # (bb, m, R)  i32 — packed (produce | consume << 16)
-    inidx_ref,    # (m, Kin)    i32 — ELL in-adjacency, pad m
-    outn_ref,     # (1,)        i32 — output neuron (m if none)
-    # outputs (blocks)
-    out_ref,      # (bb, bt, m) i32 — successor configs
-    valid_ref,    # (bb, bt)    i32
-    emis_ref,     # (bb, bt)    i32
-):
-    j = pl.program_id(1)   # branch-tile index
-    bb, bt, m = out_ref.shape
-    R = tab_ref.shape[2]
-    Kin = inidx_ref.shape[1]
+def _make_kernel(has_coo: bool, has_halo: bool):
+    """ELL body specialized to the encoding metadata actually present
+    (specialization keeps the ref list static for ``pallas_call``)."""
 
-    # Branch ids for this tile; decode one mixed-radix digit per neuron
-    # (f32 division, exact for T < 2^23 — semantics._decode_digits).
-    t = j * bt + jax.lax.broadcasted_iota(jnp.int32, (1, bt, 1), 1)
-    tf = t.astype(jnp.float32)
-    stride = stride_ref[...].reshape(bb, 1, m)
-    choices = choices_ref[...].reshape(bb, 1, m).astype(jnp.float32)
-    q = jnp.floor(tf / stride)
-    digits = (q - choices * jnp.floor(q / choices)).astype(jnp.int32)
+    def kernel(*refs):
+        it = iter(refs)
+        c_ref = next(it)        # (bb, m)     i32 — configurations
+        stride_ref = next(it)   # (bb, m)     f32 — radix strides (may +inf)
+        choices_ref = next(it)  # (bb, m)     i32 — per-neuron choices (>=1)
+        psi_ref = next(it)      # (bb, 1)     f32 — number of valid branches
+        tab_ref = next(it)      # (bb, m, R)  i32 — produce | consume << 16
+        inidx_ref = next(it)    # (m, Kin)    i32 — extended-space indices
+        outn_ref = next(it)     # (1,)        i32 — emission gather index
+        if has_coo:
+            coosrc_ref = next(it)   # (Ec,)    i32 — tail sources
+            coob_ref = next(it)     # (Hn+1,)  i32 — per-hub run offsets
+            hub_ref = next(it)      # (m,)     i32 — neuron -> hub slot
+        if has_halo:
+            halo_ref = next(it)     # (bb, bt, H) i32 — remote produce
+        out_ref = next(it)      # (bb, bt, m) i32 — successor configs
+        valid_ref = next(it)    # (bb, bt)    i32
+        emis_ref = next(it)     # (bb, bt)    i32
 
-    # Fired-rule actions: unrolled select over the R rule slots.
-    tab = tab_ref[...]
-    packed_f = jnp.zeros((bb, bt, m), jnp.int32)
-    for d in range(R):  # static R, unrolled
-        packed_f = jnp.where(
-            digits == d, tab[:, :, d].reshape(bb, 1, m), packed_f)
-    prod_f = packed_f & 0xFFFF
-    cons_f = packed_f >> 16
+        j = pl.program_id(1)   # branch-tile index
+        bb, bt, m = out_ref.shape
+        R = tab_ref.shape[2]
+        Kin = inidx_ref.shape[1]
 
-    # ΔC via the in-adjacency: padding entries (index m) hit the appended
-    # zero column, contributing nothing.
-    prod_pad = jnp.concatenate(
-        [prod_f, jnp.zeros((bb, bt, 1), jnp.int32)], axis=-1)
-    in_idx = inidx_ref[...]
-    delta = -cons_f
-    for k in range(Kin):  # static K_in, unrolled
-        delta = delta + jnp.take(prod_pad, in_idx[:, k], axis=-1)
+        # Branch ids for this tile; decode one mixed-radix digit per neuron
+        # (f32 division, exact for T < 2^23 — semantics._decode_digits).
+        t = j * bt + jax.lax.broadcasted_iota(jnp.int32, (1, bt, 1), 1)
+        tf = t.astype(jnp.float32)
+        stride = stride_ref[...].reshape(bb, 1, m)
+        choices = choices_ref[...].reshape(bb, 1, m).astype(jnp.float32)
+        q = jnp.floor(tf / stride)
+        digits = (q - choices * jnp.floor(q / choices)).astype(jnp.int32)
 
-    out_ref[...] = c_ref[...].reshape(bb, 1, m) + delta
-    tf = t.reshape(1, bt).astype(jnp.float32)
-    valid_ref[...] = (tf < psi_ref[...]).astype(jnp.int32)
-    emis_ref[...] = jnp.take(prod_pad, outn_ref[0], axis=-1)
+        # Fired-rule actions: unrolled select over the R rule slots.
+        tab = tab_ref[...]
+        packed_f = jnp.zeros((bb, bt, m), jnp.int32)
+        for d in range(R):  # static R, unrolled
+            packed_f = jnp.where(
+                digits == d, tab[:, :, d].reshape(bb, 1, m), packed_f)
+        prod_f = packed_f & 0xFFFF
+        cons_f = packed_f >> 16
+
+        # Extended produce space the in-adjacency indexes into: pure ELL is
+        # [local | zero]; a shard adds the received halo produce between
+        # them ([local | halo | zero]).  Padding entries always hit the
+        # trailing zero, contributing nothing.
+        parts = [prod_f]
+        if has_halo:
+            parts.append(halo_ref[...])
+        parts.append(jnp.zeros((bb, bt, 1), jnp.int32))
+        prod_ext = jnp.concatenate(parts, axis=-1)
+        in_idx = inidx_ref[...]
+        delta = -cons_f
+        for k in range(Kin):  # static K_in, unrolled
+            delta = delta + jnp.take(prod_ext, in_idx[:, k], axis=-1)
+
+        if has_coo:
+            # COO segment-sum stage (module docstring): tail sources are
+            # always local neurons, so gather from prod_ext's local prefix.
+            contrib = jnp.take(prod_ext, coosrc_ref[...], axis=-1)
+            cum0 = jnp.concatenate(
+                [jnp.zeros((bb, bt, 1), jnp.int32),
+                 jnp.cumsum(contrib, axis=-1)], axis=-1)
+            bounds = coob_ref[...]
+            tail = (jnp.take(cum0, bounds[1:], axis=-1)
+                    - jnp.take(cum0, bounds[:-1], axis=-1))
+            tail_pad = jnp.concatenate(
+                [tail, jnp.zeros((bb, bt, 1), jnp.int32)], axis=-1)
+            delta = delta + jnp.take(tail_pad, hub_ref[...], axis=-1)
+
+        out_ref[...] = c_ref[...].reshape(bb, 1, m) + delta
+        tfv = t.reshape(1, bt).astype(jnp.float32)
+        valid_ref[...] = (tfv < psi_ref[...]).astype(jnp.int32)
+        emis_ref[...] = jnp.take(prod_ext, outn_ref[0], axis=-1)
+
+    return kernel
 
 
 @functools.partial(
@@ -108,8 +160,12 @@ def snp_step_sparse_pallas(
     choices: jnp.ndarray,    # (B, m) int32
     psi: jnp.ndarray,        # (B,) float32
     tab: jnp.ndarray,        # (B, m, R) int32 packed rule table
-    in_idx: jnp.ndarray,     # (m, Kin) int32
-    out_neuron: jnp.ndarray,  # () int32 — m if no output neuron
+    in_idx: jnp.ndarray,     # (m, Kin) int32 — extended-space indices
+    out_neuron: jnp.ndarray,  # () int32 — emission index (zero slot if none)
+    coo_src: jnp.ndarray = None,     # (Ec,) int32 — hybrid tail sources
+    coo_bounds: jnp.ndarray = None,  # (Hn+1,) int32 — per-hub run offsets
+    hub_slot: jnp.ndarray = None,    # (m,) int32 — neuron -> hub slot
+    halo: jnp.ndarray = None,        # (B, T, H) int32 — sharded halo produce
     *,
     max_branches: int,
     block_b: int = 8,
@@ -117,7 +173,9 @@ def snp_step_sparse_pallas(
     interpret: bool = True,
 ):
     """Raw tiled kernel call.  Use :mod:`..sparse_ops` for the padded
-    public API."""
+    public API.  ``coo_*``/``hub_slot`` select the COO segment-sum stage
+    (hybrid plans), ``halo`` the extended-index shard stage — both default
+    to the pure-ELL body."""
     B, m = configs.shape
     R = tab.shape[2]
     Kin = in_idx.shape[1]
@@ -125,20 +183,48 @@ def snp_step_sparse_pallas(
     assert B % block_b == 0 and T % block_t == 0, (
         "sparse_ops.py must pad shapes to block multiples"
     )
+    has_coo = coo_src is not None and coo_src.shape[0] > 0
+    has_halo = halo is not None
     grid = (B // block_b, T // block_t)
 
+    in_specs = [
+        pl.BlockSpec((block_b, m), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_b, m), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_b, m), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_b, m, R), lambda i, j: (i, 0, 0)),
+        pl.BlockSpec((m, Kin), lambda i, j: (0, 0)),
+        pl.BlockSpec((1,), lambda i, j: (0,)),
+    ]
+    operands = [
+        configs.astype(jnp.int32),
+        stride.astype(jnp.float32),
+        choices.astype(jnp.int32),
+        psi.reshape(B, 1).astype(jnp.float32),
+        tab.astype(jnp.int32),
+        in_idx.astype(jnp.int32),
+        out_neuron.reshape(1).astype(jnp.int32),
+    ]
+    if has_coo:
+        Ec, Hn = coo_src.shape[0], coo_bounds.shape[0] - 1
+        in_specs += [
+            pl.BlockSpec((Ec,), lambda i, j: (0,)),
+            pl.BlockSpec((Hn + 1,), lambda i, j: (0,)),
+            pl.BlockSpec((m,), lambda i, j: (0,)),
+        ]
+        operands += [coo_src.astype(jnp.int32),
+                     coo_bounds.astype(jnp.int32),
+                     hub_slot.astype(jnp.int32)]
+    if has_halo:
+        H = halo.shape[-1]
+        in_specs.append(
+            pl.BlockSpec((block_b, block_t, H), lambda i, j: (i, j, 0)))
+        operands.append(halo.astype(jnp.int32))
+
     out, valid, emis = pl.pallas_call(
-        _kernel,
+        _make_kernel(has_coo, has_halo),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, m), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_b, m), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_b, m), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_b, m, R), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((m, Kin), lambda i, j: (0, 0)),
-            pl.BlockSpec((1,), lambda i, j: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_b, block_t, m), lambda i, j: (i, j, 0)),
             pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
@@ -153,13 +239,5 @@ def snp_step_sparse_pallas(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,
-    )(
-        configs.astype(jnp.int32),
-        stride.astype(jnp.float32),
-        choices.astype(jnp.int32),
-        psi.reshape(B, 1).astype(jnp.float32),
-        tab.astype(jnp.int32),
-        in_idx.astype(jnp.int32),
-        out_neuron.reshape(1).astype(jnp.int32),
-    )
+    )(*operands)
     return out, valid.astype(bool), emis

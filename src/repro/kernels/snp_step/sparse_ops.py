@@ -1,4 +1,4 @@
-"""Public jit'd wrapper around the fused sparse SNP transition kernel.
+"""Public jit'd wrappers around the fused sparse SNP transition kernel.
 
 Mirrors :mod:`.ops` for the dense kernel: computes the cheap ``O(B·m·R)``
 per-config bookkeeping with the reference sparse semantics (applicability,
@@ -7,7 +7,21 @@ from), pads the batch/branch dimensions to block multiples (padding rows
 decode digit 0 into all-zero tables: no valid branches, no contribution),
 and unpads/masks the results.
 
-On CPU the kernel runs in interpret mode; on TPU pass ``interpret=False``.
+Two entry points over the one encoding-parameterized kernel body
+(DESIGN.md §3 "Kernel lowering"):
+
+* :func:`snp_step_sparse` — single-device step on a
+  :class:`~repro.core.matrix.CompiledSparseSNP`; pure-ELL **and** hybrid
+  ELL+COO encodings (the COO segment-sum stage runs in-kernel from the
+  compiler's ``coo_bounds``/``hub_slot`` metadata).
+* :func:`snp_step_sparse_shard` — one neuron shard of a
+  :class:`~repro.core.plan.ShardedCompiled`: the caller
+  (``explore_distributed``'s sharded step) passes the already-combined
+  cross-shard strides/Ψ and the received halo produce; ``in_idx`` indexes
+  the extended ``[local | halo | zero]`` space.  Traceable inside
+  ``shard_map`` — the halo ``all_to_all`` stays outside the kernel.
+
+On CPU the kernels run in interpret mode; on TPU pass ``interpret=False``.
 """
 
 from __future__ import annotations
@@ -22,11 +36,22 @@ from repro.core.semantics import packed_rule_table, sparse_branch_info
 
 from .sparse_kernel import snp_step_sparse_pallas
 
-__all__ = ["snp_step_sparse"]
+__all__ = ["snp_step_sparse", "snp_step_sparse_shard"]
 
 
 def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
+
+
+def _pad_bt(x, rows, branches=None, value=0):
+    """Zero/value-pad the batch axis (axis 0) and optionally the branch
+    axis (axis 1) to block multiples — shared by both wrappers so padding
+    semantics can't diverge.  (Distinct name and axes from the dense
+    wrapper's ``ops._pad``, which pads leading/trailing axes.)"""
+    pads = [(0, rows - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    if branches is not None:
+        pads[1] = (0, branches - x.shape[1])
+    return jnp.pad(x, pads, constant_values=value)
 
 
 @functools.partial(
@@ -46,20 +71,23 @@ def snp_step_sparse(
     valid (B,T) bool, emissions (B,T) int32, overflow (B,) bool).
 
     Bit-identical to :func:`repro.core.semantics.sparse_next_configs` (and
-    hence to the dense oracle on valid entries for spike counts < 2^24).
+    hence to the dense oracle on valid entries for spike counts < 2^24),
+    for pure-ELL and hybrid ELL+COO encodings alike.
     """
     B, m = configs.shape
     T = max_branches
 
-    if comp.coo_src.shape[0]:
+    if comp.coo_src.shape[0] and (comp.coo_bounds is None
+                                  or comp.hub_slot is None):
         # Static-shape check, so this raises at trace time with a real
-        # message instead of a shape crash deep in the kernel.
-        raise NotImplementedError(
-            "snp_step_sparse: the fused kernel supports only the pure-ELL "
-            "in-adjacency; this system was compiled with a hybrid ELL+COO "
-            f"plan ({int(comp.coo_src.shape[0])} tail synapses).  Use "
-            "backend='sparse' (the SparsePallasBackend falls back to it "
-            "automatically with a warning).")
+        # message instead of a shape crash deep in the kernel.  Only
+        # hand-built encodings can get here: compile_system_sparse always
+        # emits the segment metadata the in-kernel COO stage consumes.
+        raise ValueError(
+            "snp_step_sparse: hybrid ELL+COO encoding without COO lowering "
+            "metadata (coo_bounds/hub_slot); lower the system through "
+            "compile_system_sparse / backend.compile instead of building "
+            "the CompiledSparseSNP by hand")
 
     block_b = min(block_b, max(B, 1))
     block_t = min(block_t, T)
@@ -69,19 +97,18 @@ def snp_step_sparse(
 
     Bp, Tp = _round_up(B, block_b), _round_up(T, block_t)
 
-    def pad_rows(x, value=0):
-        pads = [(0, Bp - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
-        return jnp.pad(x, pads, constant_values=value)
-
     out, valid, emis = snp_step_sparse_pallas(
-        pad_rows(configs),
+        _pad_bt(configs, Bp),
         # padded configs: stride 1 / choices 1 / psi 0 -> no valid branches
-        pad_rows(info.stride, value=1),
-        pad_rows(info.choices.astype(jnp.int32), value=1),
-        pad_rows(info.psi),
-        pad_rows(tab),
+        _pad_bt(info.stride, Bp, value=1),
+        _pad_bt(info.choices.astype(jnp.int32), Bp, value=1),
+        _pad_bt(info.psi, Bp),
+        _pad_bt(tab, Bp),
         comp.in_idx,
         comp.out_neuron,
+        coo_src=comp.coo_src if comp.coo_src.shape[0] else None,
+        coo_bounds=comp.coo_bounds if comp.coo_src.shape[0] else None,
+        hub_slot=comp.hub_slot if comp.coo_src.shape[0] else None,
         max_branches=Tp,
         block_b=block_b, block_t=block_t,
         interpret=interpret,
@@ -91,3 +118,47 @@ def snp_step_sparse(
     emis = emis[:B, :T]
     overflow = info.psi > float(T)
     return out, valid, emis, overflow
+
+
+def snp_step_sparse_shard(
+    configs: jnp.ndarray,   # (B, mloc) int32 — local frontier slices
+    stride: jnp.ndarray,    # (B, mloc) f32 — cross-shard-combined strides
+    choices: jnp.ndarray,   # (B, mloc) int32 — local choice counts
+    psi: jnp.ndarray,       # (B,) f32 — replicated global Ψ
+    tab: jnp.ndarray,       # (B, mloc, R) int32 — local packed rule table
+    in_idx: jnp.ndarray,    # (mloc, Kin) int32 — extended-space indices
+    halo: jnp.ndarray,      # (B, T, H) int32 — received remote produce
+    *,
+    max_branches: int,
+    block_b: int = 8,
+    block_t: int = 32,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One shard's candidate slices ``(B, T, mloc)`` through the fused
+    kernel.  Bookkeeping (branch info, radix combine, the halo exchange)
+    belongs to the caller — this wrapper only pads to block multiples and
+    routes the extended encoding into the kernel body.  Traceable (called
+    inside ``explore_distributed``'s ``shard_map``)."""
+    B, mloc = configs.shape
+    T = max_branches
+    H = halo.shape[-1]
+    block_b = min(block_b, max(B, 1))
+    block_t = min(block_t, T)
+    Bp, Tp = _round_up(B, block_b), _round_up(T, block_t)
+
+    # The emission gather index is the extended zero slot: shard emissions
+    # are judged by the driver, not here.
+    out, _, _ = snp_step_sparse_pallas(
+        _pad_bt(configs, Bp),
+        _pad_bt(stride, Bp, value=1),
+        _pad_bt(choices, Bp, value=1),
+        _pad_bt(psi, Bp),
+        _pad_bt(tab, Bp),
+        in_idx,
+        jnp.asarray(mloc + H, jnp.int32),
+        halo=_pad_bt(halo, Bp, branches=Tp),
+        max_branches=Tp,
+        block_b=block_b, block_t=block_t,
+        interpret=interpret,
+    )
+    return out[:B, :T]

@@ -35,9 +35,11 @@ def neuron_axis(num_shards: int, *, encoding: str = "ell",
     ``explore_distributed`` consumes for its neuron-axis-sharded frontier
     (one shard per device of the flattened 1-D mesh; DESIGN.md §2).
     Build it from a live mesh via :meth:`ShardingPlan.neuron_axis` or
-    directly from ``len(jax.devices())``.  ``encoding="hybrid"`` combined
-    with ``num_shards > 1`` is refused at compile time (the sharded step
-    has no COO stage yet — ROADMAP)."""
+    directly from ``len(jax.devices())``.  Any backend whose lowering
+    registry declares ``"sharded"`` steps the shards — including the
+    fused kernels (DESIGN.md §3 "Kernel lowering").  ``encoding="hybrid"``
+    combined with ``num_shards > 1`` is refused at compile time (the
+    per-shard encodings are ELL; hub tails inflate the halo instead)."""
     return SystemPlan(encoding=encoding, hub_threshold=hub_threshold,
                       num_shards=num_shards)
 

@@ -1,0 +1,190 @@
+"""Kernel-lowering layer tests (DESIGN.md §3 "Kernel lowering"): the
+backend × encoding × sharded/unsharded matrix, registry-driven.
+
+Every registered backend declares its realizable plan encodings
+(``StepBackend.supported_encodings``); this module walks that declaration
+and asserts bit-identity to ``"ref"`` for every cell — including the
+interpret-mode Pallas kernels, hub-tail-only hybrid encodings
+(``hub_threshold=1``: every hub in-synapse rides the COO stage), and the
+neuron-axis-sharded paths on a faked 8-device mesh (subprocesses with
+``XLA_FLAGS=--xla_force_host_platform_device_count``, same convention as
+``tests/test_sharded_frontier.py``), where empty shards (m=3 over 8
+devices) must also hold."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (SystemPlan, available_backends, get_backend,
+                        paper_pi, supports_sharded)
+from repro.core.generators import power_law, random_system, ring_lattice
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SYSTEMS = {
+    "paper-pi": (paper_pi(True), 16),
+    "random-17": (random_system(17, 3, 0.3, seed=3), 32),
+    "ring-lattice-12": (ring_lattice(12, 3, seed=1), 16),
+    "power-law-40": (power_law(40, 3, seed=3), 16),
+}
+
+# Concrete single-device plans per declared encoding.  hub_threshold=1 is
+# the hub-tail-only extreme: the entire hub in-adjacency rides the COO
+# segment-sum stage.
+PLANS = {
+    "dense": (SystemPlan(encoding="dense"),),
+    "ell": (SystemPlan(encoding="ell"),),
+    "hybrid": (SystemPlan(encoding="hybrid", hub_threshold=1),
+               SystemPlan(encoding="hybrid", hub_threshold=4)),
+}
+
+
+def _run(ndev: int, body: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(body)],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+
+
+def _assert_same_step(a, b):
+    va, vb = np.asarray(a.valid), np.asarray(b.valid)
+    np.testing.assert_array_equal(va, vb)
+    np.testing.assert_array_equal(np.asarray(a.overflow),
+                                  np.asarray(b.overflow))
+    np.testing.assert_array_equal(
+        np.where(va[..., None], np.asarray(a.configs), 0),
+        np.where(vb[..., None], np.asarray(b.configs), 0))
+    np.testing.assert_array_equal(
+        np.where(va, np.asarray(a.emissions), 0),
+        np.where(vb, np.asarray(b.emissions), 0))
+
+
+# ---------------------------------------------------------------------------
+# the registry declaration itself
+# ---------------------------------------------------------------------------
+
+def test_lowering_registry_declarations():
+    """Every backend declares a non-empty encoding tuple whose first
+    entry is its native layout, built-ins all support 'sharded', and the
+    declared single-device encodings are exactly the compilable ones."""
+    for name in available_backends():
+        be = get_backend(name)
+        sup = be.supported_encodings()
+        assert sup and sup[0] in ("dense", "ell")
+        assert supports_sharded(be)
+    assert get_backend("ref").supported_encodings()[0] == "dense"
+    assert get_backend("sparse").supported_encodings()[0] == "ell"
+    assert "hybrid" in get_backend("sparse_pallas").supported_encodings()
+    assert "hybrid" not in get_backend("pallas").supported_encodings()
+
+
+# ---------------------------------------------------------------------------
+# backend × encoding (single device): bit-identity to ref
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(available_backends()))
+@pytest.mark.parametrize("system_name", sorted(SYSTEMS))
+def test_backend_encoding_matrix_matches_ref(name, system_name):
+    """Walk every (backend, declared encoding, plan) cell and assert the
+    expanded step equals the dense oracle bit-for-bit on valid entries —
+    the interpret-mode kernels included."""
+    system, T = SYSTEMS[system_name]
+    be = get_backend(name)
+    ref = get_backend("ref")
+    rng = np.random.default_rng(abs(hash((name, system_name))) % 2**31)
+    cfgs = jnp.asarray(
+        rng.integers(0, 4, size=(5, system.num_neurons)), jnp.int32)
+    want = ref.expand(cfgs, ref.compile(system), T)
+    cells = 0
+    for enc in be.supported_encodings():
+        for plan in PLANS.get(enc, ()):
+            comp = be.compile(system, plan=plan)
+            _assert_same_step(want, be.expand(cfgs, comp, T))
+            cells += 1
+    assert cells >= 1
+
+
+# ---------------------------------------------------------------------------
+# sharded × backend (faked 8-device mesh): the full matrix in one
+# subprocess per workload — explore and distributed trace serving
+# ---------------------------------------------------------------------------
+
+def test_sharded_explore_matrix_matches_single_device_8dev():
+    proc = _run(8, """
+        import jax
+        from repro.core import explore, paper_pi
+        from repro.core.backend import PallasBackend, SparsePallasBackend
+        from repro.core.distributed import explore_distributed
+        from repro.core.generators import power_law
+        from repro.sharding import neuron_axis
+
+        assert len(jax.devices()) == 8
+        cases = [
+            # m=3 < 8 shards: most devices hold empty slices
+            (paper_pi(True), dict(max_steps=12, frontier_cap=64,
+                                  visited_cap=512, max_branches=16)),
+            # heavy-tailed in-degree crossing every shard boundary
+            (power_law(26, 3, seed=6),
+             dict(max_steps=3, frontier_cap=128, visited_cap=1024,
+                  max_branches=32)),
+        ]
+        backends = ["ref",
+                    SparsePallasBackend(block_b=4, block_t=8),
+                    PallasBackend(block_b=4, block_t=8, block_n=16)]
+        for system, kw in cases:
+            rs = explore(system, **kw)
+            want = {tuple(r) for r in rs.configs}
+            for be in backends:
+                rd = explore_distributed(system, plan=neuron_axis(8),
+                                         backend=be, **kw)
+                nm = be if isinstance(be, str) else be.name
+                assert {tuple(r) for r in rd.configs} == want, \\
+                    (nm, system.name)
+                assert rd.num_discovered == rs.num_discovered, \\
+                    (nm, system.name)
+        print("OK")
+    """)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK" in proc.stdout
+
+
+def test_distributed_traces_kernel_backends_bit_identical_8dev():
+    proc = _run(8, """
+        import numpy as np
+        from repro.core import SystemPlan, paper_pi, run_traces
+        from repro.core.backend import PallasBackend, SparsePallasBackend
+        from repro.core.distributed import run_traces_distributed
+        from repro.core.generators import power_law
+
+        for system, plan, T in [
+            (paper_pi(True), None, 16),
+            # hybrid plan through the sparse kernel's COO stage
+            (power_law(30, 3, seed=2),
+             SystemPlan(encoding="hybrid", hub_threshold=2), 32),
+        ]:
+            for be in (PallasBackend(block_b=4, block_t=8, block_n=16),
+                       SparsePallasBackend(block_b=4, block_t=8)):
+                if plan is not None and be.name == "pallas":
+                    continue          # hybrid is a sparse-family encoding
+                ref = run_traces(system, steps=6, seeds=range(5),
+                                 policy="random", max_branches=T,
+                                 backend=be, plan=plan)
+                got = run_traces_distributed(
+                    system, steps=6, seeds=range(5), policy="random",
+                    max_branches=T, backend=be, plan=plan)
+                for a, b in zip(ref, got):
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+        print("OK")
+    """)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK" in proc.stdout

@@ -2,7 +2,9 @@
 backend, hybrid ELL+COO encoding round-trips and ref-equivalence (the edge
 cases a split in-adjacency can get wrong: zero tail, all tail, a single
 hub, ruleless neurons), padding-memory wins on unbounded power-law graphs,
-plan validation errors, and the sparse_pallas hybrid fallback."""
+plan validation errors, and the sparse_pallas in-kernel COO stage (no
+hybrid fallback — the kernel-lowering matrix itself is covered by
+tests/test_kernel_lowering.py)."""
 
 import warnings
 
@@ -113,11 +115,27 @@ def test_backends_reject_foreign_plan_encodings(name):
     be = get_backend(name)
     dense = be.name in ("ref", "pallas")
     bad = "hybrid" if dense else "dense"
+    assert bad not in be.supported_encodings()
     with pytest.raises(ValueError, match="cannot realize"):
         be.compile(system, plan=SystemPlan(encoding=bad))
-    if dense:
-        with pytest.raises(ValueError, match="dense-only"):
-            be.compile(system, plan=SystemPlan(num_shards=2))
+
+
+@pytest.mark.parametrize("name", sorted(available_backends()))
+def test_every_backend_lowers_sharded_plans(name):
+    """The lowering registry declares 'sharded' for every built-in
+    backend, and compile(num_shards > 1) lowers to a ShardedCompiled for
+    all of them (consumed by explore_distributed)."""
+    from repro.core import is_sharded
+
+    be = get_backend(name)
+    assert "sharded" in be.supported_encodings()
+    sc = be.compile(paper_pi(True), plan=SystemPlan(num_shards=2))
+    assert is_sharded(sc) and sc.num_shards == 2
+    if name == "pallas":  # dense kernel operands attached by lower()
+        assert sc.dense is not None
+        assert sc.dense.M_local.shape[0] == 2
+    else:
+        assert sc.dense is None
 
 
 def test_single_device_consumers_reject_sharded_plans():
@@ -233,33 +251,59 @@ def test_explore_with_hybrid_plan_matches_ref():
 
 
 # ---------------------------------------------------------------------------
-# sparse_pallas: clear error + fallback, never a shape crash
+# sparse_pallas: the hybrid encoding runs in-kernel (COO segment-sum
+# stage) — no fallback warning, no shape crash, and a metadata-less
+# hand-built encoding raises instead of silently downgrading
 # ---------------------------------------------------------------------------
 
-def test_sparse_pallas_ops_reject_hybrid_with_clear_error():
-    system, T = SYSTEMS["power-law-40"]
-    hy = compile_system_sparse(system, hub_threshold=2)
-    cfgs = jnp.zeros((2, system.num_neurons), jnp.int32)
-    with pytest.raises(NotImplementedError, match="hybrid ELL\\+COO"):
-        snp_step_sparse(cfgs, hy, max_branches=T)
-
-
-def test_sparse_pallas_backend_falls_back_on_hybrid_with_warning():
+def test_sparse_pallas_runs_hybrid_in_kernel_without_fallback():
     system, T = SYSTEMS["power-law-40"]
     be = get_backend("sparse_pallas")
     hy = be.compile(system, plan=SystemPlan(encoding="hybrid",
                                             hub_threshold=2))
-    assert hy.is_hybrid
+    assert hy.is_hybrid and hy.coo_bounds is not None
     rng = np.random.default_rng(1)
     cfgs = jnp.asarray(rng.integers(0, 4, size=(3, 40)), jnp.int32)
-    with pytest.warns(UserWarning, match="falling back"):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # any fallback warning fails
         got = be.expand(cfgs, hy, T)
     ref = get_backend("ref")
     _assert_same_step(ref.expand(cfgs, ref.compile(system), T), got)
 
 
+def test_sparse_pallas_rejects_hybrid_without_coo_metadata():
+    """A hybrid encoding that cannot lower (hand-built, no segment
+    metadata) must raise — never warn-and-downgrade (PR-4 contract)."""
+    system, T = SYSTEMS["power-law-40"]
+    hy = compile_system_sparse(system, hub_threshold=2)
+    cfgs = jnp.zeros((2, system.num_neurons), jnp.int32)
+    be = get_backend("sparse_pallas")
+    for stripped in (hy._replace(coo_bounds=None, hub_slot=None),
+                     hy._replace(hub_slot=None),
+                     hy._replace(coo_bounds=None)):
+        with pytest.raises(ValueError, match="coo_bounds"):
+            snp_step_sparse(cfgs, stripped, max_branches=T)
+        with pytest.raises(ValueError, match="cannot lower"):
+            be.expand(cfgs, stripped, T)
+
+
+def test_sparse_pallas_ops_serve_hybrid_bit_identically():
+    """The raw op now carries the COO stage: hybrid == jnp sparse oracle."""
+    system, T = SYSTEMS["power-law-40"]
+    hy = compile_system_sparse(system, hub_threshold=2)
+    rng = np.random.default_rng(5)
+    cfgs = jnp.asarray(rng.integers(0, 4, size=(4, 40)), jnp.int32)
+    out, valid, emis, ovf = snp_step_sparse(cfgs, hy, max_branches=T,
+                                            block_b=2, block_t=8)
+    ref = sparse_next_configs(cfgs, hy, T)
+
+    from types import SimpleNamespace
+    _assert_same_step(ref, SimpleNamespace(configs=out, valid=valid,
+                                           emissions=emis, overflow=ovf))
+
+
 def test_sparse_pallas_pure_ell_still_uses_the_kernel():
-    """The fallback must not trigger for pure-ELL encodings."""
+    """No warnings on pure-ELL encodings either."""
     system, T = SYSTEMS["ring-lattice-12"]
     be = get_backend("sparse_pallas")
     comp = be.compile(system)

@@ -112,9 +112,34 @@ def test_sharded_plan_validates_mesh_and_backend():
     auto = SystemPlan.for_system(heavy, num_shards=4)
     assert auto.encoding == "ell" and auto.num_shards == 4
     compile_sharded(heavy, auto)  # and that plan actually lowers
+    # a backend whose lowering registry lacks 'sharded' is refused; the
+    # built-in kernel backends all declare it (kernel-lowering layer)
     sc = compile_sharded(pi, SystemPlan(num_shards=1))
-    with pytest.raises(ValueError, match="not supported under a sharded"):
-        explore_distributed(sc, backend="pallas")
+
+    class NoShardBackend:
+        name = "no-shard"
+        supports_nd_batch = True
+        pad_multiple = 1
+        materializes_spiking = False
+
+        def supported_encodings(self):
+            return ("dense",)
+
+        def compile(self, system, plan=None):
+            raise NotImplementedError
+
+        def lower(self, compiled, plan):
+            return compiled
+
+        def expand(self, configs, comp, max_branches):
+            raise NotImplementedError
+
+    with pytest.raises(ValueError, match="sharded"):
+        explore_distributed(sc, backend=NoShardBackend())
+    from repro.core import supports_sharded
+    for name in ("ref", "pallas", "sparse", "sparse_pallas"):
+        from repro.core import get_backend
+        assert supports_sharded(get_backend(name))
     with pytest.raises(ValueError, match="ShardedCompiled"):
         from repro.core import compile_system
         explore_distributed(compile_system(pi),

@@ -1,25 +1,38 @@
 #!/usr/bin/env python3
 """Guard the benchmark surface: fail if ``BENCH_snp.json`` silently loses
-a tier or a backend key relative to a baseline.
+a tier or a backend key relative to a baseline, or if a tier's backend
+wall-times regress hard.
 
 Benchmarks are regenerated per PR (the CI smoke sweep overwrites the
 file), which makes it easy for a refactor to drop a whole tier — the rows
 just stop being emitted and nobody notices until the perf trajectory has
-a hole.  This check compares the *key structure* (never the timings):
+a hole.  Two checks against a baseline:
 
-* a **tier** is the first ``/``-segment of a row name (``snp_step``,
-  ``snp_step_large``, ``hybrid``, ``explore``, ``serve``, ...);
-* a **backend/mode key** is any later segment from the known vocabulary
-  (step-backend registry names, plan encodings, serve modes; ``meshN``
-  normalizes to ``mesh`` so the faked device count can vary).
+1. **Structure** — the *key structure* (never the timings) may only grow:
 
-Every (tier, key) pair present in the baseline must be present in the
-candidate; new pairs are always fine.  Timings may drift, coverage may
-only grow.
+   * a **tier** is the first ``/``-segment of a row name (``snp_step``,
+     ``snp_step_large``, ``hybrid``, ``hybrid_kernel``, ``explore``,
+     ``serve``, ...);
+   * a **backend/mode key** is any later segment from the known
+     vocabulary (step-backend registry names, plan encodings, serve
+     modes; ``meshN`` normalizes to ``mesh`` so the faked device count
+     can vary).
+
+   Every (tier, key) pair present in the baseline must be present in the
+   candidate; new pairs are always fine.
+
+2. **Regression** — for every (tier, key) pair, the median of the
+   per-row ratios ``candidate_us / baseline_us`` over the *shared row
+   names* must stay under ``--regress-factor`` (default 2.0).  Medians of
+   name-matched ratios, so quick sweeps (fewer rows, same names) compare
+   meaningfully; ``--no-regress-check`` is the escape hatch when the
+   candidate is a ``--quick`` run on very different hardware than the
+   committed baseline.
 
 Usage::
 
     python tools/check_bench.py [BASELINE] [CANDIDATE]
+        [--regress-factor 2.0] [--no-regress-check]
 
 Defaults: baseline = ``git show HEAD:BENCH_snp.json`` (so a working-tree
 regeneration is checked against the committed file), candidate =
@@ -29,8 +42,10 @@ smoke sweep and passes it explicitly.
 
 from __future__ import annotations
 
+import argparse
 import json
 import re
+import statistics
 import subprocess
 import sys
 
@@ -45,21 +60,51 @@ KNOWN_KEYS = {
 _MESH = re.compile(r"^mesh\d+$")
 
 
+def _name_keys(name: str) -> set:
+    """(tier,) and (tier, key) pairs of one row name."""
+    parts = str(name).split("/")
+    if not parts or not parts[0]:
+        return set()
+    tier = parts[0]
+    keys = {(tier,)}
+    for part in parts[1:]:
+        if _MESH.match(part):
+            keys.add((tier, "mesh"))
+        elif part in KNOWN_KEYS:
+            keys.add((tier, part))
+    return keys
+
+
 def row_keys(payload: dict) -> set:
     """(tier,) and (tier, key) pairs of every row name."""
     keys = set()
     for row in payload.get("rows", []):
-        parts = str(row.get("name", "")).split("/")
-        if not parts or not parts[0]:
-            continue
-        tier = parts[0]
-        keys.add((tier,))
-        for part in parts[1:]:
-            if _MESH.match(part):
-                keys.add((tier, "mesh"))
-            elif part in KNOWN_KEYS:
-                keys.add((tier, part))
+        keys |= _name_keys(row.get("name", ""))
     return keys
+
+
+def regression_failures(base: dict, cand: dict, factor: float) -> list:
+    """[(tier/key, median_ratio, n_rows)] where the name-matched median
+    ``cand/base`` timing ratio exceeds ``factor``."""
+    def times(payload):
+        return {str(r["name"]): float(r["us_per_call"])
+                for r in payload.get("rows", [])
+                if "name" in r and "us_per_call" in r}
+
+    tb, tc = times(base), times(cand)
+    ratios: dict = {}
+    for name in tb.keys() & tc.keys():
+        if tb[name] <= 0:
+            continue
+        for key in _name_keys(name):
+            if len(key) == 2:  # only (tier, backend/mode) pairs
+                ratios.setdefault(key, []).append(tc[name] / tb[name])
+    out = []
+    for key, rs in sorted(ratios.items()):
+        med = statistics.median(rs)
+        if med > factor:
+            out.append(("/".join(key), med, len(rs)))
+    return out
 
 
 def _load(path: str) -> dict:
@@ -73,14 +118,24 @@ def _load(path: str) -> dict:
 
 
 def main(argv: list) -> int:
-    baseline = argv[1] if len(argv) > 1 else "git:HEAD:BENCH_snp.json"
-    candidate = argv[2] if len(argv) > 2 else "BENCH_snp.json"
-    base = _load(baseline)
-    cand = _load(candidate)
+    ap = argparse.ArgumentParser(
+        description="Benchmark structure + regression guard")
+    ap.add_argument("baseline", nargs="?", default="git:HEAD:BENCH_snp.json")
+    ap.add_argument("candidate", nargs="?", default="BENCH_snp.json")
+    ap.add_argument("--regress-factor", type=float, default=2.0,
+                    help="fail when a (tier, backend) median timing ratio "
+                         "exceeds this (default 2.0)")
+    ap.add_argument("--no-regress-check", action="store_true",
+                    help="structure check only — escape hatch for --quick "
+                         "candidates measured on unlike hardware")
+    args = ap.parse_args(argv[1:])
+
+    base = _load(args.baseline)
+    cand = _load(args.candidate)
     missing = sorted(row_keys(base) - row_keys(cand))
     if missing:
-        print(f"check_bench: {candidate} lost {len(missing)} benchmark "
-              f"key(s) present in {baseline}:")
+        print(f"check_bench: {args.candidate} lost {len(missing)} benchmark "
+              f"key(s) present in {args.baseline}:")
         for key in missing:
             print("  - " + "/".join(key))
         print("Re-emit the missing tier(s) (benchmarks/bench_snp.py, "
@@ -88,8 +143,22 @@ def main(argv: list) -> int:
               "purpose, update the committed BENCH_snp.json in the same "
               "change.")
         return 1
+    if not args.no_regress_check:
+        regressed = regression_failures(base, cand, args.regress_factor)
+        if regressed:
+            print(f"check_bench: {args.candidate} regressed "
+                  f"{len(regressed)} tier/backend median(s) more than "
+                  f"{args.regress_factor:.1f}x vs {args.baseline}:")
+            for key, med, n in regressed:
+                print(f"  - {key}: median {med:.2f}x over {n} shared rows")
+            print("Investigate the slowdown, or pass --no-regress-check "
+                  "for a --quick candidate measured on unlike hardware.")
+            return 1
     print(f"check_bench: OK — {len(row_keys(cand))} keys cover the "
-          f"{len(row_keys(base))} baseline keys")
+          f"{len(row_keys(base))} baseline keys"
+          + ("" if args.no_regress_check else
+             f"; no tier/backend median regressed "
+             f">{args.regress_factor:.1f}x"))
     return 0
 
 
