@@ -36,6 +36,14 @@ Three tiers:
   §3 "Kernel lowering").  On CPU the kernel runs interpret mode, so rows
   are structure/correctness proxies, not TPU wall-times
   (EXPERIMENTS.md §Hybrid-kernel).
+* the **auto tier** replays the standard-sweep shapes and scores the
+  query planner (``SystemPlan.for_system(mode="auto")``,
+  ``repro.core.autotune``) against the fixed backends: per shape it
+  emits the planner's pick (``auto/auto/...``), the fastest fixed
+  backend (``auto/best/...``) and the slowest (``auto/worst/...``), all
+  measured in the same process so ``tools/check_bench.py`` can enforce
+  "auto stays within ``--auto-factor`` of best" without cross-hardware
+  noise (EXPERIMENTS.md §Autotune).
 
 Run as a module to emit ``BENCH_snp.json`` (step + tree rows):
 ``PYTHONPATH=src python -m benchmarks.bench_snp`` (``--quick`` for the
@@ -45,13 +53,16 @@ reduced CI smoke sweep).
 import argparse
 import functools
 import json
+import os
+import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.backend import PallasBackend, SparsePallasBackend, get_backend
+from repro.core.backend import (PallasBackend, SparsePallasBackend,
+                                get_backend, resolve_kernel)
 from repro.core.generators import (power_law, random_system, ring_lattice,
                                    scaled_pi, torus)
 from repro.core.plan import SystemPlan
@@ -215,6 +226,76 @@ def hybrid_kernel_rows(quick: bool = False):
     return out
 
 
+def auto_rows(quick: bool = False):
+    """Planner tier: what ``mode="auto"`` actually costs vs a fixed
+    backend choice, at the standard-sweep shapes.
+
+    Per shape, every eligible fixed backend is timed once; the planner's
+    pick is then resolved (``SystemPlan.for_system(workload=(B, T),
+    mode="auto")`` + ``resolve_kernel``) and — whenever it lands on an
+    already-measured fixed instance — *reuses* that measurement, so the
+    ``auto``/``best`` ratio is free of re-measurement noise and is
+    exactly 1.0 when the planner picks the per-shape winner.  The
+    planner runs against an empty scratch cache (``REPRO_AUTOTUNE_CACHE``
+    is pointed at a fresh temp file) so rows reflect the committed
+    seed → model → heuristic flow, not whatever a developer's personal
+    cache happens to hold."""
+    reps = 2 if quick else 5
+    rng = np.random.default_rng(7)
+    shapes = [(3, 2, 64, 16), (30, 2, 64, 16), (128, 2, 128, 32)]
+    if not quick:
+        shapes += [(512, 2, 128, 32), (2048, 2, 64, 32)]
+    scratch = os.path.join(tempfile.mkdtemp(prefix="repro-bench-"),
+                           "autotune.json")
+    prev = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    os.environ["REPRO_AUTOTUNE_CACHE"] = scratch
+    out = []
+    try:
+        for m, rpn, B, T in shapes:
+            system = (scaled_pi(m // 3) if m <= 30
+                      else random_system(m, rpn, min(0.2, 8 / m), seed=1))
+            eligible = [b for b in BACKENDS
+                        if m <= _MAX_M.get(b.name, 1 << 30)]
+            cfgs = None
+            fixed = {}
+            for backend in eligible:
+                comp = backend.compile(system)
+                if cfgs is None:
+                    cfgs = jnp.asarray(
+                        rng.integers(0, 4, size=(B, comp.num_neurons)),
+                        jnp.int32)
+                    shape = (f"m{comp.num_neurons}_n{comp.num_rules}"
+                             f"_B{B}_T{T}")
+                fixed[backend] = _time(_expand, cfgs, comp, T, backend,
+                                       reps=reps)
+            plan = SystemPlan.for_system(system, workload=(B, T),
+                                         mode="auto")
+            name = plan.backend or ("sparse" if plan.encoding in
+                                    ("ell", "hybrid") else "ref")
+            be = resolve_kernel(get_backend(name), plan)
+            if be in fixed:
+                us_auto = fixed[be]
+            else:
+                comp = be.compile(system, plan=plan)
+                us_auto = _time(_expand, cfgs, comp, T, be, reps=reps)
+            (b_best, us_best), (b_worst, us_worst) = (
+                min(fixed.items(), key=lambda kv: kv[1]),
+                max(fixed.items(), key=lambda kv: kv[1]))
+            out += [
+                (f"auto/auto/{shape}", us_auto,
+                 f"{be.name},{us_auto / us_best:.2f}x_best"),
+                (f"auto/best/{shape}", us_best, b_best.name),
+                (f"auto/worst/{shape}", us_worst,
+                 f"{b_worst.name},{us_worst / us_best:.2f}x_best"),
+            ]
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_AUTOTUNE_CACHE", None)
+        else:
+            os.environ["REPRO_AUTOTUNE_CACHE"] = prev
+    return out
+
+
 def main(path: str = "BENCH_snp.json", quick: bool = False) -> None:
     """Emit step- and tree-level rows for every backend as one JSON file."""
     from . import bench_tree
@@ -225,6 +306,7 @@ def main(path: str = "BENCH_snp.json", quick: bool = False) -> None:
             for name, us, derived in (rows(quick) + large_rows(quick)
                                       + hybrid_rows(quick)
                                       + hybrid_kernel_rows(quick)
+                                      + auto_rows(quick)
                                       + bench_tree.rows(quick))
         ],
     }

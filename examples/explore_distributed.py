@@ -19,14 +19,24 @@ Run with fake devices on CPU:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/explore_distributed.py \
             --plan neuron_axis --backend sparse_pallas
+
+    # let the query planner pick backend/encoding/blocks for the workload
+    # (DESIGN.md §3 "Planner & autotuner"): prints the chosen config and
+    # its predicted vs measured step cost, then explores with it
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/explore_distributed.py --plan auto
 """
 
 import argparse
 import time
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
-from repro.core import available_backends, compile_system, explore
+from repro.core import (SystemPlan, available_backends, compile_system,
+                        explore, get_backend, resolve_kernel)
+from repro.core import autotune
 from repro.core.distributed import explore_distributed
 from repro.core.generators import power_law, random_system, scaled_pi
 from repro.sharding import neuron_axis
@@ -50,11 +60,13 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--graph", choices=GRAPHS, default="random",
                     help="64-neuron comparison topology")
-    ap.add_argument("--plan", choices=("dense_rows", "neuron_axis"),
+    ap.add_argument("--plan", choices=("dense_rows", "neuron_axis", "auto"),
                     default="dense_rows",
                     help="dense_rows: hash-partitioned full config rows; "
                          "neuron_axis: per-device neuron slices + halo "
-                         "exchange (SystemPlan sharding)")
+                         "exchange (SystemPlan sharding); auto: let the "
+                         "query planner pick backend/encoding/blocks for "
+                         "the workload, then explore dense_rows with them")
     ap.add_argument("--backend", choices=available_backends(),
                     default="ref",
                     help="per-shard step backend (registry name); under "
@@ -76,13 +88,48 @@ def main():
           f"(overflow: {res.branch_overflow})")
 
     system, kw = _graph(args.graph, ndev)
-    if args.backend in ("pallas", "sparse_pallas"):
+    auto_plan = None
+    backend_name = args.backend
+    if args.plan == "auto":
+        # Plan at the workload the exploration below actually runs
+        # (B = global frontier cap, T = branch cap), then show the
+        # decision and how well the cost model predicted it.
+        auto_plan = SystemPlan.for_system(
+            system, workload=(kw["frontier_cap"], kw["max_branches"]),
+            mode="auto")
+        backend_name = auto_plan.backend or backend_name
+        k = auto_plan.kernel
+        print(f"\nplanner pick: backend={backend_name} "
+              f"encoding={auto_plan.encoding} "
+              f"hub_threshold={auto_plan.hub_threshold} "
+              f"blocks=(bb={k.block_b if k else None}, "
+              f"bt={k.block_t if k else None})")
+        B, T = min(kw["frontier_cap"], 256), kw["max_branches"]
+        sig = autotune.signature_of(system, workload=(B, T))
+        predicted = autotune.predict_us(sig, backend_name)
+        be = resolve_kernel(get_backend(backend_name), auto_plan)
+        comp = be.compile(system, plan=auto_plan)
+        cfgs = jnp.asarray(np.random.default_rng(0).integers(
+            0, 4, size=(B, system.num_neurons)), jnp.int32)
+
+        @jax.jit
+        def step(c):
+            out = be.expand(c, comp, max_branches=T)
+            return out.configs, out.valid
+        jax.block_until_ready(step(cfgs))            # compile + warmup
+        t0 = time.perf_counter()
+        jax.block_until_ready(step(cfgs))
+        measured = (time.perf_counter() - t0) * 1e6
+        pred = "n/a" if predicted is None else f"{predicted:.0f}us"
+        print(f"step cost at (B={B}, T={T}): predicted {pred}, "
+              f"measured {measured:.0f}us")
+    if backend_name in ("pallas", "sparse_pallas"):
         # Interpret-mode kernel emulation on CPU: keep the demo snappy
         # (on a TPU with interpret=False the full caps are the point).
         kw = {**kw, "frontier_cap": max(kw["frontier_cap"] // 16, 8),
               "visited_cap": max(kw["visited_cap"] // 16, 64),
               "max_steps": min(kw["max_steps"], 4)}
-    print(f"\n-- {system.name} ({args.plan}, backend={args.backend}) --")
+    print(f"\n-- {system.name} ({args.plan}, backend={backend_name}) --")
     t0 = time.time()
     if args.plan == "neuron_axis":
         # Global frontier bookkeeping, per-device neuron slices; the
@@ -91,6 +138,10 @@ def main():
                                   backend=args.backend,
                                   **{**kw, "frontier_cap": kw["frontier_cap"]
                                      * ndev})
+    elif args.plan == "auto":
+        # Hash-partitioned dense_rows exploration under the planner's
+        # chosen backend/encoding/blocks (the plan carries all three).
+        res = explore_distributed(system, plan=auto_plan, **kw)
     else:
         # Pass the raw system: each backend compiles its own encoding
         # (a pre-compiled dense object would break the sparse family).

@@ -27,19 +27,24 @@ Public API:
   ``explore_distributed`` (hash-partitioned BFS) and
   ``run_traces_distributed`` (data-parallel trace serving, DESIGN.md §4).
 * :mod:`repro.core.generators` — synthetic system families for scaling.
+* :mod:`repro.core.autotune` — the query planner behind
+  ``SystemPlan.for_system(mode="auto"|"measure")``: autotune cache
+  (seeded from the committed bench baseline) → analytic cost model →
+  degree heuristic, plus the inline ``(bb, bt)`` sweep.  Entry points
+  default to ``backend=None`` = "let the planner pick".
 """
 
 from .backend import (PallasBackend, RefBackend, SparseBackend,
                       SparsePallasBackend, StepBackend, available_backends,
                       get_backend, lower_with_backend, register_backend,
-                      supports_sharded)
+                      resolve_entry, resolve_kernel, supports_sharded)
 from .engine import (ExploreResult, emission_gaps, explore, run_trace,
                      run_traces, successor_set)
 from .matrix import (CompiledSNP, CompiledSparseSNP, compile_system,
                      compile_system_sparse, is_compiled)
-from .plan import (DenseShardArrays, ShardedCompiled, SystemPlan,
-                   auto_hub_threshold, compile_sharded, is_sharded,
-                   lower_shard_dense)
+from .plan import (DenseShardArrays, KernelConfig, ShardedCompiled,
+                   SystemPlan, auto_hub_threshold, compile_sharded,
+                   is_sharded, lower_shard_dense)
 from .semantics import (applicability, branch_info, next_configs,
                         sparse_next_configs, spiking_vectors)
 from .system import Rule, SNPSystem, paper_pi
@@ -48,7 +53,7 @@ __all__ = [
     "SNPSystem", "Rule", "paper_pi",
     "CompiledSNP", "CompiledSparseSNP", "compile_system",
     "compile_system_sparse", "is_compiled",
-    "SystemPlan", "ShardedCompiled", "DenseShardArrays",
+    "SystemPlan", "KernelConfig", "ShardedCompiled", "DenseShardArrays",
     "auto_hub_threshold", "compile_sharded", "is_sharded",
     "lower_shard_dense",
     "applicability", "branch_info", "next_configs", "sparse_next_configs",
@@ -56,7 +61,8 @@ __all__ = [
     "StepBackend", "RefBackend", "PallasBackend", "SparseBackend",
     "SparsePallasBackend",
     "register_backend", "get_backend", "available_backends",
-    "lower_with_backend", "supports_sharded",
+    "lower_with_backend", "resolve_entry", "resolve_kernel",
+    "supports_sharded",
     "explore", "ExploreResult", "successor_set", "emission_gaps",
     "run_trace", "run_traces",
 ]

@@ -56,6 +56,7 @@ Backends are frozen dataclasses: hashable, so they ride through
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Dict, Optional, Protocol, Tuple, Union, runtime_checkable
 
@@ -63,8 +64,8 @@ import jax.numpy as jnp
 
 from .matrix import (CompiledAny, CompiledSNP, CompiledSparseSNP,
                      compile_system, compile_system_sparse)
-from .plan import (ShardedCompiled, SystemPlan, compile_sharded,
-                   is_sharded, lower_shard_dense)
+from .plan import (KernelConfig, ShardedCompiled, SystemPlan,
+                   compile_sharded, is_sharded, lower_shard_dense)
 from .semantics import StepOut, next_configs, sparse_next_configs
 from .system import SNPSystem
 
@@ -79,6 +80,8 @@ __all__ = [
     "available_backends",
     "compile_with_plan",
     "lower_with_backend",
+    "resolve_entry",
+    "resolve_kernel",
     "supports_sharded",
 ]
 
@@ -220,8 +223,9 @@ def compile_with_plan(backend: "StepBackend", system: SNPSystem,
                       plan: Optional[SystemPlan]) -> CompiledAny:
     """``backend.compile`` with an optional plan, tolerating third-party
     backends that predate the plan parameter (they only ever see the
-    default plan, which is the identity)."""
-    if plan is None:
+    default plan, which is the identity — the entry points always carry a
+    plan now, so the identity check matters, not just ``None``)."""
+    if plan is None or plan == SystemPlan():
         return backend.compile(system)
     return backend.compile(system, plan=plan)
 
@@ -234,6 +238,83 @@ def lower_with_backend(backend: "StepBackend", compiled: CompiledLike,
     if lower is None:
         return compiled
     return lower(compiled, _plan_or_default(plan))
+
+
+def _check_kernel_plan(backend: "StepBackend", plan: SystemPlan) -> None:
+    """Lower-time validation of ``plan.kernel`` against the backend it
+    landed on — a block shape a backend cannot honor is a ``ValueError``
+    with a real message, never a silently ignored field."""
+    cfg = plan.kernel
+    if cfg is None:
+        return
+    if not hasattr(backend, "block_b"):
+        raise ValueError(
+            f"backend {backend.name!r} has no kernel block parameters; "
+            f"drop SystemPlan.kernel={cfg} or pick a Pallas-kernel "
+            "backend ('pallas', 'sparse_pallas')")
+    if cfg.block_n is not None and not hasattr(backend, "block_n"):
+        raise ValueError(
+            f"plan kernel sets block_n={cfg.block_n}, but backend "
+            f"{backend.name!r} keeps the whole neuron axis resident per "
+            "block (no rule-axis tiling); drop block_n — only the dense "
+            "'pallas' lowering tiles that axis")
+
+
+def resolve_kernel(backend: "StepBackend",
+                   plan: Optional[SystemPlan]) -> "StepBackend":
+    """Fold ``plan.kernel`` into ``backend``: a new (frozen, hashable)
+    instance carrying the plan's block shape, so every downstream cache
+    keyed on the backend — jit static args, ``distributed``'s lru-cached
+    shard functions — keys on the block configuration automatically.
+    Identity when the plan carries no kernel config; ``ValueError`` when
+    the backend cannot honor it (:func:`_check_kernel_plan`).  The
+    per-axis ``None`` fields keep the backend's own defaults, so the same
+    compiled encoding re-lowers at different block shapes without
+    rebuilding."""
+    plan = _plan_or_default(plan)
+    cfg = plan.kernel
+    if cfg is None:
+        return backend
+    _check_kernel_plan(backend, plan)
+    fields = {f: v for f in ("block_b", "block_t", "block_n")
+              if (v := getattr(cfg, f)) is not None and hasattr(backend, f)}
+    return dataclasses.replace(backend, **fields) if fields else backend
+
+
+def resolve_entry(system, backend: Optional["BackendLike"],
+                  plan: Optional[SystemPlan], *,
+                  workload: Optional[Tuple[int, int]] = None,
+                  ) -> Tuple["StepBackend", SystemPlan]:
+    """Shared backend/plan resolution for the engine entry points
+    (``explore``/``run_traces`` and the distributed pair).
+
+    When the caller names no backend and leaves the plan open
+    (``mode="auto"|"measure"``, no pinned backend/encoding/kernel), the
+    query planner decides: ``SystemPlan.for_system`` consults the
+    autotune cache, then the analytic cost model, then the static degree
+    heuristic (DESIGN.md §3 "Planner & autotuner"), with ``workload=(B,
+    T)`` the batch/branch shape the entry point is about to run.  A named
+    backend, a pinned plan, or ``mode="static"`` bypasses planning and
+    preserves the historical behavior (``"ref"`` for raw systems and
+    dense/sharded compileds, ``"sparse"`` for sparse ones).  Either way
+    the plan's kernel config is folded into the returned backend
+    (:func:`resolve_kernel`)."""
+    plan = _plan_or_default(plan)
+    if backend is None:
+        if (plan.backend is None and plan.mode in ("auto", "measure")
+                and plan.encoding == "auto" and plan.kernel is None
+                and isinstance(system, SNPSystem)):
+            plan = SystemPlan.for_system(
+                system, num_shards=plan.num_shards, workload=workload,
+                mode=plan.mode)
+        name = plan.backend
+        if name is None:
+            name = "sparse" if isinstance(system, CompiledSparseSNP) \
+                else "ref"
+        be = get_backend(name)
+    else:
+        be = get_backend(backend)
+    return resolve_kernel(be, plan), plan
 
 
 def supports_sharded(backend: "StepBackend") -> bool:
@@ -262,6 +343,7 @@ class RefBackend:
         return ("dense", "sharded")
 
     def lower(self, compiled: CompiledLike, plan: SystemPlan) -> CompiledLike:
+        _check_kernel_plan(self, plan)  # no kernel: plan.kernel is an error
         return compiled
 
     def compile(self, system: SNPSystem,
@@ -298,10 +380,21 @@ class PallasBackend:
     def pad_multiple(self) -> int:
         return self.block_b
 
+    @property
+    def kernel_config(self) -> KernelConfig:
+        """This instance's block shape as a plan-carriable config."""
+        return KernelConfig(block_b=self.block_b, block_t=self.block_t,
+                            block_n=self.block_n)
+
+    def with_kernel(self, kernel: KernelConfig) -> "PallasBackend":
+        """A re-blocked instance (``None`` fields keep this one's)."""
+        return resolve_kernel(self, SystemPlan(kernel=kernel))
+
     def supported_encodings(self) -> Tuple[str, ...]:
         return ("dense", "sharded")
 
     def lower(self, compiled: CompiledLike, plan: SystemPlan) -> CompiledLike:
+        _check_kernel_plan(self, plan)
         if is_sharded(compiled):
             return lower_shard_dense(compiled)
         return compiled
@@ -356,6 +449,7 @@ class SparseBackend:
         return ("ell", "hybrid", "sharded")
 
     def lower(self, compiled: CompiledLike, plan: SystemPlan) -> CompiledLike:
+        _check_kernel_plan(self, plan)  # no kernel: plan.kernel is an error
         return compiled
 
     def compile(self, system: SNPSystem,
@@ -396,10 +490,21 @@ class SparsePallasBackend:
     def pad_multiple(self) -> int:
         return self.block_b
 
+    @property
+    def kernel_config(self) -> KernelConfig:
+        """This instance's block shape as a plan-carriable config (no
+        ``block_n`` — the neuron axis is never tiled)."""
+        return KernelConfig(block_b=self.block_b, block_t=self.block_t)
+
+    def with_kernel(self, kernel: KernelConfig) -> "SparsePallasBackend":
+        """A re-blocked instance (``None`` fields keep this one's)."""
+        return resolve_kernel(self, SystemPlan(kernel=kernel))
+
     def supported_encodings(self) -> Tuple[str, ...]:
         return ("ell", "hybrid", "sharded")
 
     def lower(self, compiled: CompiledLike, plan: SystemPlan) -> CompiledLike:
+        _check_kernel_plan(self, plan)
         # A hybrid encoding the kernel cannot lower must raise here, at
         # lowering time — never a silent downgrade to the jnp path.  Only
         # hand-built encodings can trip this: compile_system_sparse always

@@ -66,7 +66,7 @@ except ImportError:                   # pragma: no cover - older jax
     from jax.experimental.shard_map import shard_map
 
 from .backend import (BackendLike, PallasBackend, SparsePallasBackend,
-                      compile_with_plan, get_backend, lower_with_backend,
+                      compile_with_plan, lower_with_backend, resolve_entry,
                       supports_sharded)
 from .engine import ExploreResult, _traces_scan
 from .hashing import SENTINEL, config_hash, zobrist_hash
@@ -516,7 +516,7 @@ def explore_distributed(
     max_branches: int = 32,
     send_cap: Optional[int] = None,   # per (src,dst) pair
     init: Optional[Sequence[int]] = None,
-    backend: BackendLike = "ref",
+    backend: Optional[BackendLike] = None,
     plan: Optional[SystemPlan] = None,
 ) -> ExploreResult:
     """Hash-partitioned multi-device BFS.  Semantics identical to
@@ -539,10 +539,21 @@ def explore_distributed(
     sparse math (``"ref"``/``"sparse"``) or the fused kernels consuming a
     shard's extended-index encoding (``"pallas"``/``"sparse_pallas"``,
     DESIGN.md §3 "Kernel lowering"); ``frontier_cap`` is then the global
-    frontier width."""
+    frontier width.
+
+    ``backend=None`` (the default) hands the choice to the query planner
+    under the default ``SystemPlan(mode="auto")``, exactly like the
+    single-device :func:`~repro.core.engine.explore` — the planner only
+    picks sharded-capable backends when ``plan.num_shards > 1``."""
     mesh, axis = _flat_mesh(mesh)
     ndev = mesh.devices.size
-    sharded_plan = plan is not None and plan.num_shards > 1
+    # resolve_entry also folds plan.kernel into the backend instance, and
+    # the backend instance is what keys every downstream executable cache
+    # (jit static args here, _traces_shard_fn's lru key below) — so two
+    # block configurations can never collide into one cached executable.
+    be, plan = resolve_entry(system, backend, plan,
+                             workload=(frontier_cap, max_branches))
+    sharded_plan = plan.num_shards > 1
     if is_sharded(system) or sharded_plan:
         if is_sharded(system):
             comp = system
@@ -558,7 +569,6 @@ def explore_distributed(
                 f"plan.num_shards ({comp.num_shards}) must equal the mesh "
                 f"device count ({ndev}); build the plan with "
                 "sharding.specs.neuron_axis(ndev)")
-        be = get_backend(backend)
         if not supports_sharded(be):
             raise ValueError(
                 f"backend {be.name!r} does not declare the 'sharded' "
@@ -570,7 +580,6 @@ def explore_distributed(
             comp, mesh, axis, be, max_steps=max_steps,
             frontier_cap=frontier_cap, visited_cap=visited_cap,
             max_branches=max_branches, init=init)
-    be = get_backend(backend)
     comp = lower_with_backend(be, system, plan) if is_compiled(system) \
         else compile_with_plan(be, system, plan)
     m = comp.num_neurons
@@ -660,7 +669,7 @@ def run_traces_distributed(
     system: SNPSystem | CompiledAny, *, steps: int,
     seeds: Sequence[int] | np.ndarray | jnp.ndarray,
     policy: str = "first", max_branches: int = 64,
-    backend: BackendLike = "ref",
+    backend: Optional[BackendLike] = None,
     mesh: Optional[Mesh] = None,
     plan: Optional[SystemPlan] = None,
 ):
@@ -685,12 +694,16 @@ def run_traces_distributed(
         raise ValueError("trace serving shards the batch axis, not the "
                          "neuron axis; plan.num_shards > 1 is only "
                          "consumed by explore_distributed")
-    be = get_backend(backend)
-    comp = lower_with_backend(be, system, plan) if is_compiled(system) \
-        else compile_with_plan(be, system, plan)
     seeds = np.asarray(seeds, np.uint32)
     if seeds.ndim != 1:
         raise ValueError(f"seeds must be 1-D, got shape {seeds.shape}")
+    # The planner decides when backend=None (default SystemPlan mode
+    # "auto"); _traces_shard_fn's lru cache keys on the resolved backend
+    # *instance*, so a plan kernel's block shape is part of the key.
+    be, plan = resolve_entry(system, backend, plan,
+                             workload=(int(seeds.shape[0]), max_branches))
+    comp = lower_with_backend(be, system, plan) if is_compiled(system) \
+        else compile_with_plan(be, system, plan)
     mesh, axis = _flat_mesh(mesh)
     ndev = mesh.devices.size
 

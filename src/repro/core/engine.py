@@ -50,7 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .backend import (BackendLike, compile_with_plan, get_backend,
-                      lower_with_backend)
+                      lower_with_backend, resolve_entry)
 from .hashing import SENTINEL, config_hash
 from .matrix import CompiledAny, is_compiled
 from .plan import SystemPlan
@@ -229,7 +229,7 @@ def explore(
     visited_cap: int = 4096,
     max_branches: int = 64,
     init: Optional[Sequence[int]] = None,
-    backend: BackendLike = "ref",
+    backend: Optional[BackendLike] = None,
     plan: Optional[SystemPlan] = None,
 ) -> ExploreResult:
     """BFS-explore the computation tree (paper Algorithm 1).
@@ -244,14 +244,21 @@ def explore(
     ``"pallas"``, ``"sparse"``, ``"sparse_pallas"``, or any registered
     :class:`~repro.core.backend.StepBackend` instance); an ``SNPSystem`` is
     lowered by the backend's own ``compile``; the archive is identical
-    across backends.
+    across backends.  ``backend=None`` (the default) hands the choice to
+    the query planner: the default ``SystemPlan(mode="auto")`` picks the
+    fastest known backend/encoding/block configuration for this workload
+    shape (autotune cache → cost model → heuristic — DESIGN.md §3
+    "Planner & autotuner"); pre-compiled inputs keep their historical
+    backend (``"ref"`` dense, ``"sparse"`` for sparse encodings).
 
     ``plan`` (:class:`~repro.core.plan.SystemPlan`) tunes the storage
     layout the backend lowers to (e.g. ``encoding="hybrid"`` for
-    heavy-tailed graphs); the default plan is bit-identical to passing
-    none.
+    heavy-tailed graphs) and the planning mode; the default plan is
+    bit-identical to passing none (all backends agree on valid entries).
     """
-    be = get_backend(backend)
+    # Branch work per step is bounded by frontier_cap × max_branches.
+    be, plan = resolve_entry(system, backend, plan,
+                             workload=(frontier_cap, max_branches))
     comp = _resolve_comp(system, be, plan)
     init_arr = None if init is None else jnp.asarray(init, jnp.int32)
     state = _init_state(comp, frontier_cap, visited_cap, init_arr)
@@ -396,7 +403,7 @@ def run_traces(
     system: SNPSystem | CompiledAny, *, steps: int,
     seeds: Sequence[int] | np.ndarray | jnp.ndarray,
     policy: str = "first", max_branches: int = 64,
-    backend: BackendLike = "ref",
+    backend: Optional[BackendLike] = None,
     plan: Optional[SystemPlan] = None,
 ):
     """Batched trajectory serving: B independent paths in one jitted scan.
@@ -406,14 +413,18 @@ def run_traces(
     ``run_trace(..., seed=seeds[b])`` with the same policy/backend — the
     batch dimension rides through the backend's ``expand`` (one transition
     per step for the whole batch), which is the serving-path hot loop.
+    ``backend=None`` (the default) hands the choice to the query planner
+    under the default ``SystemPlan(mode="auto")`` — see :func:`explore`;
+    traces are backend-independent, so the planner only moves wall-time.
     """
     if policy not in ("first", "random"):
         raise ValueError(f"unknown policy {policy!r}")
-    be = get_backend(backend)
-    comp = _resolve_comp(system, be, plan)
     seeds = jnp.asarray(seeds, jnp.uint32)
     if seeds.ndim != 1:
         raise ValueError(f"seeds must be 1-D, got shape {seeds.shape}")
+    be, plan = resolve_entry(system, backend, plan,
+                             workload=(int(seeds.shape[0]), max_branches))
+    comp = _resolve_comp(system, be, plan)
     keys = jax.vmap(jax.random.PRNGKey)(seeds)             # (B, 2)
     c0s = jnp.broadcast_to(comp.init_config, (seeds.shape[0],) +
                            comp.init_config.shape)
@@ -423,7 +434,7 @@ def run_traces(
 def run_trace(
     system: SNPSystem | CompiledAny, *, steps: int,
     policy: str = "first", seed: int = 0, max_branches: int = 64,
-    backend: BackendLike = "ref",
+    backend: Optional[BackendLike] = None,
     plan: Optional[SystemPlan] = None,
 ):
     """Single-path simulation (deterministic or uniformly random branch).

@@ -44,6 +44,7 @@ import numpy as np
 from .system import SNPSystem
 
 __all__ = [
+    "KernelConfig",
     "SystemPlan",
     "ShardArrays",
     "DenseShardArrays",
@@ -55,11 +56,66 @@ __all__ = [
 ]
 
 _ENCODINGS = ("auto", "dense", "ell", "hybrid")
+_MODES = ("auto", "measure", "static")
 
 # Dummy padding rules (sharded lowering) use this regex base: applicability
 # requires spikes == 2^24, which the engine's spike-count contract
 # (DESIGN.md §2, counts < 2^24) makes unreachable.
 _NEVER_BASE = 1 << 24
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """Grid/block shape for the fused Pallas lowerings, lifted out of the
+    kernel wrappers so a plan can carry it (DESIGN.md §3 "Planner &
+    autotuner").
+
+    * ``block_b`` / ``block_t`` — batch / branch tile; both kernels grid
+      over ``(B/bb, T/bt)``.
+    * ``block_n`` — rule-axis tile of the **dense** kernel only (the
+      sparse kernel keeps the whole neuron axis resident per block);
+      setting it for a sparse lowering is a lower-time error.
+
+    ``None`` fields mean "keep that axis's wrapper default".  Frozen and
+    hashable, so a config rides ``jit(static_argnames=...)`` and keys the
+    per-backend compile caches (two block shapes never collide into one
+    cached executable)."""
+
+    block_b: Optional[int] = None
+    block_t: Optional[int] = None
+    block_n: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        for field in ("block_b", "block_t", "block_n"):
+            v = getattr(self, field)
+            if v is None:
+                continue
+            if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+                raise ValueError(
+                    f"KernelConfig.{field} must be a positive int or "
+                    f"None, got {v!r}")
+
+    @staticmethod
+    def dense_default() -> "KernelConfig":
+        """The dense wrapper defaults (``ops.snp_step``)."""
+        return KernelConfig(block_b=8, block_t=128, block_n=512)
+
+    @staticmethod
+    def sparse_default() -> "KernelConfig":
+        """The sparse wrapper defaults (``sparse_ops.snp_step_sparse``);
+        no ``block_n`` — the neuron axis is never tiled."""
+        return KernelConfig(block_b=8, block_t=32)
+
+    def merged(self, *, block_b: Optional[int] = None,
+               block_t: Optional[int] = None,
+               block_n: Optional[int] = None) -> "KernelConfig":
+        """This config with explicit per-axis overrides folded in
+        (explicit kwarg > this config's field)."""
+        return KernelConfig(
+            block_b=self.block_b if block_b is None else block_b,
+            block_t=self.block_t if block_t is None else block_t,
+            block_n=self.block_n if block_n is None else block_n,
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +130,16 @@ class SystemPlan:
     * ``num_shards`` — neuron-axis partition count; ``> 1`` lowers through
       :func:`compile_sharded` and is only consumed by
       ``explore_distributed`` (one shard per device).
+    * ``mode`` — how :func:`for_system` (and the entry points that call it
+      when the caller names no backend) decide: ``"auto"`` consults the
+      autotune cache then the analytic cost model, ``"measure"`` runs the
+      autotuner inline, ``"static"`` keeps the degree heuristic
+      (:mod:`repro.core.autotune`, DESIGN.md §3 "Planner & autotuner").
+    * ``backend`` — step-backend registry name the planner picked (or the
+      caller pinned); ``None`` leaves the choice to the call site.
+    * ``kernel`` — optional :class:`KernelConfig` block shape for Pallas
+      backends; validated at lower time (``resolve_kernel``) against the
+      backend it lands on.
 
     Frozen and hashable, so a plan can ride through
     ``jit(static_argnames=...)`` with the backend.
@@ -82,6 +148,9 @@ class SystemPlan:
     encoding: str = "auto"
     hub_threshold: Optional[int] = None
     num_shards: int = 1
+    mode: str = "auto"
+    backend: Optional[str] = None
+    kernel: Optional[KernelConfig] = None
 
     def __post_init__(self) -> None:
         if self.encoding not in _ENCODINGS:
@@ -93,6 +162,14 @@ class SystemPlan:
         if self.num_shards < 1:
             raise ValueError(
                 f"num_shards must be >= 1, got {self.num_shards}")
+        if self.mode not in _MODES:
+            raise ValueError(
+                f"unknown mode {self.mode!r}; one of {_MODES}")
+        if self.kernel is not None and not isinstance(self.kernel,
+                                                      KernelConfig):
+            raise ValueError(
+                f"plan kernel must be a KernelConfig or None, "
+                f"got {type(self.kernel).__name__}")
 
     @staticmethod
     def default() -> "SystemPlan":
@@ -101,18 +178,42 @@ class SystemPlan:
 
     @staticmethod
     def for_system(system: SNPSystem, *,
-                   num_shards: int = 1) -> "SystemPlan":
-        """Concrete plan from the degree histogram (module docstring
-        rules): hybrid iff the max in-degree is heavy-tailed relative to
-        the mean, else plain ELL.  With ``num_shards > 1`` the encoding
-        stays ELL regardless — the per-shard lowering is ELL-only
-        (:func:`compile_sharded` refuses the hybrid combination)."""
+                   num_shards: int = 1,
+                   workload: Optional[Tuple[int, int]] = None,
+                   mode: str = "static") -> "SystemPlan":
+        """Concrete plan for ``system``.
+
+        ``mode="static"`` (the default) keeps the degree heuristic
+        (module docstring rules): hybrid iff the max in-degree is
+        heavy-tailed relative to the mean, else plain ELL.  With
+        ``num_shards > 1`` the encoding stays ELL regardless — the
+        per-shard lowering is ELL-only (:func:`compile_sharded` refuses
+        the hybrid combination).
+
+        ``mode="auto"`` consults the autotune cache (seeded from the
+        committed bench baseline) and falls back to the analytic cost
+        model; ``mode="measure"`` times candidate configurations inline
+        and persists the winner (:mod:`repro.core.autotune`).  Both fall
+        through to the static heuristic when the planner has nothing to
+        say.  ``workload=(B, T)`` is the batch/branch shape the plan will
+        serve — the dense/sparse crossover depends on it, not just on the
+        degree histogram."""
+        if mode not in _MODES:
+            raise ValueError(f"unknown mode {mode!r}; one of {_MODES}")
+        if mode != "static":
+            from . import autotune  # lazy: autotune imports backend
+            plan = autotune.plan_for(system, num_shards=num_shards,
+                                     workload=workload,
+                                     measure=(mode == "measure"))
+            if plan is not None:
+                return plan
         in_deg = _in_degrees(system)
         h = auto_hub_threshold(in_deg)
         kin = int(in_deg.max()) if in_deg.size else 0
         if num_shards == 1 and kin > 2 * h:
-            return SystemPlan(encoding="hybrid", hub_threshold=h)
-        return SystemPlan(encoding="ell", num_shards=num_shards)
+            return SystemPlan(encoding="hybrid", hub_threshold=h,
+                              mode=mode)
+        return SystemPlan(encoding="ell", num_shards=num_shards, mode=mode)
 
     def resolved_hub_threshold(self, system: SNPSystem) -> Optional[int]:
         """The hub threshold ``compile_system_sparse`` should cap ELL rows

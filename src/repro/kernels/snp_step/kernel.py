@@ -143,12 +143,15 @@ def snp_step_pallas(
     hadj: jnp.ndarray = None,   # (H, m) int8 — halo 0/1 in-adjacency
     *,
     max_branches: int,
-    block_b: int = 8,
-    block_t: int = 128,
-    block_n: int = 512,
+    block_b: int,
+    block_t: int,
+    block_n: int,
     interpret: bool = True,
 ):
-    """Raw tiled kernel call.  Use :mod:`..ops` for the padded public API.
+    """Raw tiled kernel call.  Use :mod:`..ops` for the padded public API
+    — the block shape is *required* here: the grid/tile choice belongs to
+    the caller (ultimately a :class:`~repro.core.plan.KernelConfig` on
+    the plan, DESIGN.md §3 "Planner & autotuner"), not the kernel.
     ``halo``/``hadj`` select the shard body (module docstring)."""
     B, m = configs.shape
     n = rank.shape[1]

@@ -18,11 +18,13 @@ On CPU the kernel runs in interpret mode; on TPU pass ``interpret=False``.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.matrix import CompiledSNP
+from repro.core.plan import KernelConfig
 from repro.core.semantics import branch_info
 
 from .kernel import snp_step_pallas
@@ -32,6 +34,19 @@ __all__ = ["snp_step", "snp_step_dense_shard"]
 
 def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
+
+
+def _resolve_blocks(kernel: Optional[KernelConfig], block_b, block_t,
+                    block_n):
+    """The effective dense block shape: explicit per-axis kwarg >
+    ``kernel`` config field > :meth:`KernelConfig.dense_default`.  Both
+    wrappers resolve through here so precedence can't diverge."""
+    base = KernelConfig.dense_default() if kernel is None else \
+        KernelConfig.dense_default().merged(
+            block_b=kernel.block_b, block_t=kernel.block_t,
+            block_n=kernel.block_n)
+    cfg = base.merged(block_b=block_b, block_t=block_t, block_n=block_n)
+    return cfg.block_b, cfg.block_t, cfg.block_n
 
 
 def _pad(x, rows=None, cols=None, value=0):
@@ -49,20 +64,26 @@ def _pad(x, rows=None, cols=None, value=0):
 @functools.partial(
     jax.jit,
     static_argnames=("max_branches", "block_b", "block_t", "block_n",
-                     "interpret"),
+                     "kernel", "interpret"),
 )
 def snp_step(
     configs: jnp.ndarray,   # (B, m) int32
     comp: CompiledSNP,
     *,
     max_branches: int,
-    block_b: int = 8,
-    block_t: int = 128,
-    block_n: int = 512,
+    block_b: Optional[int] = None,
+    block_t: Optional[int] = None,
+    block_n: Optional[int] = None,
+    kernel: Optional[KernelConfig] = None,
     interpret: bool = True,
 ):
     """Fused successor expansion: returns (successors (B,T,m) int32,
     valid (B,T) bool, emissions (B,T) int32, overflow (B,) bool).
+
+    The block shape comes from ``kernel`` (a hashable
+    :class:`~repro.core.plan.KernelConfig`, usually carried by a
+    ``SystemPlan``), overridable per axis with the explicit kwargs;
+    unset axes fall back to :meth:`KernelConfig.dense_default`.
 
     Bit-identical to :func:`repro.kernels.snp_step.ref.snp_step_ref` for all
     spike counts < 2^24 (f32-exact integer range).
@@ -71,6 +92,8 @@ def snp_step(
     n = comp.num_rules
     T = max_branches
 
+    block_b, block_t, block_n = _resolve_blocks(
+        kernel, block_b, block_t, block_n)
     block_b = min(block_b, max(B, 1))
     block_t = min(block_t, T)
     block_n = min(block_n, _round_up(n, 128))
@@ -117,9 +140,10 @@ def snp_step_dense_shard(
     halo: jnp.ndarray,      # (B, T, H) int32 — received remote produce
     *,
     max_branches: int,
-    block_b: int = 8,
-    block_t: int = 128,
-    block_n: int = 512,
+    block_b: Optional[int] = None,
+    block_t: Optional[int] = None,
+    block_n: Optional[int] = None,
+    kernel: Optional[KernelConfig] = None,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """One shard's candidate slices ``(B, T, mloc)`` through the fused
@@ -131,6 +155,8 @@ def snp_step_dense_shard(
     B, m = configs.shape
     n = rank.shape[1]
     T = max_branches
+    block_b, block_t, block_n = _resolve_blocks(
+        kernel, block_b, block_t, block_n)
     block_b = min(block_b, max(B, 1))
     block_t = min(block_t, T)
     block_n = min(block_n, _round_up(n, 128))

@@ -168,14 +168,17 @@ def snp_step_sparse_pallas(
     halo: jnp.ndarray = None,        # (B, T, H) int32 — sharded halo produce
     *,
     max_branches: int,
-    block_b: int = 8,
-    block_t: int = 32,
+    block_b: int,
+    block_t: int,
     interpret: bool = True,
 ):
     """Raw tiled kernel call.  Use :mod:`..sparse_ops` for the padded
-    public API.  ``coo_*``/``hub_slot`` select the COO segment-sum stage
-    (hybrid plans), ``halo`` the extended-index shard stage — both default
-    to the pure-ELL body."""
+    public API — the block shape is *required* here: the grid/tile choice
+    belongs to the caller (ultimately a
+    :class:`~repro.core.plan.KernelConfig` on the plan, DESIGN.md §3
+    "Planner & autotuner"), not the kernel.  ``coo_*``/``hub_slot``
+    select the COO segment-sum stage (hybrid plans), ``halo`` the
+    extended-index shard stage — both default to the pure-ELL body."""
     B, m = configs.shape
     R = tab.shape[2]
     Kin = in_idx.shape[1]

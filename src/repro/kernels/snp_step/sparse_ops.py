@@ -27,11 +27,13 @@ On CPU the kernels run in interpret mode; on TPU pass ``interpret=False``.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.matrix import CompiledSparseSNP
+from repro.core.plan import KernelConfig
 from repro.core.semantics import packed_rule_table, sparse_branch_info
 
 from .sparse_kernel import snp_step_sparse_pallas
@@ -41,6 +43,24 @@ __all__ = ["snp_step_sparse", "snp_step_sparse_shard"]
 
 def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
+
+
+def _resolve_blocks(kernel: Optional[KernelConfig], block_b, block_t):
+    """The effective sparse block shape: explicit per-axis kwarg >
+    ``kernel`` config field > :meth:`KernelConfig.sparse_default`.  A
+    config asking for neuron-axis tiling (``block_n``) is a clear error —
+    this kernel keeps the whole neuron axis resident per block."""
+    if kernel is not None and kernel.block_n is not None:
+        raise ValueError(
+            f"sparse kernel config sets block_n={kernel.block_n}, but the "
+            "sparse lowering keeps the whole neuron axis resident per "
+            "block (grid (B/bb, T/bt)); drop block_n — only the dense "
+            "kernel tiles that axis")
+    base = KernelConfig.sparse_default() if kernel is None else \
+        KernelConfig.sparse_default().merged(
+            block_b=kernel.block_b, block_t=kernel.block_t)
+    cfg = base.merged(block_b=block_b, block_t=block_t)
+    return cfg.block_b, cfg.block_t
 
 
 def _pad_bt(x, rows, branches=None, value=0):
@@ -56,19 +76,26 @@ def _pad_bt(x, rows, branches=None, value=0):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("max_branches", "block_b", "block_t", "interpret"),
+    static_argnames=("max_branches", "block_b", "block_t", "kernel",
+                     "interpret"),
 )
 def snp_step_sparse(
     configs: jnp.ndarray,   # (B, m) int32
     comp: CompiledSparseSNP,
     *,
     max_branches: int,
-    block_b: int = 8,
-    block_t: int = 32,
+    block_b: Optional[int] = None,
+    block_t: Optional[int] = None,
+    kernel: Optional[KernelConfig] = None,
     interpret: bool = True,
 ):
     """Fused sparse successor expansion: returns (successors (B,T,m) int32,
     valid (B,T) bool, emissions (B,T) int32, overflow (B,) bool).
+
+    The block shape comes from ``kernel`` (a hashable
+    :class:`~repro.core.plan.KernelConfig`, usually carried by a
+    ``SystemPlan``), overridable per axis with the explicit kwargs;
+    unset axes fall back to :meth:`KernelConfig.sparse_default`.
 
     Bit-identical to :func:`repro.core.semantics.sparse_next_configs` (and
     hence to the dense oracle on valid entries for spike counts < 2^24),
@@ -76,6 +103,7 @@ def snp_step_sparse(
     """
     B, m = configs.shape
     T = max_branches
+    block_b, block_t = _resolve_blocks(kernel, block_b, block_t)
 
     if comp.coo_src.shape[0] and (comp.coo_bounds is None
                                   or comp.hub_slot is None):
@@ -130,8 +158,9 @@ def snp_step_sparse_shard(
     halo: jnp.ndarray,      # (B, T, H) int32 — received remote produce
     *,
     max_branches: int,
-    block_b: int = 8,
-    block_t: int = 32,
+    block_b: Optional[int] = None,
+    block_t: Optional[int] = None,
+    kernel: Optional[KernelConfig] = None,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """One shard's candidate slices ``(B, T, mloc)`` through the fused
@@ -142,6 +171,7 @@ def snp_step_sparse_shard(
     B, mloc = configs.shape
     T = max_branches
     H = halo.shape[-1]
+    block_b, block_t = _resolve_blocks(kernel, block_b, block_t)
     block_b = min(block_b, max(B, 1))
     block_t = min(block_t, T)
     Bp, Tp = _round_up(B, block_b), _round_up(T, block_t)

@@ -29,10 +29,16 @@ a hole.  Two checks against a baseline:
    candidate is a ``--quick`` run on very different hardware than the
    committed baseline.
 
+3. **Planner** — within the candidate alone, every planner-tier
+   ``auto/auto/<shape>`` row must stay under ``--auto-factor`` (default
+   1.2) × the same run's ``auto/best/<shape>`` row.  Both rows are
+   measured in one bench process, so this check is hardware-independent
+   and runs even under ``--no-regress-check``.
+
 Usage::
 
     python tools/check_bench.py [BASELINE] [CANDIDATE]
-        [--regress-factor 2.0] [--no-regress-check]
+        [--regress-factor 2.0] [--no-regress-check] [--auto-factor 1.2]
 
 Defaults: baseline = ``git show HEAD:BENCH_snp.json`` (so a working-tree
 regeneration is checked against the committed file), candidate =
@@ -56,6 +62,8 @@ KNOWN_KEYS = {
     "ell", "hybrid",
     # serve modes ("meshN" is normalized separately)
     "sync", "async",
+    # planner tier row kinds (auto tier)
+    "auto", "best", "worst",
 }
 _MESH = re.compile(r"^mesh\d+$")
 
@@ -107,6 +115,28 @@ def regression_failures(base: dict, cand: dict, factor: float) -> list:
     return out
 
 
+def auto_failures(cand: dict, factor: float) -> list:
+    """[(shape, ratio)] where the planner tier's ``auto/auto/<shape>``
+    row exceeds ``factor`` × the same run's ``auto/best/<shape>`` row.
+
+    Both rows come from the *candidate* run (the bench harness measures
+    them in one process), so this check is internal consistency — "the
+    planner's pick stays within ``factor`` of the best fixed backend" —
+    and is meaningful regardless of what hardware the baseline was
+    measured on."""
+    auto, best = {}, {}
+    for row in cand.get("rows", []):
+        parts = str(row.get("name", "")).split("/")
+        if len(parts) == 3 and parts[0] == "auto":
+            {"auto": auto, "best": best}.get(parts[1], {})[parts[2]] = \
+                float(row["us_per_call"])
+    out = []
+    for shape in sorted(auto.keys() & best.keys()):
+        if best[shape] > 0 and auto[shape] / best[shape] > factor:
+            out.append((shape, auto[shape] / best[shape]))
+    return out
+
+
 def _load(path: str) -> dict:
     if path.startswith("git:"):
         out = subprocess.run(
@@ -128,6 +158,11 @@ def main(argv: list) -> int:
     ap.add_argument("--no-regress-check", action="store_true",
                     help="structure check only — escape hatch for --quick "
                          "candidates measured on unlike hardware")
+    ap.add_argument("--auto-factor", type=float, default=1.2,
+                    help="fail when the planner tier's auto pick exceeds "
+                         "this factor of the same run's best fixed backend "
+                         "(default 1.2; same-run rows, so this check runs "
+                         "even with --no-regress-check)")
     args = ap.parse_args(argv[1:])
 
     base = _load(args.baseline)
@@ -154,6 +189,17 @@ def main(argv: list) -> int:
             print("Investigate the slowdown, or pass --no-regress-check "
                   "for a --quick candidate measured on unlike hardware.")
             return 1
+    slow_auto = auto_failures(cand, args.auto_factor)
+    if slow_auto:
+        print(f"check_bench: the query planner's auto pick is more than "
+              f"{args.auto_factor:.2f}x slower than the best fixed backend "
+              f"at {len(slow_auto)} shape(s) (same-run rows):")
+        for shape, ratio in slow_auto:
+            print(f"  - {shape}: auto {ratio:.2f}x best")
+        print("The planner is mis-picking: refresh its seeds by "
+              "committing the regenerated BENCH_snp.json, or fix the "
+              "cost model in src/repro/core/autotune.py.")
+        return 1
     print(f"check_bench: OK — {len(row_keys(cand))} keys cover the "
           f"{len(row_keys(base))} baseline keys"
           + ("" if args.no_regress_check else
