@@ -37,9 +37,13 @@ Public API:
 from .backend import (PallasBackend, RefBackend, SparseBackend,
                       SparsePallasBackend, StepBackend, available_backends,
                       get_backend, lower_with_backend, register_backend,
-                      resolve_entry, resolve_kernel, supports_sharded)
-from .engine import (ExploreResult, emission_gaps, explore, run_trace,
-                     run_traces, successor_set)
+                      resolve_entry, resolve_entry_info, resolve_kernel,
+                      supports_sharded)
+from .engine import (ExploreResult, TraceOut, emission_gaps, explore,
+                     run_trace, run_traces, successor_set)
+from .failover import (DEGRADE_ORDER, DegradeEvent, add_degrade_listener,
+                       degrade_candidates, remove_degrade_listener,
+                       run_with_failover)
 from .matrix import (CompiledSNP, CompiledSparseSNP, compile_system,
                      compile_system_sparse, is_compiled)
 from .plan import (DenseShardArrays, KernelConfig, ShardedCompiled,
@@ -61,8 +65,10 @@ __all__ = [
     "StepBackend", "RefBackend", "PallasBackend", "SparseBackend",
     "SparsePallasBackend",
     "register_backend", "get_backend", "available_backends",
-    "lower_with_backend", "resolve_entry", "resolve_kernel",
-    "supports_sharded",
-    "explore", "ExploreResult", "successor_set", "emission_gaps",
-    "run_trace", "run_traces",
+    "lower_with_backend", "resolve_entry", "resolve_entry_info",
+    "resolve_kernel", "supports_sharded",
+    "DEGRADE_ORDER", "DegradeEvent", "add_degrade_listener",
+    "degrade_candidates", "remove_degrade_listener", "run_with_failover",
+    "explore", "ExploreResult", "TraceOut", "successor_set",
+    "emission_gaps", "run_trace", "run_traces",
 ]

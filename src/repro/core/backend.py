@@ -81,6 +81,7 @@ __all__ = [
     "compile_with_plan",
     "lower_with_backend",
     "resolve_entry",
+    "resolve_entry_info",
     "resolve_kernel",
     "supports_sharded",
 ]
@@ -281,6 +282,36 @@ def resolve_kernel(backend: "StepBackend",
     return dataclasses.replace(backend, **fields) if fields else backend
 
 
+def resolve_entry_info(system, backend: Optional["BackendLike"],
+                       plan: Optional[SystemPlan], *,
+                       workload: Optional[Tuple[int, int]] = None,
+                       ) -> Tuple["StepBackend", SystemPlan, bool]:
+    """:func:`resolve_entry` plus *who chose*: the third element is True
+    exactly when the query planner picked the backend (so a failure may
+    gracefully degrade down :data:`repro.core.failover.DEGRADE_ORDER`)
+    and False when the caller pinned it by name or plan (pinning is a
+    contract — a pinned backend's failure raises)."""
+    plan = _plan_or_default(plan)
+    planned = False
+    if backend is None:
+        if (plan.backend is None and plan.mode in ("auto", "measure")
+                and plan.encoding == "auto" and plan.kernel is None
+                and isinstance(system, SNPSystem)):
+            plan = SystemPlan.for_system(
+                system, num_shards=plan.num_shards, workload=workload,
+                mode=plan.mode)
+            planned = True
+        name = plan.backend
+        if name is None:
+            name = "sparse" if isinstance(system, CompiledSparseSNP) \
+                else "ref"
+            planned = False
+        be = get_backend(name)
+    else:
+        be = get_backend(backend)
+    return resolve_kernel(be, plan), plan, planned
+
+
 def resolve_entry(system, backend: Optional["BackendLike"],
                   plan: Optional[SystemPlan], *,
                   workload: Optional[Tuple[int, int]] = None,
@@ -299,22 +330,9 @@ def resolve_entry(system, backend: Optional["BackendLike"],
     dense/sharded compileds, ``"sparse"`` for sparse ones).  Either way
     the plan's kernel config is folded into the returned backend
     (:func:`resolve_kernel`)."""
-    plan = _plan_or_default(plan)
-    if backend is None:
-        if (plan.backend is None and plan.mode in ("auto", "measure")
-                and plan.encoding == "auto" and plan.kernel is None
-                and isinstance(system, SNPSystem)):
-            plan = SystemPlan.for_system(
-                system, num_shards=plan.num_shards, workload=workload,
-                mode=plan.mode)
-        name = plan.backend
-        if name is None:
-            name = "sparse" if isinstance(system, CompiledSparseSNP) \
-                else "ref"
-        be = get_backend(name)
-    else:
-        be = get_backend(backend)
-    return resolve_kernel(be, plan), plan
+    be, plan, _ = resolve_entry_info(system, backend, plan,
+                                     workload=workload)
+    return be, plan
 
 
 def supports_sharded(backend: "StepBackend") -> bool:

@@ -67,8 +67,9 @@ except ImportError:                   # pragma: no cover - older jax
 
 from .backend import (BackendLike, PallasBackend, SparsePallasBackend,
                       compile_with_plan, lower_with_backend, resolve_entry,
-                      supports_sharded)
-from .engine import ExploreResult, _traces_scan
+                      resolve_entry_info, supports_sharded)
+from .engine import ExploreResult, TraceOut, _traces_scan
+from .failover import run_with_failover
 from .hashing import SENTINEL, config_hash, zobrist_hash
 from .matrix import CompiledAny, is_compiled
 from .plan import (DenseShardArrays, ShardArrays, ShardedCompiled,
@@ -78,6 +79,38 @@ from .semantics import (_decode_digits, _fired_packed, packed_rule_table,
 from .system import SNPSystem
 
 __all__ = ["explore_distributed", "run_traces_distributed"]
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint/resume for the host-driven per-step loops.  Both exploration
+# schemes advance device state one BFS level per host iteration, which is
+# a natural checkpoint boundary: the state tuple is snapshotted every
+# ``checkpoint_every`` levels through the atomic-rename machinery and a
+# re-invoked run restores the latest snapshot (re-sharded onto the live
+# mesh via each template leaf's sharding) and continues bit-identically.
+# ---------------------------------------------------------------------------
+
+
+def _restore_loop_state(checkpoint_dir, state: tuple):
+    """(state, start_step): the latest snapshot re-device_put with the
+    live state's shardings, or the fresh state at step 0."""
+    from repro.checkpoint.checkpoint import latest_step, restore_checkpoint
+    if checkpoint_dir is None:
+        return state, 0
+    last = latest_step(checkpoint_dir)
+    if last is None:
+        return state, 0
+    host = jax.tree.map(np.asarray, tuple(state))
+    restored, step, _ = restore_checkpoint(checkpoint_dir, host, step=last)
+    put = tuple(jax.device_put(arr, ref.sharding)
+                for arr, ref in zip(restored, state))
+    return put, step
+
+
+def _save_loop_state(checkpoint_dir, step: int, state: tuple) -> None:
+    from repro.checkpoint.checkpoint import save_checkpoint
+    save_checkpoint(checkpoint_dir, step, jax.tree.map(np.asarray,
+                                                       tuple(state)))
 
 
 def _flat_mesh(mesh: Optional[Mesh]) -> Tuple[Mesh, str]:
@@ -388,6 +421,8 @@ def _explore_neuron_sharded(
     comp: ShardedCompiled, mesh: Mesh, axis: str, backend, *,
     max_steps: int, frontier_cap: int, visited_cap: int, max_branches: int,
     init: Optional[Sequence[int]] = None,
+    checkpoint_dir: Optional[str] = None, checkpoint_every: int = 32,
+    fault_injector=None,
 ) -> ExploreResult:
     """Host driver for the neuron-axis-sharded BFS.  ``frontier_cap`` is
     the *global* frontier width (its membership bookkeeping is replicated;
@@ -476,15 +511,19 @@ def _explore_neuron_sharded(
             check_rep=False,
         ))
 
-    steps = 0
+    state, steps = _restore_loop_state(checkpoint_dir, state)
     drained = False
-    for _ in range(max_steps):
+    for _ in range(steps, max_steps):
+        if fault_injector is not None:
+            fault_injector.on_device_call()
         (f, fv, hi, lo, arc, an, fl, total_new) = step_fn(*lead, *state)
         state = (f, fv, hi, lo, arc, an, fl)
         steps += 1
         if int(total_new) == 0:
             drained = True
             break
+        if checkpoint_dir is not None and steps % checkpoint_every == 0:
+            _save_loop_state(checkpoint_dir, steps, state)
 
     _, _, _, _, archive, archive_n, flags = state
     n = int(archive_n)
@@ -518,10 +557,20 @@ def explore_distributed(
     init: Optional[Sequence[int]] = None,
     backend: Optional[BackendLike] = None,
     plan: Optional[SystemPlan] = None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 32,
+    fault_injector=None,
 ) -> ExploreResult:
     """Hash-partitioned multi-device BFS.  Semantics identical to
     :func:`repro.core.engine.explore`; scaling is linear in devices for
     frontier/visited capacity and expansion FLOPs.
+
+    ``checkpoint_dir``/``checkpoint_every`` snapshot the sharded device
+    state between BFS levels (the host-driven per-step loop is the
+    natural boundary) and resume from the latest snapshot on re-entry,
+    exactly like the single-device :func:`~repro.core.engine.explore`;
+    restored arrays are re-``device_put`` with the live mesh's shardings.
+    ``fault_injector`` kills scheduled levels deterministically.
 
     ``backend`` selects the per-shard transition implementation (same
     registry as the single-chip engine — :mod:`repro.core.backend`); each
@@ -579,7 +628,9 @@ def explore_distributed(
         return _explore_neuron_sharded(
             comp, mesh, axis, be, max_steps=max_steps,
             frontier_cap=frontier_cap, visited_cap=visited_cap,
-            max_branches=max_branches, init=init)
+            max_branches=max_branches, init=init,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            fault_injector=fault_injector)
     comp = lower_with_backend(be, system, plan) if is_compiled(system) \
         else compile_with_plan(be, system, plan)
     m = comp.num_neurons
@@ -631,9 +682,11 @@ def explore_distributed(
         static_argnames=(),
     )
 
-    steps = 0
+    state, steps = _restore_loop_state(checkpoint_dir, state)
     drained = False
-    for _ in range(max_steps):
+    for _ in range(steps, max_steps):
+        if fault_injector is not None:
+            fault_injector.on_device_call()
         (f, fv, hi, lo, arc, an, fl, total_new) = step_fn(comp, *state)
         # shard_map flattens per-device scalars: archive_n comes back (ndev,)
         state = (f, fv, hi, lo, arc, an, fl)
@@ -641,6 +694,8 @@ def explore_distributed(
         if int(total_new) == 0:
             drained = True
             break
+        if checkpoint_dir is not None and steps % checkpoint_every == 0:
+            _save_loop_state(checkpoint_dir, steps, state)
 
     frontier, fvalid, vhi, vlo, archive, arch_n, flags = state
     arch_n = np.asarray(arch_n)
@@ -684,9 +739,10 @@ def run_traces_distributed(
     up to a mesh multiple (with seed-0 dummies, sliced off on return) is
     therefore free.
 
-    Returns ``(configs (B, steps, m), emissions (B, steps),
-    alive (B, steps))`` with ``B = len(seeds)``, exactly like the
-    single-device path.
+    Returns a :class:`~repro.core.engine.TraceOut` of ``(configs
+    (B, steps, m), emissions (B, steps), alive (B, steps),
+    branch_overflow (B, steps))`` with ``B = len(seeds)``, exactly like
+    the single-device path.
     """
     if policy not in ("first", "random"):
         raise ValueError(f"unknown policy {policy!r}")
@@ -700,10 +756,8 @@ def run_traces_distributed(
     # The planner decides when backend=None (default SystemPlan mode
     # "auto"); _traces_shard_fn's lru cache keys on the resolved backend
     # *instance*, so a plan kernel's block shape is part of the key.
-    be, plan = resolve_entry(system, backend, plan,
-                             workload=(int(seeds.shape[0]), max_branches))
-    comp = lower_with_backend(be, system, plan) if is_compiled(system) \
-        else compile_with_plan(be, system, plan)
+    be, plan, planned = resolve_entry_info(
+        system, backend, plan, workload=(int(seeds.shape[0]), max_branches))
     mesh, axis = _flat_mesh(mesh)
     ndev = mesh.devices.size
 
@@ -712,12 +766,19 @@ def run_traces_distributed(
     padded = np.zeros((Bp,), np.uint32)
     padded[:B] = seeds
     keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(padded))     # (Bp, 2)
-    c0s = jnp.broadcast_to(comp.init_config,
-                           (Bp,) + comp.init_config.shape)       # (Bp, m)
 
-    fn = _traces_shard_fn(mesh, axis, steps, max_branches, policy, be)
-    cfgs, emis, alive = fn(comp, c0s, keys)
-    return cfgs[:B], emis[:B], alive[:B]
+    def attempt(be, plan):
+        comp = lower_with_backend(be, system, plan) if is_compiled(system) \
+            else compile_with_plan(be, system, plan)
+        c0s = jnp.broadcast_to(comp.init_config,
+                               (Bp,) + comp.init_config.shape)   # (Bp, m)
+        fn = _traces_shard_fn(mesh, axis, steps, max_branches, policy, be)
+        out = fn(comp, c0s, keys)
+        jax.block_until_ready(out.configs)
+        return out
+
+    out = run_with_failover(attempt, be, plan, degradable=planned)
+    return TraceOut(*(x[:B] for x in out))
 
 
 @functools.lru_cache(maxsize=128)
@@ -732,7 +793,8 @@ def _traces_shard_fn(mesh, axis, steps, max_branches, policy, backend):
                               backend=backend),
             mesh=mesh,
             in_specs=(P(), P(axis), P(axis)),
-            out_specs=(P(axis), P(axis), P(axis)),
+            # one spec broadcast over every TraceOut leaf (batch-sharded)
+            out_specs=P(axis),
             # same reasoning as explore_distributed: pallas_call has no
             # replication rule, and every output spec is explicit anyway
             check_rep=False,

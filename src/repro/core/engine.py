@@ -50,14 +50,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from .backend import (BackendLike, compile_with_plan, get_backend,
-                      lower_with_backend, resolve_entry)
+                      lower_with_backend, resolve_entry_info)
+from .failover import run_with_failover
 from .hashing import SENTINEL, config_hash
 from .matrix import CompiledAny, is_compiled
 from .plan import SystemPlan
 from .system import SNPSystem
 
-__all__ = ["ExploreState", "ExploreResult", "explore", "successor_set",
-           "emission_gaps", "run_trace", "run_traces"]
+__all__ = ["ExploreState", "ExploreResult", "TraceOut", "explore",
+           "successor_set", "emission_gaps", "run_trace", "run_traces"]
 
 
 def _resolve_comp(system, be, plan: Optional[SystemPlan]) -> CompiledAny:
@@ -221,6 +222,48 @@ def _explore_loop(state: ExploreState, comp: CompiledAny, max_steps: int,
     return jax.lax.while_loop(cond, body, state)
 
 
+def _explore_chunked(comp, be, state: ExploreState, *, max_steps: int,
+                     max_branches: int, checkpoint_dir: Optional[str],
+                     checkpoint_every: int, fault_injector) -> ExploreState:
+    """Drive :func:`_explore_loop` with optional checkpoint/resume.
+
+    Without a ``checkpoint_dir`` this is the historical single
+    ``_explore_loop`` call.  With one, the BFS runs in chunks of
+    ``checkpoint_every`` levels, snapshotting the full
+    :class:`ExploreState` (frontier, visited hashes, archive, overflow
+    flags) via the atomic-rename checkpoint machinery between device
+    loops; on entry the latest complete snapshot is restored.  The loop
+    condition uses the *absolute* step, so chunked runs are bit-identical
+    to an uninterrupted one, and a run killed mid-chunk resumes from its
+    last snapshot and re-executes only that chunk (recovery by
+    re-execution — free by determinism).  ``fault_injector`` (a
+    :class:`repro.runtime.faults.FaultInjector`) is consulted before
+    every device loop, so tests can kill any chunk deterministically.
+    """
+    if checkpoint_dir is None:
+        if fault_injector is not None:
+            fault_injector.on_device_call()
+        return _explore_loop(state, comp, max_steps, max_branches, be)
+    from repro.checkpoint.checkpoint import (latest_step, restore_checkpoint,
+                                             save_checkpoint)
+    if checkpoint_every < 1:
+        raise ValueError("checkpoint_every must be >= 1")
+    if latest_step(checkpoint_dir) is not None:
+        host = jax.tree.map(np.asarray, state)
+        restored, _, _ = restore_checkpoint(checkpoint_dir, host)
+        state = ExploreState(*(jnp.asarray(x) for x in restored))
+    while True:
+        step = int(state.step)
+        if not (step < max_steps and int(state.frontier_n) > 0):
+            return state
+        if fault_injector is not None:
+            fault_injector.on_device_call()
+        bound = min(max_steps, step + checkpoint_every)
+        state = _explore_loop(state, comp, bound, max_branches, be)
+        save_checkpoint(checkpoint_dir, int(state.step),
+                        jax.tree.map(np.asarray, state))
+
+
 def explore(
     system: SNPSystem | CompiledAny,
     *,
@@ -231,6 +274,9 @@ def explore(
     init: Optional[Sequence[int]] = None,
     backend: Optional[BackendLike] = None,
     plan: Optional[SystemPlan] = None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 32,
+    fault_injector=None,
 ) -> ExploreResult:
     """BFS-explore the computation tree (paper Algorithm 1).
 
@@ -255,14 +301,38 @@ def explore(
     layout the backend lowers to (e.g. ``encoding="hybrid"`` for
     heavy-tailed graphs) and the planning mode; the default plan is
     bit-identical to passing none (all backends agree on valid entries).
+
+    ``checkpoint_dir`` enables checkpoint/resume: the BFS snapshots its
+    full device state every ``checkpoint_every`` levels (atomic rename,
+    content-verified — :mod:`repro.checkpoint`) and restores the latest
+    snapshot on entry, so a killed run re-invoked with the same arguments
+    — e.g. under :func:`repro.runtime.faults.run_supervised` — resumes
+    bit-identically instead of starting over.  The capacities must match
+    the checkpointed run's (a mismatch raises at restore).
+    ``fault_injector`` deterministically kills scheduled device loops for
+    tests and the fault bench tier.
+
+    A planner-picked backend (``backend=None`` auto path) that fails at
+    compile, lower, or run time degrades down the encoding-compatible
+    chain (:mod:`repro.core.failover`) with a warning — a backend the
+    caller *named* raises instead.
     """
     # Branch work per step is bounded by frontier_cap × max_branches.
-    be, plan = resolve_entry(system, backend, plan,
-                             workload=(frontier_cap, max_branches))
-    comp = _resolve_comp(system, be, plan)
+    be, plan, planned = resolve_entry_info(
+        system, backend, plan, workload=(frontier_cap, max_branches))
+    if plan is not None and plan.num_shards > 1:
+        _resolve_comp(system, be, plan)   # caller error: raise, don't degrade
     init_arr = None if init is None else jnp.asarray(init, jnp.int32)
-    state = _init_state(comp, frontier_cap, visited_cap, init_arr)
-    state = _explore_loop(state, comp, max_steps, max_branches, be)
+
+    def attempt(be, plan):
+        comp = _resolve_comp(system, be, plan)
+        state = _init_state(comp, frontier_cap, visited_cap, init_arr)
+        return _explore_chunked(
+            comp, be, state, max_steps=max_steps, max_branches=max_branches,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            fault_injector=fault_injector)
+
+    state = run_with_failover(attempt, be, plan, degradable=planned)
     # single host sync: everything below reads the final device state
     n = int(state.archive_n)
     drained = int(state.frontier_n) == 0
@@ -360,6 +430,20 @@ def emission_gaps(
 # ---------------------------------------------------------------------------
 
 
+class TraceOut(NamedTuple):
+    """:func:`run_traces` output — a NamedTuple, so both field access and
+    4-way unpacking work.  ``branch_overflow[b, t]`` flags that trace b
+    had more than ``max_branches`` successors at step t (only the first T
+    were candidates): truncated branching is reported, never silent.  The
+    serving layer surfaces it as ``TraceResult.branch_overflow`` and a
+    service counter."""
+
+    configs: jnp.ndarray          # (B, steps, m) int32
+    emissions: jnp.ndarray        # (B, steps) int32
+    alive: jnp.ndarray            # (B, steps) bool
+    branch_overflow: jnp.ndarray  # (B, steps) bool
+
+
 @functools.partial(
     jax.jit, static_argnames=("steps", "max_branches", "policy", "backend"))
 def _traces_scan(comp, c0s, keys, steps, max_branches, policy, backend):
@@ -390,13 +474,14 @@ def _traces_scan(comp, c0s, keys, steps, max_branches, policy, backend):
         emis = jnp.where(
             has, jnp.take_along_axis(out.emissions, idx[:, None], axis=1)[:, 0],
             0)
-        return (nxt, keys), (nxt, emis, has)
+        ovf = out.overflow & has
+        return (nxt, keys), (nxt, emis, has, ovf)
 
-    (_, _), (cfgs, emis, alive) = jax.lax.scan(
+    (_, _), (cfgs, emis, alive, ovf) = jax.lax.scan(
         body, (c0s, keys), None, length=steps)
     # scan stacks time first: (steps, B, ...) -> (B, steps, ...)
-    return (jnp.swapaxes(cfgs, 0, 1), jnp.swapaxes(emis, 0, 1),
-            jnp.swapaxes(alive, 0, 1))
+    return TraceOut(jnp.swapaxes(cfgs, 0, 1), jnp.swapaxes(emis, 0, 1),
+                    jnp.swapaxes(alive, 0, 1), jnp.swapaxes(ovf, 0, 1))
 
 
 def run_traces(
@@ -408,27 +493,38 @@ def run_traces(
 ):
     """Batched trajectory serving: B independent paths in one jitted scan.
 
-    Returns ``(configs (B, steps, m), emissions (B, steps),
-    alive (B, steps))`` with ``B = len(seeds)``.  Row b is bit-identical to
+    Returns a :class:`TraceOut` — ``(configs (B, steps, m), emissions
+    (B, steps), alive (B, steps), branch_overflow (B, steps))`` with
+    ``B = len(seeds)``.  Row b is bit-identical to
     ``run_trace(..., seed=seeds[b])`` with the same policy/backend — the
     batch dimension rides through the backend's ``expand`` (one transition
     per step for the whole batch), which is the serving-path hot loop.
     ``backend=None`` (the default) hands the choice to the query planner
     under the default ``SystemPlan(mode="auto")`` — see :func:`explore`;
-    traces are backend-independent, so the planner only moves wall-time.
+    traces are backend-independent, so the planner only moves wall-time,
+    and a failing planner pick degrades down the chain
+    (:mod:`repro.core.failover`) instead of raising.
     """
     if policy not in ("first", "random"):
         raise ValueError(f"unknown policy {policy!r}")
     seeds = jnp.asarray(seeds, jnp.uint32)
     if seeds.ndim != 1:
         raise ValueError(f"seeds must be 1-D, got shape {seeds.shape}")
-    be, plan = resolve_entry(system, backend, plan,
-                             workload=(int(seeds.shape[0]), max_branches))
-    comp = _resolve_comp(system, be, plan)
+    be, plan, planned = resolve_entry_info(
+        system, backend, plan, workload=(int(seeds.shape[0]), max_branches))
+    if plan is not None and plan.num_shards > 1:
+        _resolve_comp(system, be, plan)   # caller error: raise, don't degrade
     keys = jax.vmap(jax.random.PRNGKey)(seeds)             # (B, 2)
-    c0s = jnp.broadcast_to(comp.init_config, (seeds.shape[0],) +
-                           comp.init_config.shape)
-    return _traces_scan(comp, c0s, keys, steps, max_branches, policy, be)
+
+    def attempt(be, plan):
+        comp = _resolve_comp(system, be, plan)
+        c0s = jnp.broadcast_to(comp.init_config, (seeds.shape[0],) +
+                               comp.init_config.shape)
+        out = _traces_scan(comp, c0s, keys, steps, max_branches, policy, be)
+        jax.block_until_ready(out.configs)   # first-run failures degrade too
+        return out
+
+    return run_with_failover(attempt, be, plan, degradable=planned)
 
 
 def run_trace(
@@ -439,12 +535,13 @@ def run_trace(
 ):
     """Single-path simulation (deterministic or uniformly random branch).
 
-    Returns (configs (steps, m), emissions (steps,), alive (steps,)).
+    Returns a :class:`TraceOut` of (configs (steps, m), emissions
+    (steps,), alive (steps,), branch_overflow (steps,)).
     The 'serving' mode of the engine: one trajectory, spike train out.
     Implemented as a B=1 :func:`run_traces` batch, so the single- and
     batched-serving paths can never drift apart.
     """
-    cfgs, emis, alive = run_traces(
+    out = run_traces(
         system, steps=steps, seeds=[seed], policy=policy,
         max_branches=max_branches, backend=backend, plan=plan)
-    return cfgs[0], emis[0], alive[0]
+    return TraceOut(*(x[0] for x in out))

@@ -1,0 +1,146 @@
+"""Graceful backend degradation: walk an explicit, encoding-compatible
+fallback chain when a planner-picked backend fails — never silently,
+never crash-looping.
+
+The query planner (PR 6, :mod:`repro.core.autotune`) picks a backend from
+cost estimates, so its pick can be *wrong in kind*, not just in speed: a
+Pallas toolchain missing at import, a kernel that fails to lower a shape,
+an interpret-mode path that only breaks at first run.  When — and only
+when — the planner made the choice (``backend=None`` auto entry points),
+the engine walks :data:`DEGRADE_ORDER` restricted to backends whose
+lowering registry (PR 5, ``StepBackend.supported_encodings``) can realize
+the plan's encoding, warns once per edge, and notifies listeners (the
+serving layer counts degradations in its stats).  A caller who *named* a
+backend gets the failure raised — pinning is a contract, not a hint.
+
+``plan.kernel`` never survives degradation: block configs are tied to the
+backend the autotuner measured them on, and ``_check_kernel_plan`` would
+(correctly) refuse them on a non-Pallas fallback.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import warnings
+from dataclasses import dataclass
+from typing import Callable, List, Tuple
+
+from repro.runtime.faults import InjectedFault
+
+from .plan import SystemPlan
+
+__all__ = ["DEGRADE_ORDER", "DegradeEvent", "degrade_candidates",
+           "run_with_failover", "record_degradation",
+           "add_degrade_listener", "remove_degrade_listener"]
+
+# Most-specialized first; every chain walk moves strictly rightward, so a
+# degraded run can never bounce back to the backend that just failed.
+DEGRADE_ORDER: Tuple[str, ...] = ("sparse_pallas", "pallas", "sparse", "ref")
+
+
+@dataclass(frozen=True)
+class DegradeEvent:
+    """One degradation edge: which backend failed, at what stage
+    (``"compile"``, ``"lower"``, ``"run"``, ``"serve"``), falling back to
+    what, and the failure's repr."""
+
+    from_backend: str
+    to_backend: str
+    stage: str
+    error: str
+
+
+_LOCK = threading.Lock()
+_WARNED: set = set()
+_LISTENERS: List[Callable[[DegradeEvent], None]] = []
+
+
+def add_degrade_listener(cb: Callable[[DegradeEvent], None]) -> None:
+    """Register a callback invoked on every degradation (used by the
+    serving layer to count degradations in service stats)."""
+    with _LOCK:
+        _LISTENERS.append(cb)
+
+
+def remove_degrade_listener(cb: Callable[[DegradeEvent], None]) -> None:
+    with _LOCK:
+        if cb in _LISTENERS:
+            _LISTENERS.remove(cb)
+
+
+def record_degradation(from_backend: str, to_backend: str, stage: str,
+                       error: BaseException) -> DegradeEvent:
+    """Emit one degradation: warn once per (from, to) edge for the
+    process lifetime, always notify listeners.  Never silent."""
+    event = DegradeEvent(from_backend, to_backend, stage, repr(error))
+    with _LOCK:
+        first = (from_backend, to_backend) not in _WARNED
+        _WARNED.add((from_backend, to_backend))
+        listeners = list(_LISTENERS)
+    if first:
+        warnings.warn(
+            f"backend {from_backend!r} failed at {stage} time "
+            f"({event.error}); degrading to {to_backend!r} — results are "
+            "bit-identical across backends, only speed changes "
+            "(DESIGN.md §4.4)", RuntimeWarning, stacklevel=3)
+    for cb in listeners:
+        cb(event)
+    return event
+
+
+def degrade_candidates(backend, plan: SystemPlan
+                       ) -> List[Tuple[object, SystemPlan]]:
+    """Encoding-compatible fallbacks strictly after ``backend`` in
+    :data:`DEGRADE_ORDER`, each paired with the plan it should run under
+    (same encoding choice, ``kernel`` stripped, backend re-pinned).
+
+    A candidate must be able to realize the plan's *resolved* encoding —
+    a degraded run re-lowers the same plan, so e.g. ``sparse_pallas``
+    (ell/hybrid) degrades to ``sparse``, never to the dense-only ``ref``;
+    a sharded plan only degrades to sharded-capable backends.
+    """
+    from .backend import get_backend  # late: backend.py is upstream of us
+    name = getattr(backend, "name", None)
+    if name not in DEGRADE_ORDER:
+        return []
+    out: List[Tuple[object, SystemPlan]] = []
+    for cand_name in DEGRADE_ORDER[DEGRADE_ORDER.index(name) + 1:]:
+        cand = get_backend(cand_name)
+        sup = cand.supported_encodings()
+        if plan.num_shards > 1 and "sharded" not in sup:
+            continue
+        if plan.encoding != "auto" and plan.encoding not in sup:
+            continue
+        out.append((cand, dataclasses.replace(
+            plan, backend=cand_name, kernel=None)))
+    return out
+
+
+def run_with_failover(attempt: Callable[[object, SystemPlan], object],
+                      backend, plan: SystemPlan, *, degradable: bool,
+                      stage: str = "run"):
+    """Run ``attempt(backend, plan)``; when ``degradable`` (the planner
+    picked the backend), walk the degrade chain on failure.
+
+    ``attempt`` must cover compile + lower + first run, so a backend that
+    only breaks on its first device call still degrades.  Injected faults
+    (:class:`repro.runtime.faults.InjectedFault`) are *not* degraded —
+    they model node/device loss, whose recovery path is the supervisor's
+    checkpoint-resume, not a backend swap.  The last failure re-raises
+    when the chain is exhausted.
+    """
+    if not degradable:
+        return attempt(backend, plan)
+    chain = [(backend, plan)] + degrade_candidates(backend, plan)
+    last: BaseException = None
+    for i, (be, p) in enumerate(chain):
+        try:
+            return attempt(be, p)
+        except InjectedFault:
+            raise
+        except Exception as e:
+            last = e
+            if i + 1 < len(chain):
+                record_degradation(be.name, chain[i + 1][0].name, stage, e)
+    raise last

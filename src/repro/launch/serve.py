@@ -41,6 +41,7 @@ def serve_snp(args) -> None:
     correctness check on whatever devices are available.
     """
     from repro.core import paper_pi
+    from repro.runtime import FaultInjector, FaultPolicy
 
     mesh = build_mesh_for_available()
     plan = make_plan(mesh)
@@ -48,14 +49,42 @@ def serve_snp(args) -> None:
     runner = make_trace_runner(mesh=trace_mesh)
     system = paper_pi(covering=True)
 
+    policy = None
+    if (args.max_retries is not None or args.deadline_ms is not None
+            or args.max_pending is not None or args.inject):
+        policy = FaultPolicy(
+            max_retries=2 if args.max_retries is None else args.max_retries,
+            backoff_ms=args.backoff_ms,
+            deadline_ms=args.deadline_ms,
+            max_pending=args.max_pending)
+    injector = None
+    if args.inject:
+        # "fail=2,4 poison=17 slow=3:0.05" -> a deterministic schedule
+        kw = {}
+        for part in args.inject.split():
+            k, _, v = part.partition("=")
+            if k == "fail":
+                kw["fail_calls"] = [int(x) for x in v.split(",") if x]
+            elif k == "poison":
+                kw["poison_seeds"] = [int(x) for x in v.split(",") if x]
+            elif k == "slow":
+                kw["slow_calls"] = {
+                    int(o): float(s) for o, s in
+                    (pair.split(":") for pair in v.split(","))}
+            else:
+                raise SystemExit(f"unknown --inject term {part!r}")
+        injector = FaultInjector(**kw)
+
     n, G = args.requests, args.gen
     with SNPTraceService(batch_size=args.batch, step_bucket=8,
                          backend=args.backend, runner=runner,
                          async_mode=True,
-                         max_delay_ms=args.max_delay_ms) as svc:
+                         max_delay_ms=args.max_delay_ms,
+                         policy=policy, fault_injector=injector) as svc:
         print(f"[serve-snp] mesh {trace_mesh.devices.size}-device, "
               f"batch {args.batch}, max_delay {args.max_delay_ms} ms, "
-              f"backend {args.backend}")
+              f"backend {args.backend}"
+              + (f", policy {policy}" if policy else ""))
         done = {}
         t0 = time.perf_counter()
         futs = []
@@ -67,20 +96,31 @@ def serve_snp(args) -> None:
             fut.add_done_callback(
                 lambda f, s=s: done.setdefault(s, time.perf_counter()))
             futs.append(fut)
+        failed = 0
         for f in futs:
-            f.result()
+            try:
+                f.result()
+            except Exception as e:
+                failed += 1
+                print(f"[serve-snp] request failed: {type(e).__name__}: {e}")
         dt = time.perf_counter() - t0
         calls = svc.num_device_calls
+        stats = svc.stats()
     # outside the with-block: close() joined the drain thread, so every
     # done-callback has run (result() alone doesn't guarantee the last
     # future's callback fired before the waiter woke)
     lat_ms = np.asarray([done[s] - t0 for s in range(n)]) * 1e3
-    print(f"[serve-snp] {n} traces x {G} steps in {dt*1e3:.1f} ms "
-          f"({n / dt:.0f} traces/s, {calls} device calls)")
+    print(f"[serve-snp] {n - failed}/{n} traces x {G} steps in "
+          f"{dt*1e3:.1f} ms ({n / dt:.0f} traces/s, {calls} device calls)")
     print(f"[serve-snp] completion latency p50={np.percentile(lat_ms, 50):.1f} ms "
           f"p99={np.percentile(lat_ms, 99):.1f} ms")
-    emis = np.asarray(futs[0].result().emissions)
-    print(f"[serve-snp] sample spike train (req 0): {emis.tolist()}")
+    if policy is not None or injector is not None:
+        print("[serve-snp] fault stats: " + ", ".join(
+            f"{k}={v}" for k, v in stats.items() if v))
+    ok = next((f for f in futs if not f.exception()), None)
+    if ok is not None:
+        emis = np.asarray(ok.result().emissions)
+        print(f"[serve-snp] sample spike train: {emis.tolist()}")
 
 
 def serve_lm(args):
@@ -155,6 +195,21 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--max-delay-ms", type=float, default=5.0)
     ap.add_argument("--backend", default="ref")
+    # failure-domain knobs: any of these turns on the FaultPolicy path
+    ap.add_argument("--max-retries", type=int, default=None,
+                    help="retries per flush before degrade/bisect "
+                         "(default 2 once any fault flag is set)")
+    ap.add_argument("--backoff-ms", type=float, default=10.0,
+                    help="base retry backoff (exponential, jittered)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline; expired requests fail "
+                         "fast with DeadlineExceeded")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="admission control: reject submits past this "
+                         "queue depth")
+    ap.add_argument("--inject", default=None,
+                    help="deterministic fault schedule, e.g. "
+                         "'fail=2,4 poison=17 slow=3:0.05'")
     args = ap.parse_args(argv)
 
     if args.batch is None:

@@ -2,8 +2,12 @@
 
 from .elastic import build_mesh, choose_mesh_shape
 from .fault_tolerance import FailureInjector, Supervisor, SupervisorConfig
+from .faults import (AdmissionRejected, DeadlineExceeded, FaultInjector,
+                     FaultPolicy, InjectedFault, PoisonError, run_supervised)
 from .straggler import StragglerConfig, StragglerDetector, rebalance_shares
 
 __all__ = ["FailureInjector", "Supervisor", "SupervisorConfig",
+           "FaultPolicy", "FaultInjector", "InjectedFault", "PoisonError",
+           "DeadlineExceeded", "AdmissionRejected", "run_supervised",
            "StragglerConfig", "StragglerDetector", "rebalance_shares",
            "build_mesh", "choose_mesh_shape"]

@@ -155,10 +155,10 @@ def test_explore_loop_is_on_device_while_loop():
 def test_run_traces_matches_per_seed_run_trace(policy):
     comp = compile_system(paper_pi(True))
     seeds = [0, 1, 7, 42, 1234]
-    cfgs, emis, alive = run_traces(comp, steps=12, seeds=seeds, policy=policy)
+    cfgs, emis, alive, *_ = run_traces(comp, steps=12, seeds=seeds, policy=policy)
     assert cfgs.shape == (len(seeds), 12, comp.num_neurons)
     for i, s in enumerate(seeds):
-        c, e, a = run_trace(comp, steps=12, policy=policy, seed=s)
+        c, e, a, *_ = run_trace(comp, steps=12, policy=policy, seed=s)
         np.testing.assert_array_equal(np.asarray(cfgs[i]), np.asarray(c))
         np.testing.assert_array_equal(np.asarray(emis[i]), np.asarray(e))
         np.testing.assert_array_equal(np.asarray(alive[i]), np.asarray(a))
@@ -207,7 +207,7 @@ def test_service_batches_heterogeneous_requests():
     assert svc.num_traces_served == 4
     for k, r in reqs.items():
         got = results[tickets[k]]
-        c, e, a = run_trace(r.system, steps=r.steps, policy=r.policy,
+        c, e, a, *_ = run_trace(r.system, steps=r.steps, policy=r.policy,
                             seed=r.seed, max_branches=r.max_branches)
         assert got.configs.shape == (r.steps, 4 if k == "d" else 3)
         np.testing.assert_array_equal(got.configs, np.asarray(c))
@@ -225,7 +225,7 @@ def test_service_serves_256_trace_batch_in_one_call():
     assert len(results) == 256
     # spot-check a few against solo traces
     for s in (0, 17, 255):
-        c, e, _ = run_trace(pi, steps=8, policy="random", seed=s)
+        c, e, _, *_ = run_trace(pi, steps=8, policy="random", seed=s)
         np.testing.assert_array_equal(results[tickets[s]].configs,
                                       np.asarray(c))
         np.testing.assert_array_equal(results[tickets[s]].emissions,
@@ -240,7 +240,7 @@ def test_service_chunks_oversized_groups_and_pads_short_ones():
     results = svc.drain()
     assert svc.num_device_calls == 2          # 6 requests / batch_size 4
     for s in range(6):
-        c, _, _ = run_trace(pi, steps=3, policy="random", seed=s)
+        c, _, _, *_ = run_trace(pi, steps=3, policy="random", seed=s)
         np.testing.assert_array_equal(results[tickets[s]].configs,
                                       np.asarray(c))
 
@@ -250,7 +250,7 @@ def test_service_with_sparse_backend_matches_ref_service():
     pi = paper_pi(True)
     t = svc.submit(TraceRequest(pi, steps=6, policy="random", seed=3))
     got = svc.drain()[t]
-    c, e, a = run_trace(pi, steps=6, policy="random", seed=3)
+    c, e, a, *_ = run_trace(pi, steps=6, policy="random", seed=3)
     np.testing.assert_array_equal(got.configs, np.asarray(c))
     np.testing.assert_array_equal(got.emissions, np.asarray(e))
 

@@ -1,0 +1,516 @@
+"""Failure-domain tests: fault injection, retry/bisect/degrade, deadlines,
+admission control, and BFS checkpoint-resume (DESIGN.md §4.4).
+
+The two acceptance scenarios from the PR contract:
+
+* under a deterministic fault schedule (one poison request + two transient
+  flush failures injected into a 64-request async burst), exactly the
+  poison future fails and every other future resolves bit-identically to a
+  fault-free synchronous ``drain()``;
+* a killed-then-resumed ``explore`` restarted from its latest checkpoint
+  returns the same archive as an uninterrupted run — for the single-device
+  while-loop and for ``explore_distributed``.
+"""
+
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (SystemPlan, explore, get_backend, paper_pi,
+                        run_trace, run_traces)
+from repro.core import failover
+from repro.core.backend import resolve_entry_info
+from repro.core.distributed import explore_distributed
+from repro.runtime.faults import (AdmissionRejected, DeadlineExceeded,
+                                  FaultInjector, FaultPolicy, InjectedFault,
+                                  PoisonError, run_supervised)
+from repro.serve import SNPTraceService, TraceRequest
+
+PI = paper_pi(True)
+TIMEOUT = 120
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warn_state():
+    """Degradation warns once per (from, to) edge per process; reset so
+    every test observes its own first warning."""
+    failover._WARNED.clear()
+    yield
+    failover._WARNED.clear()
+
+
+# ---------------------------------------------------------------------------
+# policy / injector primitives
+# ---------------------------------------------------------------------------
+
+def test_policy_validates_and_backoff_is_deterministic():
+    with pytest.raises(ValueError):
+        FaultPolicy(max_retries=-1)
+    with pytest.raises(ValueError):
+        FaultPolicy(backoff_factor=0.5)
+    pol = FaultPolicy(backoff_ms=10.0, backoff_factor=2.0, jitter=0.1)
+    assert pol.backoff_s(0, token=7) == pol.backoff_s(0, token=7)
+    assert pol.backoff_s(0) != pol.backoff_s(0, token="other")
+    # exponential growth dominates the bounded jitter
+    assert pol.backoff_s(3) > 2 * pol.backoff_s(1)
+    assert FaultPolicy(jitter=0.0, backoff_ms=4.0).backoff_s(0) == 0.004
+
+
+def test_injector_transient_fires_once_poison_fires_always():
+    inj = FaultInjector(fail_calls=(2,), poison_seeds=(9,))
+    assert inj.on_device_call(seeds=[1, 2]) == 1
+    with pytest.raises(InjectedFault):
+        inj.on_device_call(seeds=[1, 2])          # ordinal 2: transient
+    assert inj.on_device_call(seeds=[1, 2]) == 3  # ...fired once
+    with pytest.raises(PoisonError):
+        inj.on_device_call(seeds=[1, 9])
+    with pytest.raises(PoisonError):
+        inj.on_device_call(seeds=[9])             # poison fires every time
+    assert inj.injected == 3
+
+
+def test_injector_rejects_poisoning_the_padding_seed():
+    with pytest.raises(ValueError, match="padding"):
+        FaultInjector(poison_seeds=(0,))
+
+
+def test_transient_fault_not_masked_by_cobatched_poison():
+    # a scheduled infrastructure fault outranks the poison payload riding
+    # in the same batch; the poison then fires on the retry
+    inj = FaultInjector(fail_calls=(1,), poison_seeds=(9,))
+    with pytest.raises(InjectedFault) as ei:
+        inj.on_device_call(seeds=[9])
+    assert not isinstance(ei.value, PoisonError)
+    with pytest.raises(PoisonError):
+        inj.on_device_call(seeds=[9])
+
+
+def test_run_supervised_bounds_restarts_and_chains_last_error():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise RuntimeError(f"boom {len(calls)}")
+        return "done"
+
+    out, restarts = run_supervised(flaky, max_restarts=3)
+    assert out == "done" and restarts == 2
+
+    def always():
+        raise RuntimeError("always")
+
+    with pytest.raises(RuntimeError, match="exceeded max_restarts=2"):
+        run_supervised(always, max_restarts=2)
+
+
+# ---------------------------------------------------------------------------
+# degrade chain (core/failover)
+# ---------------------------------------------------------------------------
+
+def test_degrade_candidates_respect_encoding_compatibility():
+    sp = get_backend("sparse_pallas")
+    # ELL is a sparse-family encoding: only "sparse" can take over
+    names = [b.name for b, _ in
+             failover.degrade_candidates(sp, SystemPlan(encoding="ell"))]
+    assert names == ["sparse"]
+    # auto encoding: the whole tail of the chain qualifies
+    names = [b.name for b, _ in
+             failover.degrade_candidates(sp, SystemPlan(encoding="auto"))]
+    assert names == ["pallas", "sparse", "ref"]
+    # ref is the end of the line
+    assert failover.degrade_candidates(
+        get_backend("ref"), SystemPlan()) == []
+
+
+def test_degraded_plans_drop_kernel_configs():
+    from repro.core import KernelConfig
+    sp = get_backend("sparse_pallas")
+    for _, plan in failover.degrade_candidates(
+            sp, SystemPlan(kernel=KernelConfig(block_b=4, block_t=8))):
+        assert plan.kernel is None
+
+
+def test_run_with_failover_walks_chain_and_records():
+    events = []
+    failover.add_degrade_listener(events.append)
+    try:
+        tried = []
+
+        def attempt(be, plan):
+            tried.append(be.name)
+            if be.name == "sparse_pallas":
+                raise RuntimeError("kernel exploded")
+            return be.name
+
+        with pytest.warns(RuntimeWarning, match="degrading"):
+            got = failover.run_with_failover(
+                attempt, get_backend("sparse_pallas"),
+                SystemPlan(encoding="ell"), degradable=True)
+        assert got == "sparse"
+        assert tried == ["sparse_pallas", "sparse"]
+        assert len(events) == 1
+        assert (events[0].from_backend, events[0].to_backend) == \
+            ("sparse_pallas", "sparse")
+    finally:
+        failover.remove_degrade_listener(events.append)
+
+
+def test_run_with_failover_never_degrades_injected_faults():
+    def attempt(be, plan):
+        raise InjectedFault("node lost")
+
+    with pytest.raises(InjectedFault):
+        failover.run_with_failover(
+            attempt, get_backend("sparse_pallas"), SystemPlan(),
+            degradable=True)
+
+
+def test_run_with_failover_passthrough_when_not_degradable():
+    def attempt(be, plan):
+        raise RuntimeError("explicit backend failure")
+
+    # an explicitly requested backend is the caller's choice: no silent swap
+    with pytest.raises(RuntimeError, match="explicit"):
+        failover.run_with_failover(
+            attempt, get_backend("sparse_pallas"), SystemPlan(),
+            degradable=False)
+
+
+def test_resolve_entry_info_marks_explicit_backends_unplanned():
+    _, _, planned = resolve_entry_info(PI, "ref", None, workload=(4, 8))
+    assert planned is False
+    _, _, planned = resolve_entry_info(
+        PI, None, SystemPlan(backend="ref"), workload=(4, 8))
+    assert planned is False
+
+
+# ---------------------------------------------------------------------------
+# branch-overflow surfacing (engine -> TraceResult -> counters)
+# ---------------------------------------------------------------------------
+
+def test_branch_overflow_flag_surfaces_per_trace():
+    out = run_trace(PI, steps=6, policy="first", max_branches=1)
+    assert bool(np.any(np.asarray(out.branch_overflow)))
+    big = run_trace(PI, steps=6, policy="first", max_branches=64)
+    assert not np.any(np.asarray(big.branch_overflow))
+    # batched: the flag is per trace per step, masked by liveness
+    outs = run_traces(PI, steps=6, seeds=[0, 1], max_branches=1)
+    assert np.asarray(outs.branch_overflow).shape == (2, 6)
+
+
+def test_service_surfaces_truncation_in_result_and_stats():
+    svc = SNPTraceService(batch_size=4, step_bucket=4)
+    t_trunc = svc.submit(TraceRequest(PI, steps=5, policy="first",
+                                      max_branches=1))
+    t_ok = svc.submit(TraceRequest(PI, steps=5, policy="first",
+                                   max_branches=64))
+    res = svc.drain()
+    assert res[t_trunc].truncated
+    assert res[t_trunc].branch_overflow.shape == (5,)
+    assert not res[t_ok].truncated
+    assert svc.stats()["branch_overflow_traces"] == 1
+
+
+# ---------------------------------------------------------------------------
+# service failure domains: deadlines, admission, retry, bisect, degrade
+# ---------------------------------------------------------------------------
+
+def test_admission_control_rejects_at_submit():
+    svc = SNPTraceService(batch_size=4,
+                          policy=FaultPolicy(max_pending=2))
+    svc.submit(TraceRequest(PI, steps=3, seed=1))
+    svc.submit(TraceRequest(PI, steps=3, seed=2))
+    with pytest.raises(AdmissionRejected):
+        svc.submit(TraceRequest(PI, steps=3, seed=3))
+    assert svc.stats()["rejected"] == 1
+    svc.drain()                     # queue drains -> admission reopens
+    svc.submit(TraceRequest(PI, steps=3, seed=3))
+
+
+def test_expired_deadline_fails_fast_without_device_time():
+    svc = SNPTraceService(batch_size=4,
+                          policy=FaultPolicy(deadline_ms=1.0))
+    t_dead = svc.submit(TraceRequest(PI, steps=3, seed=1))
+    t_live = svc.submit(TraceRequest(PI, steps=3, seed=2,
+                                     deadline_ms=60_000.0))
+    time.sleep(0.02)                # both requests now older than 1 ms
+    res = svc.drain()
+    assert t_live in res and t_dead not in res
+    assert isinstance(svc.last_failures[t_dead], DeadlineExceeded)
+    assert svc.stats()["deadline_exceeded"] == 1
+
+
+def test_retry_clears_transient_faults_sync():
+    inj = FaultInjector(fail_calls=(1,))
+    pol = FaultPolicy(max_retries=2, backoff_ms=0.0)
+    svc = SNPTraceService(batch_size=4, policy=pol, fault_injector=inj)
+    t = svc.submit(TraceRequest(PI, steps=4, policy="random", seed=3))
+    res = svc.drain()
+    ref = run_trace(PI, steps=4, policy="random", seed=3)
+    np.testing.assert_array_equal(res[t].configs, np.asarray(ref.configs))
+    s = svc.stats()
+    assert s["retries"] == 1 and s["failed_calls"] == 1
+    assert svc.last_failures == {}
+
+
+def test_retry_exhaustion_propagates_last_exception():
+    inj = FaultInjector(fail_calls=(1, 2),
+                        error_factory=lambda n: InjectedFault(f"ordinal {n}"))
+    pol = FaultPolicy(max_retries=1, backoff_ms=0.0, bisect=False,
+                      degrade=False)
+    svc = SNPTraceService(batch_size=4, policy=pol, fault_injector=inj)
+    t = svc.submit(TraceRequest(PI, steps=3, seed=1))
+    assert svc.drain() == {}
+    # the failure carries the *last* attempt's exception, not the first
+    assert "ordinal 2" in str(svc.last_failures[t])
+    assert svc.stats()["failed_requests"] == 1
+
+
+def test_bisection_isolates_poison_request_sync():
+    poison_seed = 6
+    inj = FaultInjector(poison_seeds=(poison_seed,))
+    pol = FaultPolicy(max_retries=0, backoff_ms=0.0, bisect=True,
+                      degrade=False)
+    svc = SNPTraceService(batch_size=8, policy=pol, fault_injector=inj)
+    tickets = {s: svc.submit(TraceRequest(PI, steps=4, policy="random",
+                                          seed=s))
+               for s in range(1, 9)}
+    res = svc.drain()
+    assert set(res) == {tickets[s] for s in range(1, 9) if s != poison_seed}
+    assert isinstance(svc.last_failures[tickets[poison_seed]], PoisonError)
+    for s, t in tickets.items():
+        if s == poison_seed:
+            continue
+        ref = run_trace(PI, steps=4, policy="random", seed=s)
+        np.testing.assert_array_equal(res[t].configs,
+                                      np.asarray(ref.configs))
+    s = svc.stats()
+    assert s["bisections"] >= 1 and s["failed_requests"] == 1
+
+
+def test_service_degrades_backend_and_counts_it():
+    served_by = []
+
+    def flaky_runner(comp, *, backend=None, **kw):
+        be = get_backend(backend)
+        if be.name == "sparse_pallas":
+            raise RuntimeError("kernel exploded")
+        served_by.append(be.name)
+        return run_traces(comp, backend=be, **kw)
+
+    pol = FaultPolicy(max_retries=0, backoff_ms=0.0, degrade=True,
+                      bisect=False)
+    svc = SNPTraceService(batch_size=4, backend="sparse_pallas",
+                          policy=pol, runner=flaky_runner)
+    t = svc.submit(TraceRequest(PI, steps=4, policy="random", seed=2))
+    with pytest.warns(RuntimeWarning, match="degrading"):
+        res = svc.drain()
+    ref = run_trace(PI, steps=4, policy="random", seed=2, backend="ref")
+    np.testing.assert_array_equal(res[t].configs, np.asarray(ref.configs))
+    assert served_by == ["sparse"]       # ELL encoding -> sparse takes over
+    assert svc.stats()["degraded"] == 1
+    assert svc.last_failures == {}
+
+
+def test_sync_drain_without_policy_stays_all_or_nothing():
+    inj = FaultInjector(fail_calls=(1,))
+    svc = SNPTraceService(batch_size=4, fault_injector=inj)
+    t = svc.submit(TraceRequest(PI, steps=3, seed=1))
+    with pytest.raises(InjectedFault):
+        svc.drain()
+    assert svc.pending == 1              # still queued: retry drain serves
+    res = svc.drain()
+    assert t in res
+
+
+# ---------------------------------------------------------------------------
+# the async acceptance scenario
+# ---------------------------------------------------------------------------
+
+def test_async_burst_poison_isolated_others_bit_identical():
+    """One poison request + two transient flush failures in a 64-request
+    async burst: exactly the poison future fails; every other future is
+    bit-identical to a fault-free synchronous drain."""
+    sync = SNPTraceService(batch_size=16)
+    tickets = [sync.submit(TraceRequest(PI, steps=5, policy="random",
+                                        seed=s + 1))
+               for s in range(64)]
+    baseline = sync.drain()
+
+    poison_seed = 17
+    inj = FaultInjector(fail_calls=(2, 4), poison_seeds=(poison_seed,))
+    pol = FaultPolicy(max_retries=2, backoff_ms=0.0, bisect=True,
+                      degrade=False)
+    svc = SNPTraceService(batch_size=16, async_mode=True, max_delay_ms=0.0,
+                          policy=pol, fault_injector=inj)
+    futs = [svc.submit(TraceRequest(PI, steps=5, policy="random",
+                                    seed=s + 1))
+            for s in range(64)]
+    svc.close()
+
+    for s, (t, fut) in enumerate(zip(tickets, futs)):
+        if s + 1 == poison_seed:
+            with pytest.raises(PoisonError):
+                fut.result(timeout=TIMEOUT)
+            continue
+        got, want = fut.result(timeout=TIMEOUT), baseline[t]
+        np.testing.assert_array_equal(got.configs, want.configs)
+        np.testing.assert_array_equal(got.emissions, want.emissions)
+        np.testing.assert_array_equal(got.alive, want.alive)
+        np.testing.assert_array_equal(got.branch_overflow,
+                                      want.branch_overflow)
+    s = svc.stats()
+    assert s["failed_requests"] == 1 and s["retries"] >= 1 \
+        and s["bisections"] >= 1
+    assert s["traces_served"] == 63
+
+
+def test_async_deadline_failure_reaches_the_future():
+    pol = FaultPolicy(deadline_ms=1.0)
+    svc = SNPTraceService(batch_size=4, async_mode=True, max_delay_ms=30.0,
+                          policy=pol)
+    fut = svc.submit(TraceRequest(PI, steps=3, seed=1))
+    with pytest.raises(DeadlineExceeded):
+        fut.result(timeout=TIMEOUT)    # flush fires ~30 ms > 1 ms deadline
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# async lifecycle edges
+# ---------------------------------------------------------------------------
+
+def test_drain_loop_never_waits_zero_with_max_delay_ms_zero():
+    svc = SNPTraceService(batch_size=8, async_mode=True, max_delay_ms=0.0)
+    orig_wait, bad_waits = svc._cv.wait, []
+
+    def spying_wait(timeout=None):
+        if timeout is not None and timeout <= 0:
+            bad_waits.append(timeout)
+        return orig_wait(timeout)
+
+    svc._cv.wait = spying_wait
+    try:
+        futs = [svc.submit(TraceRequest(PI, steps=3, policy="random",
+                                        seed=s))
+                for s in range(24)]
+        for fut in futs:
+            fut.result(timeout=TIMEOUT)
+    finally:
+        svc.close()
+        svc._cv.wait = orig_wait
+    assert bad_waits == []
+
+
+def test_close_races_in_flight_flush_and_futures_still_resolve():
+    inj = FaultInjector(slow_calls={1: 0.2})
+    svc = SNPTraceService(batch_size=4, async_mode=True, max_delay_ms=0.0,
+                          fault_injector=inj)
+    futs = [svc.submit(TraceRequest(PI, steps=3, policy="random", seed=s))
+            for s in range(4)]
+    svc.close()                      # joins the thread mid-stalled-flush
+    for s, fut in enumerate(futs):
+        ref = run_trace(PI, steps=3, policy="random", seed=s)
+        np.testing.assert_array_equal(fut.result(timeout=TIMEOUT).configs,
+                                      np.asarray(ref.configs))
+
+
+def test_submit_after_close_raises():
+    svc = SNPTraceService(batch_size=4, async_mode=True)
+    svc.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(TraceRequest(PI, steps=3))
+
+
+def test_cancelled_future_skipped_during_bisecting_flush():
+    poison_seed = 3
+    inj = FaultInjector(poison_seeds=(poison_seed,))
+    pol = FaultPolicy(max_retries=0, backoff_ms=0.0, bisect=True,
+                      degrade=False)
+    # a huge flush delay parks every request until close(): cancellation
+    # deterministically beats the flush
+    svc = SNPTraceService(batch_size=8, async_mode=True,
+                          max_delay_ms=60_000.0, policy=pol,
+                          fault_injector=inj)
+    futs = [svc.submit(TraceRequest(PI, steps=4, policy="random",
+                                    seed=s + 1))
+            for s in range(8)]
+    assert futs[0].cancel()
+    svc.close()                      # flush runs recovery incl. bisection
+    assert futs[0].cancelled()
+    for s, fut in enumerate(futs[1:], start=1):
+        if s + 1 == poison_seed:
+            with pytest.raises(PoisonError):
+                fut.result(timeout=TIMEOUT)
+            continue
+        ref = run_trace(PI, steps=4, policy="random", seed=s + 1)
+        np.testing.assert_array_equal(fut.result(timeout=TIMEOUT).configs,
+                                      np.asarray(ref.configs))
+
+
+def test_legacy_runner_returning_three_tuple_still_serves():
+    def legacy_runner(comp, **kw):
+        out = run_traces(comp, **kw)
+        return out.configs, out.emissions, out.alive    # pre-TraceOut shape
+
+    svc = SNPTraceService(batch_size=4, runner=legacy_runner)
+    t = svc.submit(TraceRequest(PI, steps=4, seed=1))
+    res = svc.drain()[t]
+    assert res.branch_overflow.shape == (4,)
+    assert not res.truncated
+
+
+# ---------------------------------------------------------------------------
+# BFS checkpoint-resume
+# ---------------------------------------------------------------------------
+
+def _assert_same_explore(a, b):
+    assert int(a.num_discovered) == int(b.num_discovered)
+    np.testing.assert_array_equal(np.asarray(a.configs),
+                                  np.asarray(b.configs))
+    assert int(a.steps) == int(b.steps)
+    assert bool(a.exhausted) == bool(b.exhausted)
+
+
+def test_explore_checkpoints_are_pure_overhead_when_healthy(tmp_path):
+    ref = explore(PI, max_steps=12, max_branches=64)
+    got = explore(PI, max_steps=12, max_branches=64,
+                  checkpoint_dir=str(tmp_path), checkpoint_every=3)
+    _assert_same_explore(ref, got)
+
+
+def test_explore_killed_and_resumed_matches_uninterrupted(tmp_path):
+    ref = explore(PI, max_steps=12, max_branches=64)
+    inj = FaultInjector(fail_calls=(2,))
+    got, restarts = run_supervised(
+        lambda: explore(PI, max_steps=12, max_branches=64,
+                        checkpoint_dir=str(tmp_path), checkpoint_every=1,
+                        fault_injector=inj),
+        max_restarts=3)
+    assert restarts == 1
+    _assert_same_explore(ref, got)
+
+
+def test_explore_distributed_killed_and_resumed_matches(tmp_path):
+    ref = explore_distributed(PI, max_steps=12, max_branches=64)
+    inj = FaultInjector(fail_calls=(2,))
+    got, restarts = run_supervised(
+        lambda: explore_distributed(PI, max_steps=12, max_branches=64,
+                                    checkpoint_dir=str(tmp_path),
+                                    checkpoint_every=1,
+                                    fault_injector=inj),
+        max_restarts=5)
+    assert restarts == 1
+    _assert_same_explore(ref, got)
+
+
+def test_supervisor_gives_up_after_max_restarts(tmp_path):
+    inj = FaultInjector(fail_calls=(1, 2, 3, 4, 5, 6))
+    with pytest.raises(RuntimeError, match="exceeded max_restarts"):
+        run_supervised(
+            lambda: explore(PI, max_steps=12, max_branches=64,
+                            checkpoint_dir=str(tmp_path),
+                            checkpoint_every=1, fault_injector=inj),
+            max_restarts=2)

@@ -10,7 +10,7 @@ from repro.core.generators import counter, nd_chain, ring, scaled_pi
 
 def test_ring_cycles_one_spike():
     comp = compile_system(ring(5))
-    cfgs, _, alive = run_trace(comp, steps=10, policy="first")
+    cfgs, _, alive, *_ = run_trace(comp, steps=10, policy="first")
     cfgs = np.asarray(cfgs)
     assert np.asarray(alive).all()
     assert (cfgs.sum(axis=1) == 1).all()          # exactly one spike in flight
@@ -41,7 +41,7 @@ def test_counter_is_period_doubling(bits):
     comp = compile_system(sysm)
     P = 2 ** bits
     steps = 3 * P + 2 * bits + 8
-    cfgs, emis, alive = run_trace(comp, steps=steps, policy="first")
+    cfgs, emis, alive, *_ = run_trace(comp, steps=steps, policy="first")
     cfgs, emis = np.asarray(cfgs), np.asarray(emis)
     assert np.asarray(alive).all()        # deterministic, never dies
 

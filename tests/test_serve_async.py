@@ -78,7 +78,7 @@ def test_full_group_flushes_without_deadline_or_close():
                 for s in range(4)]
         for s, fut in enumerate(futs):
             got = fut.result(timeout=TIMEOUT)
-            c, _, _ = run_trace(PI, steps=3, policy="random", seed=s)
+            c, _, _, *_ = run_trace(PI, steps=3, policy="random", seed=s)
             np.testing.assert_array_equal(got.configs, np.asarray(c))
         assert svc.num_device_calls == 1
     finally:
@@ -91,7 +91,7 @@ def test_partial_group_flushes_at_deadline():
     try:
         fut = svc.submit(TraceRequest(PI, steps=3, policy="random", seed=5))
         got = fut.result(timeout=TIMEOUT)   # << batch_size: deadline fires
-        c, e, _ = run_trace(PI, steps=3, policy="random", seed=5)
+        c, e, _, *_ = run_trace(PI, steps=3, policy="random", seed=5)
         np.testing.assert_array_equal(got.configs, np.asarray(c))
         np.testing.assert_array_equal(got.emissions, np.asarray(e))
     finally:
@@ -124,7 +124,7 @@ def test_cancelled_future_does_not_kill_the_drain_thread():
             TraceRequest(PI, steps=3, policy="random", seed=3)))
         for s in (0, 2, 3):
             got = futs[s].result(timeout=TIMEOUT)   # siblings unharmed
-            c, _, _ = run_trace(PI, steps=3, policy="random", seed=s)
+            c, _, _, *_ = run_trace(PI, steps=3, policy="random", seed=s)
             np.testing.assert_array_equal(got.configs, np.asarray(c))
         assert futs[1].cancelled()
         # the thread survived: a later submission still serves
@@ -157,7 +157,7 @@ def test_flush_error_propagates_into_futures_and_thread_survives():
         # the drain thread must survive a failed flush and serve the next
         good = svc.submit(TraceRequest(PI, steps=3, seed=1))
         got = good.result(timeout=TIMEOUT)
-        c, _, _ = run_trace(PI, steps=3, seed=1)
+        c, _, _, *_ = run_trace(PI, steps=3, seed=1)
         np.testing.assert_array_equal(got.configs, np.asarray(c))
 
 
@@ -196,7 +196,7 @@ def test_failed_sync_drain_keeps_all_requests_for_retry(failing_call):
     assert svc.pending == 0
     assert set(results) == set(tickets)
     for s, t in enumerate(tickets):
-        c, _, _ = run_trace(PI, steps=3, policy="random", seed=s)
+        c, _, _, *_ = run_trace(PI, steps=3, policy="random", seed=s)
         np.testing.assert_array_equal(results[t].configs, np.asarray(c))
 
 
@@ -210,7 +210,7 @@ def test_mixed_step_counts_share_one_group_and_one_call():
     for t, r in zip(tickets, reqs):
         got = results[t]
         assert got.configs.shape[0] == r.steps   # sliced to the request
-        c, e, a = run_trace(PI, steps=r.steps, policy=r.policy, seed=r.seed)
+        c, e, a, *_ = run_trace(PI, steps=r.steps, policy=r.policy, seed=r.seed)
         np.testing.assert_array_equal(got.configs, np.asarray(c))
         np.testing.assert_array_equal(got.emissions, np.asarray(e))
         np.testing.assert_array_equal(got.alive, np.asarray(a))
@@ -227,7 +227,7 @@ def test_compile_cache_evicts_at_cap_and_stays_correct():
     assert len(svc._compile_cache) == 2
     results = svc.drain()
     for sysm, t in zip(systems + [systems[0]], tickets + [t_again]):
-        c, _, _ = run_trace(sysm, steps=4, seed=1)
+        c, _, _, *_ = run_trace(sysm, steps=4, seed=1)
         np.testing.assert_array_equal(results[t].configs, np.asarray(c))
 
 
@@ -237,7 +237,7 @@ def test_precompiled_systems_bypass_the_compile_cache():
     t = svc.submit(TraceRequest(comp, steps=4, seed=2))
     assert len(svc._compile_cache) == 0
     got = svc.drain()[t]
-    c, _, _ = run_trace(comp, steps=4, seed=2)
+    c, _, _, *_ = run_trace(comp, steps=4, seed=2)
     np.testing.assert_array_equal(got.configs, np.asarray(c))
 
 
@@ -274,7 +274,7 @@ def test_async_mesh_service_end_to_end():
                 for s in range(6)]
         for s, fut in enumerate(futs):
             got = fut.result(timeout=TIMEOUT)
-            c, e, _ = run_trace(PI, steps=6, policy="random", seed=s)
+            c, e, _, *_ = run_trace(PI, steps=6, policy="random", seed=s)
             np.testing.assert_array_equal(got.configs, np.asarray(c))
             np.testing.assert_array_equal(got.emissions, np.asarray(e))
 
@@ -297,5 +297,5 @@ def test_submissions_from_many_threads_all_resolve():
         for th in threads:
             th.join()
     for seed, got in out.items():
-        c, _, _ = run_trace(PI, steps=4, policy="random", seed=seed)
+        c, _, _, *_ = run_trace(PI, steps=4, policy="random", seed=seed)
         np.testing.assert_array_equal(got.configs, np.asarray(c))

@@ -12,7 +12,7 @@ a hole.  Two checks against a baseline:
 
    * a **tier** is the first ``/``-segment of a row name (``snp_step``,
      ``snp_step_large``, ``hybrid``, ``hybrid_kernel``, ``explore``,
-     ``serve``, ...);
+     ``serve``, ``serve_fault``, ...);
    * a **backend/mode key** is any later segment from the known
      vocabulary (step-backend registry names, plan encodings, serve
      modes; ``meshN`` normalizes to ``mesh`` so the faked device count
