@@ -36,6 +36,12 @@ Three tiers:
   §3 "Kernel lowering").  On CPU the kernel runs interpret mode, so rows
   are structure/correctness proxies, not TPU wall-times
   (EXPERIMENTS.md §Hybrid-kernel).
+* the **delays tier** prices the second semantics tier: the same
+  topology stepped under the paper's delay-free transition and under the
+  delayed transition (3m-wide ``[spikes | countdown | pending]`` state,
+  reopen fan-out, gated reception — DESIGN.md "Delayed semantics") at
+  m in {512, 2048}, so the per-row ``x_no_delays`` factor is the cost of
+  turning delays on for that backend (EXPERIMENTS.md §Delays);
 * the **auto tier** replays the standard-sweep shapes and scores the
   query planner (``SystemPlan.for_system(mode="auto")``,
   ``repro.core.autotune``) against the fixed backends: per shape it
@@ -64,7 +70,7 @@ import numpy as np
 from repro.core.backend import (PallasBackend, SparsePallasBackend,
                                 get_backend, resolve_kernel)
 from repro.core.generators import (power_law, random_system, ring_lattice,
-                                   scaled_pi, torus)
+                                   scaled_pi, torus, with_delays)
 from repro.core.plan import SystemPlan
 
 # Every registered backend family is swept; the kernel backends get
@@ -226,6 +232,44 @@ def hybrid_kernel_rows(quick: bool = False):
     return out
 
 
+def delays_rows(quick: bool = False):
+    """Semantics tier: delayed vs delay-free step cost on one topology.
+
+    Per backend and size, the ``no_delays`` row is the baseline (the
+    paper's transition on the plain system) and the ``delays`` row steps
+    the same topology with mixed per-rule delays (``d = k mod 3``) under
+    the 3m-wide delayed state; its derived field is the delayed/plain
+    ratio — the price of the countdown/pending bookkeeping, the reopen
+    fan-out matmul (dense) / second rank table (sparse) and the gated
+    reception.  Only the jnp backends sweep here: the interpret-mode
+    kernels are correctness proxies (their delayed stages are covered by
+    the equivalence matrix in tests/), not wall-times worth charting."""
+    reps = 2 if quick else 3
+    sizes = ((512, 64, 16),) if quick else ((512, 64, 16), (2048, 32, 16))
+    plans = {"ref": "dense", "sparse": "ell"}
+    rng = np.random.default_rng(11)
+    out = []
+    for m, B, T in sizes:
+        base = random_system(m, 2, min(0.2, 8 / m), seed=1)
+        sysd = with_delays(base, lambda k, r: k % 3)
+        spikes = rng.integers(0, 4, size=(B, m))
+        cfgs0 = jnp.asarray(spikes, jnp.int32)
+        cfgsd = jnp.asarray(
+            np.concatenate([spikes, np.zeros((B, 2 * m), np.int64)], axis=1),
+            jnp.int32)
+        for name, enc in plans.items():
+            be = get_backend(name)
+            us0 = _time(_expand, cfgs0, be.compile(base), T, be, reps=reps)
+            out.append((f"delays/{name}/no_delays/m{m}_B{B}_T{T}", us0,
+                        f"{B * T / us0 * 1e3:.1f}exp/ms"))
+            compd = be.compile(
+                sysd, plan=SystemPlan(encoding=enc, semantics="delays"))
+            usd = _time(_expand, cfgsd, compd, T, be, reps=reps)
+            out.append((f"delays/{name}/delays/m{m}_B{B}_T{T}", usd,
+                        f"{usd / us0:.2f}x_no_delays"))
+    return out
+
+
 def auto_rows(quick: bool = False):
     """Planner tier: what ``mode="auto"`` actually costs vs a fixed
     backend choice, at the standard-sweep shapes.
@@ -306,6 +350,7 @@ def main(path: str = "BENCH_snp.json", quick: bool = False) -> None:
             for name, us, derived in (rows(quick) + large_rows(quick)
                                       + hybrid_rows(quick)
                                       + hybrid_kernel_rows(quick)
+                                      + delays_rows(quick)
                                       + auto_rows(quick)
                                       + bench_tree.rows(quick))
         ],

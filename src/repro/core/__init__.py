@@ -38,35 +38,38 @@ from .backend import (PallasBackend, RefBackend, SparseBackend,
                       SparsePallasBackend, StepBackend, available_backends,
                       get_backend, lower_with_backend, register_backend,
                       resolve_entry, resolve_entry_info, resolve_kernel,
-                      supports_sharded)
+                      supported_under, supports_sharded)
 from .engine import (ExploreResult, TraceOut, emission_gaps, explore,
                      run_trace, run_traces, successor_set)
 from .failover import (DEGRADE_ORDER, DegradeEvent, add_degrade_listener,
                        degrade_candidates, remove_degrade_listener,
                        run_with_failover)
+from .generators import with_delays
 from .matrix import (CompiledSNP, CompiledSparseSNP, compile_system,
-                     compile_system_sparse, is_compiled)
+                     compile_system_sparse, is_compiled, is_delayed)
 from .plan import (DenseShardArrays, KernelConfig, ShardedCompiled,
                    SystemPlan, auto_hub_threshold, compile_sharded,
                    is_sharded, lower_shard_dense)
-from .semantics import (applicability, branch_info, next_configs,
-                        sparse_next_configs, spiking_vectors)
+from .semantics import (applicability, branch_info, delayed_next_configs,
+                        next_configs, sparse_delayed_next_configs,
+                        sparse_next_configs, spiking_vectors, split_state)
 from .system import Rule, SNPSystem, paper_pi
 
 __all__ = [
     "SNPSystem", "Rule", "paper_pi",
     "CompiledSNP", "CompiledSparseSNP", "compile_system",
-    "compile_system_sparse", "is_compiled",
+    "compile_system_sparse", "is_compiled", "is_delayed",
     "SystemPlan", "KernelConfig", "ShardedCompiled", "DenseShardArrays",
     "auto_hub_threshold", "compile_sharded", "is_sharded",
     "lower_shard_dense",
     "applicability", "branch_info", "next_configs", "sparse_next_configs",
-    "spiking_vectors",
+    "spiking_vectors", "split_state", "delayed_next_configs",
+    "sparse_delayed_next_configs", "with_delays",
     "StepBackend", "RefBackend", "PallasBackend", "SparseBackend",
     "SparsePallasBackend",
     "register_backend", "get_backend", "available_backends",
     "lower_with_backend", "resolve_entry", "resolve_entry_info",
-    "resolve_kernel", "supports_sharded",
+    "resolve_kernel", "supported_under", "supports_sharded",
     "DEGRADE_ORDER", "DegradeEvent", "add_degrade_listener",
     "degrade_candidates", "remove_degrade_listener", "run_with_failover",
     "explore", "ExploreResult", "TraceOut", "successor_set",

@@ -110,14 +110,18 @@ _ROW_SHAPE = re.compile(r"m(\d+)_n(\d+)_B(\d+)_T(\d+)$")
 
 @dataclasses.dataclass(frozen=True)
 class WorkloadSignature:
-    """The ``(m, n, K_in, B, T)`` key a tuning decision is valid for:
-    neurons, rules, max in-degree, frontier batch, branch cap."""
+    """The ``(m, n, K_in, B, T, semantics)`` key a tuning decision is
+    valid for: neurons, rules, max in-degree, frontier batch, branch cap,
+    transition-semantics tier.  Delayed steps cost more than delay-free
+    ones at the same shape (3m-wide state, the reopen/gate stage), so the
+    two tiers never share a cache entry."""
 
     m: int
     n: int
     kin: int
     B: int
     T: int
+    semantics: str = "no_delays"
 
     @property
     def work(self) -> float:
@@ -125,13 +129,19 @@ class WorkloadSignature:
         the paper's ``C' = C + S·M_Π`` form (S is (B·T, n), M_Π (n, m))."""
         return float(self.B) * self.T * self.n * self.m
 
+    def _suffix(self) -> str:
+        # Suffix only under delays: every pre-existing cache/seed key
+        # stays valid for the default tier.
+        return "_delays" if self.semantics == "delays" else ""
+
     def key(self) -> str:
-        return f"m{self.m}_n{self.n}_kin{self.kin}_B{self.B}_T{self.T}"
+        return (f"m{self.m}_n{self.n}_kin{self.kin}"
+                f"_B{self.B}_T{self.T}{self._suffix()}")
 
     def wildcard_key(self) -> str:
         """Key with the in-degree wildcarded — bench-seeded entries only
         know the ``(m, n, B, T)`` shape."""
-        return f"m{self.m}_n{self.n}_kin*_B{self.B}_T{self.T}"
+        return f"m{self.m}_n{self.n}_kin*_B{self.B}_T{self.T}{self._suffix()}"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,15 +169,16 @@ class TunedChoice:
 
 
 def signature_of(system: SNPSystem, *,
-                 workload: Optional[Tuple[int, int]] = None
-                 ) -> WorkloadSignature:
+                 workload: Optional[Tuple[int, int]] = None,
+                 semantics: str = "no_delays") -> WorkloadSignature:
     """The workload signature of running ``system`` at ``workload=(B, T)``
     (``DEFAULT_WORKLOAD`` when the caller has no hint)."""
     B, T = workload if workload is not None else DEFAULT_WORKLOAD
     in_deg = _in_degrees(system)
     kin = int(in_deg.max()) if in_deg.size else 0
     return WorkloadSignature(m=system.num_neurons, n=system.num_rules,
-                             kin=kin, B=int(B), T=int(T))
+                             kin=kin, B=int(B), T=int(T),
+                             semantics=semantics)
 
 
 # ---------------------------------------------------------------------------
@@ -345,16 +356,21 @@ def lookup(sig: WorkloadSignature, *,
         for table, source in ((disk, None), (seeds, "seed")):
             if key in table:
                 choice = _entry_to_choice(table[key], source=source)
-                if choice is not None and _usable(choice, sharded=sharded):
+                if choice is not None and _usable(
+                        choice, sharded=sharded, semantics=sig.semantics):
                     return choice
     return None
 
 
-def _usable(choice: TunedChoice, *, sharded: bool) -> bool:
+def _usable(choice: TunedChoice, *, sharded: bool,
+            semantics: str = "no_delays") -> bool:
     from .backend import get_backend
-    sup = get_backend(choice.backend).supported_encodings()
+    sup = get_backend(choice.backend).supported_encodings(
+        semantics=semantics)
     if sharded:
         return "sharded" in sup
+    if not sup:
+        return False
     return choice.encoding == "auto" or choice.encoding in sup
 
 
@@ -408,8 +424,9 @@ def model_choice(sig: WorkloadSignature, *,
     for backend, (p, logA, wmax) in sorted(fits.items()):
         if backend not in names:
             continue
-        if sharded and "sharded" not in \
-                get_backend(backend).supported_encodings():
+        sup = get_backend(backend).supported_encodings(
+            semantics=sig.semantics)
+        if not sup or (sharded and "sharded" not in sup):
             continue
         if (backend in _INTERPRET_KERNELS
                 and sig.work > _EXTRAPOLATION_GUARD * wmax):
@@ -443,8 +460,9 @@ def default_candidates(sig: WorkloadSignature, *,
     sparse_blocks = [(8, 16, None), (4, 8, None)]
     out: List[TunedChoice] = []
     for name in sorted(available_backends()):
-        sup = get_backend(name).supported_encodings()
-        if sharded and "sharded" not in sup:
+        sup = get_backend(name).supported_encodings(
+            semantics=sig.semantics)
+        if not sup or (sharded and "sharded" not in sup):
             continue
         if name in _INTERPRET_KERNELS:
             fit = _fitted_curves().get(name)
@@ -497,15 +515,21 @@ def measure_best(system: SNPSystem, sig: WorkloadSignature, *,
     cands = candidates if candidates is not None else \
         default_candidates(sig, sharded=sharded)
     rng = np.random.default_rng(0)
-    configs = jnp.asarray(
-        rng.integers(0, 5, size=(sig.B, system.num_neurons)), jnp.int32)
+    m = system.num_neurons
+    spikes = rng.integers(0, 5, size=(sig.B, m))
+    if sig.semantics == "delays":
+        # Delayed state rows are 3m wide: [spikes | countdown | pending].
+        spikes = np.concatenate(
+            [spikes, np.zeros((sig.B, 2 * m), spikes.dtype)], axis=1)
+    configs = jnp.asarray(spikes, jnp.int32)
     best: Optional[TunedChoice] = None
     for cand in cands:
         try:
             # Measure at the single-device lowering even when planning a
             # sharded run: the per-shard kernel is the same body, and a
             # measure sweep must not commandeer the device mesh.
-            plan = choice_to_plan(cand, system, mode="static")
+            plan = choice_to_plan(cand, system, mode="static",
+                                  semantics=sig.semantics)
             be = resolve_kernel(get_backend(cand.backend), plan)
             comp = be.compile(system, plan=plan)
             us = _time_step(be, comp, configs, sig.T, reps=reps)
@@ -528,22 +552,27 @@ def measure_best(system: SNPSystem, sig: WorkloadSignature, *,
 
 
 def choice_to_plan(choice: TunedChoice, system: SNPSystem, *,
-                   num_shards: int = 1, mode: str = "auto"
+                   num_shards: int = 1, mode: str = "auto",
+                   semantics: str = "no_delays"
                    ) -> Optional[SystemPlan]:
     """A :class:`SystemPlan` realizing ``choice`` on ``system``, or
     ``None`` when the choice can't be realized (e.g. a cache entry naming
-    an encoding its backend doesn't support).  ``encoding="auto"``
-    choices resolve sparse-family backends through the degree heuristic
-    (ELL vs hybrid), everything else to the backend's native layout."""
+    an encoding its backend doesn't support under the semantics tier).
+    ``encoding="auto"`` choices resolve sparse-family backends through
+    the degree heuristic (ELL vs hybrid), everything else to the
+    backend's native layout."""
     from .backend import get_backend
-    sup = get_backend(choice.backend).supported_encodings()
+    sup = get_backend(choice.backend).supported_encodings(
+        semantics=semantics)
+    if not sup:
+        return None
     if num_shards > 1:
         if "sharded" not in sup:
             return None
         # Per-shard lowerings are ELL-only (compile_sharded).
         return SystemPlan(encoding="ell", num_shards=num_shards,
                           mode=mode, backend=choice.backend,
-                          kernel=choice.kernel())
+                          kernel=choice.kernel(), semantics=semantics)
     encoding, hub = choice.encoding, choice.hub_threshold
     if encoding == "auto" and sup[0] == "ell":
         in_deg = _in_degrees(system)
@@ -554,16 +583,18 @@ def choice_to_plan(choice: TunedChoice, system: SNPSystem, *,
     if encoding != "auto" and encoding not in sup:
         return None
     return SystemPlan(encoding=encoding, hub_threshold=hub, mode=mode,
-                      backend=choice.backend, kernel=choice.kernel())
+                      backend=choice.backend, kernel=choice.kernel(),
+                      semantics=semantics)
 
 
 def plan_for(system: SNPSystem, *, num_shards: int = 1,
              workload: Optional[Tuple[int, int]] = None,
-             measure: bool = False) -> Optional[SystemPlan]:
+             measure: bool = False,
+             semantics: str = "no_delays") -> Optional[SystemPlan]:
     """The decision flow (module docstring): measure inline when asked,
     else cache → analytic model.  ``None`` sends the caller
     (``SystemPlan.for_system``) back to the static degree heuristic."""
-    sig = signature_of(system, workload=workload)
+    sig = signature_of(system, workload=workload, semantics=semantics)
     sharded = num_shards > 1
     if measure:
         choice = measure_best(system, sig, num_shards=num_shards)
@@ -574,4 +605,5 @@ def plan_for(system: SNPSystem, *, num_shards: int = 1,
         mode = "auto"
     if choice is None:
         return None
-    return choice_to_plan(choice, system, num_shards=num_shards, mode=mode)
+    return choice_to_plan(choice, system, num_shards=num_shards, mode=mode,
+                          semantics=semantics)

@@ -63,10 +63,11 @@ from typing import Dict, Optional, Protocol, Tuple, Union, runtime_checkable
 import jax.numpy as jnp
 
 from .matrix import (CompiledAny, CompiledSNP, CompiledSparseSNP,
-                     compile_system, compile_system_sparse)
+                     compile_system, compile_system_sparse, is_delayed)
 from .plan import (KernelConfig, ShardedCompiled, SystemPlan,
                    compile_sharded, is_sharded, lower_shard_dense)
-from .semantics import StepOut, next_configs, sparse_next_configs
+from .semantics import (StepOut, delayed_next_configs, next_configs,
+                        sparse_delayed_next_configs, sparse_next_configs)
 from .system import SNPSystem
 
 __all__ = [
@@ -83,6 +84,7 @@ __all__ = [
     "resolve_entry",
     "resolve_entry_info",
     "resolve_kernel",
+    "supported_under",
     "supports_sharded",
 ]
 
@@ -145,13 +147,19 @@ class StepBackend(Protocol):
         """
         ...
 
-    def supported_encodings(self) -> Tuple[str, ...]:
-        """Plan encodings this backend's lowering can realize — a subset
-        of ``("dense", "ell", "hybrid", "sharded")``, **first entry = the
-        native layout** ``encoding="auto"`` resolves to.  ``"sharded"``
-        additionally marks that the backend's step can consume one shard
-        of a :class:`~repro.core.plan.ShardedCompiled` inside
-        ``explore_distributed``."""
+    def supported_encodings(self,
+                            semantics: str = "no_delays"
+                            ) -> Tuple[str, ...]:
+        """Plan encodings this backend's lowering can realize *under the
+        given semantics tier* — a subset of ``("dense", "ell", "hybrid",
+        "sharded")``, **first entry = the native layout**
+        ``encoding="auto"`` resolves to.  ``"sharded"`` additionally marks
+        that the backend's step can consume one shard of a
+        :class:`~repro.core.plan.ShardedCompiled` inside
+        ``explore_distributed``.  An empty tuple means the backend cannot
+        run that semantics at all; the built-ins all run
+        ``semantics="delays"`` single-device but none shard it yet, so
+        a sharded delays plan raises (never a silent downgrade)."""
         ...
 
     def lower(self, compiled: "CompiledLike",
@@ -188,13 +196,29 @@ def _plan_or_default(plan: Optional[SystemPlan]) -> SystemPlan:
     return SystemPlan() if plan is None else plan
 
 
+def supported_under(backend: "StepBackend", semantics: str
+                    ) -> Tuple[str, ...]:
+    """``backend.supported_encodings`` under a semantics tier, tolerating
+    third-party backends that predate the semantics parameter: those keep
+    answering for ``no_delays`` and are declared incapable (empty tuple)
+    of anything else."""
+    sup_fn = getattr(backend, "supported_encodings", None)
+    if sup_fn is None:
+        return ()
+    try:
+        return sup_fn(semantics=semantics)
+    except TypeError:
+        return sup_fn() if semantics == "no_delays" else ()
+
+
 def _registry_compile(backend: "StepBackend", system: SNPSystem,
                       plan: Optional[SystemPlan]) -> CompiledLike:
     """The shared ``compile`` template every registered backend delegates
-    to: resolve the plan's encoding against ``supported_encodings()``,
-    build it through the shared compilers, hand it to ``lower``."""
+    to: resolve the plan's encoding against ``supported_encodings()``
+    under the plan's semantics tier, build it through the shared
+    compilers, hand it to ``lower``."""
     plan = _plan_or_default(plan)
-    sup = backend.supported_encodings()
+    sup = backend.supported_encodings(semantics=plan.semantics)
     if plan.num_shards > 1:
         # Sharded plans lower to per-shard ELL encodings for every
         # backend (DESIGN.md §2); compile_sharded owns the encoding
@@ -203,20 +227,23 @@ def _registry_compile(backend: "StepBackend", system: SNPSystem,
         if "sharded" not in sup:
             raise ValueError(
                 f"backend {backend.name!r} cannot realize a neuron-axis "
-                f"sharded plan (supported encodings: {sup}); pick a "
-                "backend whose lowering supports 'sharded'")
+                f"sharded plan under semantics={plan.semantics!r} "
+                f"(supported encodings: {sup}); pick a backend whose "
+                "lowering supports 'sharded' there")
         return backend.lower(compile_sharded(system, plan), plan)
     enc = sup[0] if plan.encoding == "auto" else plan.encoding
     if enc not in sup:
         raise ValueError(
             f"backend {backend.name!r} cannot realize plan encoding "
-            f"{plan.encoding!r} (supported: {sup}); pick a matching "
-            "backend or drop the plan")
+            f"{plan.encoding!r} under semantics={plan.semantics!r} "
+            f"(supported: {sup}); pick a matching backend or drop the "
+            "plan")
     if enc == "dense":
-        built = compile_system(system)
+        built = compile_system(system, semantics=plan.semantics)
     else:
         built = compile_system_sparse(
-            system, hub_threshold=plan.resolved_hub_threshold(system))
+            system, hub_threshold=plan.resolved_hub_threshold(system),
+            semantics=plan.semantics)
     return backend.lower(built, plan)
 
 
@@ -299,7 +326,7 @@ def resolve_entry_info(system, backend: Optional["BackendLike"],
                 and isinstance(system, SNPSystem)):
             plan = SystemPlan.for_system(
                 system, num_shards=plan.num_shards, workload=workload,
-                mode=plan.mode)
+                mode=plan.mode, semantics=plan.semantics)
             planned = True
         name = plan.backend
         if name is None:
@@ -357,8 +384,12 @@ class RefBackend:
     pad_multiple: int = 1
     materializes_spiking: bool = True
 
-    def supported_encodings(self) -> Tuple[str, ...]:
-        return ("dense", "sharded")
+    def supported_encodings(self,
+                            semantics: str = "no_delays"
+                            ) -> Tuple[str, ...]:
+        # Delays run single-device only: the halo exchange has no notion
+        # of countdown/pending yet, so sharded delays must raise.
+        return ("dense",) if semantics == "delays" else ("dense", "sharded")
 
     def lower(self, compiled: CompiledLike, plan: SystemPlan) -> CompiledLike:
         _check_kernel_plan(self, plan)  # no kernel: plan.kernel is an error
@@ -370,6 +401,8 @@ class RefBackend:
 
     def expand(self, configs: jnp.ndarray, comp: CompiledSNP,
                max_branches: int) -> StepOut:
+        if is_delayed(comp):
+            return delayed_next_configs(configs, comp, max_branches)
         return next_configs(configs, comp, max_branches)
 
 
@@ -408,8 +441,10 @@ class PallasBackend:
         """A re-blocked instance (``None`` fields keep this one's)."""
         return resolve_kernel(self, SystemPlan(kernel=kernel))
 
-    def supported_encodings(self) -> Tuple[str, ...]:
-        return ("dense", "sharded")
+    def supported_encodings(self,
+                            semantics: str = "no_delays"
+                            ) -> Tuple[str, ...]:
+        return ("dense",) if semantics == "delays" else ("dense", "sharded")
 
     def lower(self, compiled: CompiledLike, plan: SystemPlan) -> CompiledLike:
         _check_kernel_plan(self, plan)
@@ -427,9 +462,9 @@ class PallasBackend:
         # is absent, and avoids a core <-> kernels import cycle at load.
         from repro.kernels.snp_step.ops import snp_step
 
-        m = configs.shape[-1]
+        w = configs.shape[-1]  # m, or 3m under delayed semantics
         batch = configs.shape[:-1]
-        flat = configs.reshape(-1, m)
+        flat = configs.reshape(-1, w)
         out, valid, emis, overflow = snp_step(
             flat, comp, max_branches=max_branches,
             block_b=self.block_b, block_t=self.block_t,
@@ -437,7 +472,7 @@ class PallasBackend:
         )
         T = max_branches
         return StepOut(
-            configs=out.reshape(*batch, T, m),
+            configs=out.reshape(*batch, T, w),
             valid=valid.reshape(*batch, T),
             emissions=emis.reshape(*batch, T),
             overflow=overflow.reshape(batch),
@@ -463,8 +498,11 @@ class SparseBackend:
     pad_multiple: int = 1
     materializes_spiking: bool = False
 
-    def supported_encodings(self) -> Tuple[str, ...]:
-        return ("ell", "hybrid", "sharded")
+    def supported_encodings(self,
+                            semantics: str = "no_delays"
+                            ) -> Tuple[str, ...]:
+        return ("ell", "hybrid") if semantics == "delays" \
+            else ("ell", "hybrid", "sharded")
 
     def lower(self, compiled: CompiledLike, plan: SystemPlan) -> CompiledLike:
         _check_kernel_plan(self, plan)  # no kernel: plan.kernel is an error
@@ -477,8 +515,10 @@ class SparseBackend:
 
     def expand(self, configs: jnp.ndarray, comp: CompiledSparseSNP,
                max_branches: int) -> StepOut:
-        return sparse_next_configs(
-            configs, _require_sparse(comp, self.name), max_branches)
+        comp = _require_sparse(comp, self.name)
+        if is_delayed(comp):
+            return sparse_delayed_next_configs(configs, comp, max_branches)
+        return sparse_next_configs(configs, comp, max_branches)
 
 
 @dataclass(frozen=True)
@@ -518,8 +558,11 @@ class SparsePallasBackend:
         """A re-blocked instance (``None`` fields keep this one's)."""
         return resolve_kernel(self, SystemPlan(kernel=kernel))
 
-    def supported_encodings(self) -> Tuple[str, ...]:
-        return ("ell", "hybrid", "sharded")
+    def supported_encodings(self,
+                            semantics: str = "no_delays"
+                            ) -> Tuple[str, ...]:
+        return ("ell", "hybrid") if semantics == "delays" \
+            else ("ell", "hybrid", "sharded")
 
     def lower(self, compiled: CompiledLike, plan: SystemPlan) -> CompiledLike:
         _check_kernel_plan(self, plan)
@@ -548,9 +591,9 @@ class SparsePallasBackend:
 
         comp = self.lower(_require_sparse(comp, self.name),
                           SystemPlan.default())
-        m = configs.shape[-1]
+        w = configs.shape[-1]  # m, or 3m under delayed semantics
         batch = configs.shape[:-1]
-        flat = configs.reshape(-1, m)
+        flat = configs.reshape(-1, w)
         out, valid, emis, overflow = snp_step_sparse(
             flat, comp, max_branches=max_branches,
             block_b=self.block_b, block_t=self.block_t,
@@ -558,7 +601,7 @@ class SparsePallasBackend:
         )
         T = max_branches
         return StepOut(
-            configs=out.reshape(*batch, T, m),
+            configs=out.reshape(*batch, T, w),
             valid=valid.reshape(*batch, T),
             emissions=emis.reshape(*batch, T),
             overflow=overflow.reshape(batch),

@@ -106,7 +106,9 @@ class ExploreResult:
 
 def _init_state(comp: CompiledAny, frontier_cap: int, visited_cap: int,
                 init: Optional[jnp.ndarray] = None) -> ExploreState:
-    m = comp.num_neurons
+    # State row width: m for the paper's systems, 3m under delayed
+    # semantics ([spikes | countdown | pending] — DESIGN.md).
+    m = getattr(comp, "state_width", comp.num_neurons)
     c0 = comp.init_config if init is None else jnp.asarray(init, jnp.int32)
     frontier = jnp.zeros((frontier_cap, m), jnp.int32).at[0].set(c0)
     hi0, lo0 = config_hash(c0)

@@ -105,9 +105,12 @@ def degrade_candidates(backend, plan: SystemPlan
     if name not in DEGRADE_ORDER:
         return []
     out: List[Tuple[object, SystemPlan]] = []
+    semantics = getattr(plan, "semantics", "no_delays")
     for cand_name in DEGRADE_ORDER[DEGRADE_ORDER.index(name) + 1:]:
         cand = get_backend(cand_name)
-        sup = cand.supported_encodings()
+        sup = cand.supported_encodings(semantics=semantics)
+        if not sup:
+            continue
         if plan.num_shards > 1 and "sharded" not in sup:
             continue
         if plan.encoding != "auto" and plan.encoding not in sup:

@@ -31,13 +31,14 @@ unusable past a few thousand neurons):
 
 from __future__ import annotations
 
+import dataclasses
 import random
-from typing import Optional, Tuple
+from typing import Callable, Optional, Sequence, Tuple, Union
 
 from .system import Rule, SNPSystem
 
 __all__ = ["ring", "nd_chain", "random_system", "counter", "scaled_pi",
-           "ring_lattice", "torus", "power_law"]
+           "ring_lattice", "torus", "power_law", "with_delays"]
 
 
 def ring(m: int, produce: int = 1) -> SNPSystem:
@@ -142,10 +143,7 @@ def scaled_pi(copies: int, covering: bool = True) -> SNPSystem:
     for c in range(copies):
         off = c * m0
         for r in base.rules:
-            rules.append(Rule(neuron=r.neuron + off, consume=r.consume,
-                              produce=r.produce, regex_base=r.regex_base,
-                              regex_period=r.regex_period,
-                              covering=r.covering))
+            rules.append(dataclasses.replace(r, neuron=r.neuron + off))
         syn += [(i + off, j + off) for (i, j) in base.synapses]
         init = init + tuple(base.initial_spikes)
     return SNPSystem(copies * m0, init, tuple(rules), tuple(syn),
@@ -281,3 +279,46 @@ def power_law(m: int, attach: int = 4, rules_per_neuron: int = 2,
     cap = "" if max_in is None else f"c{max_in}"
     return _sparse_family(f"power-law-{m}a{attach}{cap}", m, syn,
                           rules_per_neuron, max_spikes, seed)
+
+
+# ---------------------------------------------------------------------------
+# Delayed variants: every family above gains a semantics="delays" workload
+# by injecting per-rule firing delays into an existing system.
+# ---------------------------------------------------------------------------
+
+
+DelaySpec = Union[int, Sequence[int], Callable[[int, Rule], int]]
+
+
+def with_delays(system: SNPSystem, delays: DelaySpec) -> SNPSystem:
+    """A copy of ``system`` whose rules carry firing delays.
+
+    ``delays`` is one of:
+
+    * an ``int`` — every rule gets that delay;
+    * a sequence of ``len(system.rules)`` ints — per-rule delays in rule
+      order;
+    * a callable ``(rule_index, rule) -> int`` — e.g.
+      ``lambda k, r: k % 3`` for a deterministic mixed-delay variant.
+
+    The result only compiles under ``SystemPlan(semantics="delays")``
+    once any delay is nonzero (``compile_system`` refuses delayed rules
+    on the default tier); ``with_delays(sys, 0)`` is a delay-annotated
+    system that still runs on either tier and must match ``sys``
+    configuration-for-configuration under both."""
+    rules = system.rules
+    if callable(delays):
+        ds = [int(delays(k, r)) for k, r in enumerate(rules)]
+    elif isinstance(delays, int):
+        ds = [delays] * len(rules)
+    else:
+        ds = [int(d) for d in delays]
+        if len(ds) != len(rules):
+            raise ValueError(
+                f"delays has {len(ds)} entries, expected one per rule "
+                f"({len(rules)})")
+    new_rules = tuple(dataclasses.replace(r, delay=d)
+                      for r, d in zip(rules, ds))
+    suffix = "-delays" if any(ds) else "-delays0"
+    return dataclasses.replace(system, rules=new_rules,
+                               name=system.name + suffix)

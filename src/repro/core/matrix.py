@@ -42,13 +42,38 @@ __all__ = [
     "compile_system",
     "compile_system_sparse",
     "is_compiled",
+    "is_delayed",
 ]
+
+_SEMANTICS = ("no_delays", "delays")
+
+
+def _check_semantics(system: SNPSystem, semantics: str) -> bool:
+    """Validate the semantics axis at compile time; returns ``True`` for
+    the delayed tier.  Compiling a system that carries nonzero delays
+    under the paper's ``no_delays`` semantics raises — the delays would
+    silently be ignored otherwise."""
+    if semantics not in _SEMANTICS:
+        raise ValueError(
+            f"semantics must be one of {_SEMANTICS}, got {semantics!r}")
+    if semantics == "no_delays" and system.max_delay > 0:
+        raise ValueError(
+            f"system {system.name!r} has rules with delay > 0; compile it "
+            "under SystemPlan(semantics=\"delays\") (the paper's matrix "
+            "semantics is delay-free)")
+    return semantics == "delays"
 
 
 class CompiledSNP(NamedTuple):
     """Dense device-array encoding of an SNP system.
 
     Shapes: ``m`` neurons, ``n`` rules (sorted by neuron).
+
+    The trailing delay fields are ``None`` under the default
+    ``no_delays`` semantics (the historical encoding, bit-identical to
+    pre-delay builds); ``SystemPlan(semantics="delays")`` populates them
+    and widens ``init_config`` to the ``3m`` state layout
+    ``[spikes | countdown | pending]`` (DESIGN.md §2 "Delayed semantics").
     """
 
     M: jnp.ndarray              # (n, m) int32 — spiking transition matrix
@@ -60,8 +85,16 @@ class CompiledSNP(NamedTuple):
     covering: jnp.ndarray       # (n,)  bool
     neuron_onehot: jnp.ndarray  # (n, m) int8 — rule->neuron incidence
     env_produce: jnp.ndarray    # (n,)  int32 — spikes emitted to environment
-    init_config: jnp.ndarray    # (m,)  int32 — C_0
+    init_config: jnp.ndarray    # (m,) int32 — C_0 (3m under delays)
     rule_order: Tuple[int, ...]  # original rule index per sorted position
+    # -- delayed-semantics extension (None == no_delays encoding) ---------
+    delay: jnp.ndarray = None       # (n,) int32 — per-rule firing delay
+    adjacency: jnp.ndarray = None   # (m, m) int32 — 0/1 synapse matrix
+    #   (src, dst); carries reopening neurons' pending spikes to their
+    #   out-neighbors, which M's per-rule rows cannot express.
+    out_neuron: jnp.ndarray = None  # () int32 — output neuron, or m if
+    #   none; under delays env emission is the *emit-now* amount at this
+    #   neuron (time-shifted by d), not the per-rule env_produce.
 
     @property
     def num_rules(self) -> int:
@@ -70,6 +103,12 @@ class CompiledSNP(NamedTuple):
     @property
     def num_neurons(self) -> int:
         return self.M.shape[1]
+
+    @property
+    def state_width(self) -> int:
+        """Columns of one configuration row: ``m``, or ``3m`` under the
+        delayed semantics (``[spikes | countdown | pending]``)."""
+        return self.init_config.shape[0]
 
 
 class CompiledSparseSNP(NamedTuple):
@@ -119,6 +158,10 @@ class CompiledSparseSNP(NamedTuple):
     #    kernel refuses those instead of silently downgrading.
     coo_bounds: jnp.ndarray = None   # (Hn+1,) int32 — per-hub tail offsets
     hub_slot: jnp.ndarray = None     # (m,) int32 — neuron -> hub index or Hn
+    # -- delayed-semantics extension (None == no_delays encoding) ---------
+    delay: jnp.ndarray = None        # (n,) int32 — per-rule firing delay
+    #   The reopen-pending fanout reuses in_idx/COO (the same in-adjacency
+    #   the fired produce rides), so no extra adjacency array is needed.
 
     @property
     def num_rules(self) -> int:
@@ -126,6 +169,12 @@ class CompiledSparseSNP(NamedTuple):
 
     @property
     def num_neurons(self) -> int:
+        return self.seg_start.shape[0]
+
+    @property
+    def state_width(self) -> int:
+        """Columns of one configuration row: ``m``, or ``3m`` under the
+        delayed semantics (``[spikes | countdown | pending]``)."""
         return self.init_config.shape[0]
 
     @property
@@ -158,6 +207,13 @@ CompiledAny = Union[CompiledSNP, CompiledSparseSNP]
 def is_compiled(obj) -> bool:
     """True for any compiled encoding (dense or sparse)."""
     return isinstance(obj, (CompiledSNP, CompiledSparseSNP))
+
+
+def is_delayed(comp) -> bool:
+    """True when ``comp`` was compiled under the delayed semantics tier
+    (its per-rule delay vector is populated and its configuration rows
+    carry the ``[spikes | countdown | pending]`` layout)."""
+    return getattr(comp, "delay", None) is not None
 
 
 # ---------------------------------------------------------------------------
@@ -247,9 +303,29 @@ def _rule_row_entries(low: _Lowered):
         prod_rules, deg_r
 
 
-def compile_system(system: SNPSystem) -> CompiledSNP:
+def _delay_vector(low: _Lowered) -> np.ndarray:
+    return np.fromiter((r.delay for r in low.rules), np.int32,
+                       len(low.rules))
+
+
+def _widened_init(system: SNPSystem) -> np.ndarray:
+    """``[spikes | countdown | pending]`` initial state: every neuron
+    starts open with nothing pending."""
+    m = system.num_neurons
+    out = np.zeros((3 * m,), np.int32)
+    out[:m] = system.initial_spikes
+    return out
+
+
+def compile_system(system: SNPSystem, *,
+                   semantics: str = "no_delays") -> CompiledSNP:
     """Dense lowering (paper eq. 1).  Fully vectorized: the dense ``M`` is
-    built by adjacency indexing, not an ``O(n·m)`` synapse-set scan."""
+    built by adjacency indexing, not an ``O(n·m)`` synapse-set scan.
+
+    ``semantics="delays"`` additionally emits the per-rule delay vector,
+    the 0/1 synapse adjacency (reopen-pending fanout), and the widened
+    ``3m`` initial state (DESIGN.md §2 "Delayed semantics")."""
+    delayed = _check_semantics(system, semantics)
     m, n = system.num_neurons, system.num_rules
     low = _lower(system)
 
@@ -261,6 +337,19 @@ def compile_system(system: SNPSystem) -> CompiledSNP:
     onehot = np.zeros((n, m), dtype=np.int8)
     onehot[np.arange(n), low.neuron] = 1
 
+    extra = {}
+    if delayed:
+        adj = np.zeros((m, m), np.int32)
+        adj[low.src, low.dst] = 1
+        extra = dict(
+            delay=jnp.asarray(_delay_vector(low)),
+            adjacency=jnp.asarray(adj),
+            out_neuron=jnp.asarray(
+                system.output_neuron if system.output_neuron >= 0 else m,
+                dtype=jnp.int32))
+    init = _widened_init(system) if delayed \
+        else np.asarray(system.initial_spikes, np.int32)
+
     return CompiledSNP(
         M=jnp.asarray(M),
         rule_neuron=jnp.asarray(low.neuron),
@@ -271,13 +360,15 @@ def compile_system(system: SNPSystem) -> CompiledSNP:
         covering=jnp.asarray(low.covering),
         neuron_onehot=jnp.asarray(onehot),
         env_produce=jnp.asarray(low.env_produce),
-        init_config=jnp.asarray(system.initial_spikes, dtype=jnp.int32),
+        init_config=jnp.asarray(init, dtype=jnp.int32),
         rule_order=low.order,
+        **extra,
     )
 
 
 def compile_system_sparse(system: SNPSystem, *,
-                          hub_threshold: int | None = None
+                          hub_threshold: int | None = None,
+                          semantics: str = "no_delays"
                           ) -> CompiledSparseSNP:
     """Sparse lowering: ELL rows of ``M_Π`` + per-neuron segments + ELL
     in-adjacency.  Never allocates anything ``O(n·m)``; memory and compile
@@ -289,7 +380,13 @@ def compile_system_sparse(system: SNPSystem, *,
     ``(dst, src)``), so heavy-tailed graphs stop paying ``m·Kin`` padding
     for one hub.  ``None`` (default) is the pure-ELL layout, bit-identical
     to the pre-plan encoding.  Callers normally reach this through
-    ``backend.compile(system, plan=...)`` (DESIGN.md §3)."""
+    ``backend.compile(system, plan=...)`` (DESIGN.md §3).
+
+    ``semantics="delays"`` emits the per-rule delay vector and the
+    widened ``3m`` initial state; the reopen-pending fanout rides the
+    same ELL/COO in-adjacency as the fired produce, so the layout gains
+    no new index arrays (DESIGN.md §2 "Delayed semantics")."""
+    delayed = _check_semantics(system, semantics)
     m, n = system.num_neurons, system.num_rules
     low = _lower(system)
 
@@ -347,6 +444,8 @@ def compile_system_sparse(system: SNPSystem, *,
     hub_slot = np.full((m,), hn, np.int32)
     hub_slot[hubs] = np.arange(hn, dtype=np.int32)
 
+    init = _widened_init(system) if delayed \
+        else np.asarray(system.initial_spikes, np.int32)
     return CompiledSparseSNP(
         rule_neuron=jnp.asarray(low.neuron),
         consume=jnp.asarray(low.consume),
@@ -355,7 +454,7 @@ def compile_system_sparse(system: SNPSystem, *,
         regex_period=jnp.asarray(low.regex_period),
         covering=jnp.asarray(low.covering),
         env_produce=jnp.asarray(low.env_produce),
-        init_config=jnp.asarray(system.initial_spikes, dtype=jnp.int32),
+        init_config=jnp.asarray(init, dtype=jnp.int32),
         out_neuron=jnp.asarray(
             system.output_neuron if system.output_neuron >= 0 else m,
             dtype=jnp.int32),
@@ -371,4 +470,5 @@ def compile_system_sparse(system: SNPSystem, *,
         coo_dst=jnp.asarray(coo_dst),
         coo_bounds=jnp.asarray(coo_bounds),
         hub_slot=jnp.asarray(hub_slot),
+        delay=jnp.asarray(_delay_vector(low)) if delayed else None,
     )

@@ -57,6 +57,7 @@ __all__ = [
 
 _ENCODINGS = ("auto", "dense", "ell", "hybrid")
 _MODES = ("auto", "measure", "static")
+_SEMANTICS = ("no_delays", "delays")
 
 # Dummy padding rules (sharded lowering) use this regex base: applicability
 # requires spikes == 2^24, which the engine's spike-count contract
@@ -140,6 +141,13 @@ class SystemPlan:
     * ``kernel`` — optional :class:`KernelConfig` block shape for Pallas
       backends; validated at lower time (``resolve_kernel``) against the
       backend it lands on.
+    * ``semantics`` — transition-semantics tier: ``"no_delays"`` (the
+      paper's delay-free systems, the default, bit-identical to the
+      historical behavior) or ``"delays"`` (per-rule firing delays with
+      neuron open/closed state; configurations widen to ``3m`` —
+      DESIGN.md "Delayed semantics").  A backend that cannot realize an
+      encoding under the requested tier raises at compile time
+      (``supported_encodings(semantics=...)``), never downgrades.
 
     Frozen and hashable, so a plan can ride through
     ``jit(static_argnames=...)`` with the backend.
@@ -151,11 +159,15 @@ class SystemPlan:
     mode: str = "auto"
     backend: Optional[str] = None
     kernel: Optional[KernelConfig] = None
+    semantics: str = "no_delays"
 
     def __post_init__(self) -> None:
         if self.encoding not in _ENCODINGS:
             raise ValueError(
                 f"unknown encoding {self.encoding!r}; one of {_ENCODINGS}")
+        if self.semantics not in _SEMANTICS:
+            raise ValueError(
+                f"unknown semantics {self.semantics!r}; one of {_SEMANTICS}")
         if self.hub_threshold is not None and self.hub_threshold < 1:
             raise ValueError(
                 f"hub_threshold must be >= 1, got {self.hub_threshold}")
@@ -180,7 +192,8 @@ class SystemPlan:
     def for_system(system: SNPSystem, *,
                    num_shards: int = 1,
                    workload: Optional[Tuple[int, int]] = None,
-                   mode: str = "static") -> "SystemPlan":
+                   mode: str = "static",
+                   semantics: str = "no_delays") -> "SystemPlan":
         """Concrete plan for ``system``.
 
         ``mode="static"`` (the default) keeps the degree heuristic
@@ -200,11 +213,19 @@ class SystemPlan:
         degree histogram."""
         if mode not in _MODES:
             raise ValueError(f"unknown mode {mode!r}; one of {_MODES}")
+        if semantics not in _SEMANTICS:
+            raise ValueError(
+                f"unknown semantics {semantics!r}; one of {_SEMANTICS}")
+        if semantics == "delays" and num_shards > 1:
+            raise ValueError(
+                "no backend shards semantics='delays' yet; use "
+                "num_shards=1 for delayed systems")
         if mode != "static":
             from . import autotune  # lazy: autotune imports backend
             plan = autotune.plan_for(system, num_shards=num_shards,
                                      workload=workload,
-                                     measure=(mode == "measure"))
+                                     measure=(mode == "measure"),
+                                     semantics=semantics)
             if plan is not None:
                 return plan
         in_deg = _in_degrees(system)
@@ -212,8 +233,9 @@ class SystemPlan:
         kin = int(in_deg.max()) if in_deg.size else 0
         if num_shards == 1 and kin > 2 * h:
             return SystemPlan(encoding="hybrid", hub_threshold=h,
-                              mode=mode)
-        return SystemPlan(encoding="ell", num_shards=num_shards, mode=mode)
+                              mode=mode, semantics=semantics)
+        return SystemPlan(encoding="ell", num_shards=num_shards, mode=mode,
+                          semantics=semantics)
 
     def resolved_hub_threshold(self, system: SNPSystem) -> Optional[int]:
         """The hub threshold ``compile_system_sparse`` should cap ELL rows
@@ -365,6 +387,14 @@ def compile_sharded(system: SNPSystem, plan: SystemPlan) -> ShardedCompiled:
     # Local import: matrix imports stay plan-free (plan -> matrix only).
     from .matrix import _lower, _ragged_arange
 
+    if plan.semantics == "delays":
+        # The halo exchange has no notion of countdown/pending state yet;
+        # raise here too so explore_distributed (which reaches this
+        # compiler directly) cannot silently run delays sharded.
+        raise ValueError(
+            "neuron-axis sharding does not support semantics='delays' "
+            "(the halo exchange carries spike counts only); run delayed "
+            "systems single-device")
     if plan.encoding == "hybrid":
         # The per-shard encodings are ELL-only (hub tails widen the halo
         # instead of spilling to COO), and the compile contract

@@ -50,6 +50,13 @@ __all__ = [
     "next_configs",
     "sparse_next_configs",
     "StepOut",
+    "split_state",
+    "delayed_branch_info",
+    "sparse_delayed_branch_info",
+    "delayed_weight_matrix",
+    "delayed_packed_actions",
+    "delayed_next_configs",
+    "sparse_delayed_next_configs",
 ]
 
 
@@ -88,7 +95,10 @@ class BranchInfo(NamedTuple):
 
 
 def branch_info(config: jnp.ndarray, comp: CompiledSNP) -> BranchInfo:
-    app = applicability(config, comp)
+    return _branch_info_from_app(applicability(config, comp), comp)
+
+
+def _branch_info_from_app(app: jnp.ndarray, comp: CompiledSNP) -> BranchInfo:
     app_i = app.astype(jnp.int32)
     onehot = comp.neuron_onehot.astype(jnp.int32)  # (n, m)
 
@@ -130,7 +140,12 @@ def spiking_vectors(
     paper's total order), ``valid``: (..., T) bool, ``overflow``: (...,) bool.
     Dead configs (no applicable rule) produce no valid branches.
     """
-    info = branch_info(config, comp)
+    return _decode_spiking(branch_info(config, comp), comp, max_branches)
+
+
+def _decode_spiking(
+    info: BranchInfo, comp: CompiledSNP, max_branches: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     T = max_branches
     t = jnp.arange(T, dtype=jnp.int32)
 
@@ -206,7 +221,11 @@ def sparse_branch_info(config: jnp.ndarray,
     *same operations in the same order* as the dense path, so overflow
     saturation matches exactly (DESIGN.md §2).
     """
-    app = applicability(config, comp)
+    return _sparse_info_from_app(applicability(config, comp), comp)
+
+
+def _sparse_info_from_app(app: jnp.ndarray,
+                          comp: CompiledSparseSNP) -> BranchInfo:
     app_i = app.astype(jnp.int32)
     incl = jnp.cumsum(app_i, axis=-1)                        # (..., n)
     cum0 = jnp.concatenate(
@@ -226,8 +245,8 @@ def sparse_branch_info(config: jnp.ndarray,
                       psi=psi, alive=alive)
 
 
-def packed_rule_table(info: BranchInfo,
-                      comp: CompiledSparseSNP) -> jnp.ndarray:
+def packed_rule_table(info: BranchInfo, comp: CompiledSparseSNP,
+                      packed: jnp.ndarray = None) -> jnp.ndarray:
     """``tab`` (..., m, R) int32: ``produce | consume << 16`` of the d-th
     applicable rule of neuron μ at slot ``[..., μ, d]``, 0 where there is
     none.  ``O(B·m·R²)`` per *config* (not per branch), built scatter-free:
@@ -236,7 +255,10 @@ def packed_rule_table(info: BranchInfo,
     at its rank slot (XLA scatters cost ~50x a gathered element on CPU; R
     is small by construction).  The packing (bounds checked by
     ``compile_system_sparse``) makes the hot per-branch fired-rule lookup a
-    single gather instead of one per attribute."""
+    single gather instead of one per attribute.
+
+    ``packed`` overrides the per-rule (n,) int32 payload (the delayed tier
+    routes its own action packings through the same rank machinery)."""
     n = comp.num_rules
     m = comp.num_neurons
     R = comp.rule_slots.shape[0]
@@ -247,7 +269,8 @@ def packed_rule_table(info: BranchInfo,
     seg_idx = jnp.minimum(
         comp.seg_start[:, None] + slots[None, :], n - 1)     # (m, R)
     in_seg = slots[None, :] < comp.seg_count[:, None]        # (m, R)
-    packed = comp.produce | (comp.consume << 16)             # (n,)
+    if packed is None:
+        packed = comp.produce | (comp.consume << 16)         # (n,)
     packed_s = jnp.where(in_seg, jnp.take(packed, seg_idx, axis=0), 0)
     app_s = jnp.take(
         app, seg_idx.reshape(-1), axis=-1).reshape(B, m, R) & in_seg
@@ -359,6 +382,214 @@ def sparse_next_configs(
     emissions = jnp.take(prod_pad, comp.out_neuron, axis=-1)
     return StepOut(
         configs=out.reshape(*batch, T, m),
+        valid=valid.reshape(*batch, T),
+        emissions=emissions.reshape(*batch, T),
+        overflow=overflow.reshape(batch),
+        spiking=None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Delayed semantics (SystemPlan(semantics="delays"), DESIGN.md §2 "Delayed
+# semantics"): rules carry a firing delay d (arXiv 1212.2529 / 2211.15156).
+# A configuration row widens to 3m — [spikes | countdown | pending]:
+#
+#   countdown[j] > 0  — neuron j is *closed*: its rules are inapplicable
+#                       and incoming spikes are lost;
+#   countdown[j] == 1 — j reopens THIS transition: pending[j] (the produce
+#                       of the delayed rule it fired d steps ago) lands on
+#                       its out-neighbors (and the environment, if j is the
+#                       output neuron) at the end of the step;
+#   firing a rule with d > 0 consumes immediately, sets countdown := d and
+#   pending := produce; firing with d == 0 emits immediately (classic).
+#
+# Reception gate: neuron j receives incoming spikes iff its *post-update*
+# countdown is 0 — equivalently iff it neither stays closed (cd > 1) nor
+# just fired a delayed rule.  All-zero delays collapse every branch of this
+# transition onto the paper's ``C' = C + S·M`` exactly.
+# ---------------------------------------------------------------------------
+
+
+def split_state(config: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray,
+                                              jnp.ndarray]:
+    """Split a delayed-state row (..., 3m) into (spikes, countdown,
+    pending), each (..., m)."""
+    m = config.shape[-1] // 3
+    return config[..., :m], config[..., m:2 * m], config[..., 2 * m:]
+
+
+def _delayed_alive(info: BranchInfo, cd: jnp.ndarray) -> BranchInfo:
+    """Closed neurons keep the system live: a config with open countdowns
+    must still take its (deterministic, Ψ=1) decrement step even when no
+    rule is applicable, or pending spikes would never land."""
+    return info._replace(alive=info.alive | jnp.any(cd > 0, axis=-1))
+
+
+def delayed_branch_info(config: jnp.ndarray, comp: CompiledSNP) -> BranchInfo:
+    """:func:`branch_info` under the delayed semantics: applicability is
+    additionally masked by the owning neuron being open, and liveness
+    extends to configs with running countdowns."""
+    spikes, cd, _ = split_state(config)
+    open_at_owner = jnp.take(cd, comp.rule_neuron, axis=-1) == 0
+    app = applicability(spikes, comp) & open_at_owner
+    return _delayed_alive(_branch_info_from_app(app, comp), cd)
+
+
+def sparse_delayed_branch_info(config: jnp.ndarray,
+                               comp: CompiledSparseSNP) -> BranchInfo:
+    """:func:`sparse_branch_info` under the delayed semantics."""
+    spikes, cd, _ = split_state(config)
+    open_at_owner = jnp.take(cd, comp.rule_neuron, axis=-1) == 0
+    app = applicability(spikes, comp) & open_at_owner
+    return _delayed_alive(_sparse_info_from_app(app, comp), cd)
+
+
+def delayed_weight_matrix(comp: CompiledSNP) -> jnp.ndarray:
+    """Stacked per-rule weight matrix ``W`` (n, 4m) for the dense delayed
+    step: one ``S·W`` contraction yields, per (branch, neuron), the fired
+    rule's ``[consume | produce·(d=0) | d | produce·(d>0)]`` — replacing
+    ``S·M`` so the dense Pallas kernel's delay stage stays a single
+    accumulated matmul (kernels/snp_step/kernel.py)."""
+    oh = comp.neuron_onehot.astype(jnp.float32)              # (n, m)
+    d = comp.delay.astype(jnp.float32)[:, None]
+    p = comp.produce.astype(jnp.float32)[:, None]
+    c = comp.consume.astype(jnp.float32)[:, None]
+    nodelay = (comp.delay == 0).astype(jnp.float32)[:, None]
+    return jnp.concatenate(
+        [oh * c, oh * (p * nodelay), oh * d, oh * (p * (1.0 - nodelay))],
+        axis=-1)
+
+
+def delayed_packed_actions(comp: CompiledSparseSNP
+                           ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-rule int32 payloads for the sparse delayed step's two rank
+    tables (:func:`packed_rule_table`):
+
+    * ``packed_e`` = ``produce·(d=0) | consume << 16`` — the *emit-now*
+      table the core gather/segment-sum contraction consumes (a delayed
+      rule's produce is withheld from the wire);
+    * ``packed_d`` = ``produce | d << 16`` where ``d > 0``, else 0 — the
+      delayed-action table (nonzero iff the fired rule has a delay, since
+      ``d >= 1`` sets bit 16+); bounds guaranteed by ``Rule`` validation
+      (``produce < 2^16`` checked at compile, ``d < 2^15``).
+    """
+    nodelay = comp.delay == 0
+    packed_e = jnp.where(nodelay, comp.produce, 0) | (comp.consume << 16)
+    packed_d = jnp.where(nodelay, 0, comp.produce | (comp.delay << 16))
+    return packed_e, packed_d
+
+
+def delayed_next_configs(
+    config: jnp.ndarray, comp: CompiledSNP, max_branches: int
+) -> StepOut:
+    """One synchronous *delayed* SNP step, dense encoding: every successor
+    (..., T, 3m) of every state row (..., 3m).
+
+    The fired-rule attributes come from one stacked f32 contraction
+    ``S·W`` (:func:`delayed_weight_matrix`, exact below 2^24); the
+    reopen-pending fanout and the reception-gated incoming ride the 0/1
+    synapse ``comp.adjacency``, which ``M``'s per-rule rows cannot carry.
+    """
+    spikes, cd, pd = split_state(config)
+    m = spikes.shape[-1]
+    info = delayed_branch_info(config, comp)
+    S, valid, overflow = _decode_spiking(info, comp, max_branches)
+
+    acc = jnp.einsum("...tn,nk->...tk", S.astype(jnp.float32),
+                     delayed_weight_matrix(comp)).astype(jnp.int32)
+    cons_f = acc[..., :m]
+    emit_fired = acc[..., m:2 * m]
+    d_f = acc[..., 2 * m:3 * m]
+    prod_pend = acc[..., 3 * m:]
+
+    reopen = (cd == 1)[..., None, :]                    # (..., 1, m)
+    emit = emit_fired + jnp.where(reopen, pd[..., None, :], 0)
+    incoming = jnp.einsum(
+        "...ti,ij->...tj", emit.astype(jnp.float32),
+        comp.adjacency.astype(jnp.float32)).astype(jnp.int32)
+
+    fired_del = d_f > 0
+    cd_next = jnp.where(fired_del, d_f,
+                        jnp.maximum(cd - 1, 0)[..., None, :])
+    gate = cd_next == 0
+    spikes_next = spikes[..., None, :] - cons_f \
+        + jnp.where(gate, incoming, 0)
+    pd_next = jnp.where(fired_del, prod_pend,
+                        jnp.where(reopen, 0, pd[..., None, :]))
+
+    emit_pad = jnp.concatenate(
+        [emit, jnp.zeros(emit.shape[:-1] + (1,), jnp.int32)], axis=-1)
+    emissions = jnp.take(emit_pad, comp.out_neuron, axis=-1)
+    out = jnp.concatenate([spikes_next, cd_next, pd_next], axis=-1)
+    return StepOut(configs=out, valid=valid, emissions=emissions,
+                   overflow=overflow, spiking=S)
+
+
+def sparse_delayed_next_configs(
+    config: jnp.ndarray, comp: CompiledSparseSNP, max_branches: int
+) -> StepOut:
+    """One synchronous *delayed* SNP step on the sparse encoding —
+    bit-identical valid entries to :func:`delayed_next_configs`.
+
+    Identical shape to :func:`sparse_next_configs` with two twists: the
+    vector riding the ELL/COO in-adjacency is the *emit-now* vector
+    (fired d=0 produce + reopening neurons' pending) instead of the raw
+    fired produce, and a second rank table decodes the fired delayed
+    action (``produce | d << 16``) to drive countdown/pending updates and
+    the receiver gate.
+    """
+    width = config.shape[-1]
+    batch = config.shape[:-1]
+    cfg = config.reshape(-1, width)
+    spikes, cd, pd = split_state(cfg)
+    m = spikes.shape[-1]
+    B = cfg.shape[0]
+    T = max_branches
+
+    info = sparse_delayed_branch_info(cfg, comp)
+    packed_e, packed_d = delayed_packed_actions(comp)
+    etab = packed_rule_table(info, comp, packed_e)           # (B, m, R)
+    dtab = packed_rule_table(info, comp, packed_d)
+
+    t = jnp.arange(T, dtype=jnp.int32)
+    digits = _decode_digits(t, info)                         # (B, T, m)
+    pe = _fired_packed(digits, etab)
+    prod_now = pe & 0xFFFF
+    cons_f = pe >> 16
+    pdl = _fired_packed(digits, dtab)
+    fired_del = pdl != 0
+    prod_pend = pdl & 0xFFFF
+    d_f = pdl >> 16
+
+    reopen = (cd == 1)[:, None, :]
+    emit = prod_now + jnp.where(reopen, pd[:, None, :], 0)   # (B, T, m)
+    emit_pad = jnp.concatenate(
+        [emit, jnp.zeros((B, T, 1), jnp.int32)], axis=-1)
+    incoming = jnp.zeros((B, T, m), jnp.int32)
+    for kk in range(comp.in_idx.shape[1]):  # static K_in, unrolled
+        incoming = incoming + jnp.take(emit_pad, comp.in_idx[:, kk],
+                                       axis=-1)
+    if comp.coo_src.shape[0]:  # hybrid encoding: COO tail via segment-sum
+        contrib = jnp.take(emit_pad, comp.coo_src, axis=-1)  # (B, T, Ec)
+        tail = jax.ops.segment_sum(
+            jnp.moveaxis(contrib, -1, 0), comp.coo_dst, num_segments=m)
+        incoming = incoming + jnp.moveaxis(tail, 0, -1)
+
+    cd_next = jnp.where(fired_del, d_f,
+                        jnp.maximum(cd - 1, 0)[:, None, :])
+    gate = cd_next == 0
+    spikes_next = spikes[:, None, :] - cons_f \
+        + jnp.where(gate, incoming, 0)
+    pd_next = jnp.where(fired_del, prod_pend,
+                        jnp.where(reopen, 0, pd[:, None, :]))
+
+    out = jnp.concatenate([spikes_next, cd_next, pd_next], axis=-1)
+    valid = (t[None, :].astype(jnp.float32) < info.psi[:, None]) \
+        & info.alive[:, None]
+    overflow = info.psi > float(T)
+    emissions = jnp.take(emit_pad, comp.out_neuron, axis=-1)
+    return StepOut(
+        configs=out.reshape(*batch, T, width),
         valid=valid.reshape(*batch, T),
         emissions=emissions.reshape(*batch, T),
         overflow=overflow.reshape(batch),

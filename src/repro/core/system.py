@@ -36,6 +36,13 @@ class Rule:
     ``consume = s``).  ``regex_base``/``regex_period`` encode ``E`` as the
     arithmetic progression ``{base + t*period}``; ``covering`` selects the
     membership mode (see module docstring).
+
+    ``delay`` is the rule's firing delay ``d`` from the general SNP
+    definition (arXiv 1212.2529): firing closes the owning neuron for ``d``
+    steps and its spikes land when it reopens.  The paper's matrix
+    formalism (and every default code path) requires ``d == 0``; systems
+    with ``delay > 0`` only compile under ``SystemPlan(semantics="delays")``
+    (DESIGN.md §2 "Delayed semantics").
     """
 
     neuron: int
@@ -44,6 +51,7 @@ class Rule:
     regex_base: int
     regex_period: int = 0
     covering: bool = False
+    delay: int = 0
 
     def __post_init__(self) -> None:
         if self.neuron < 0:
@@ -60,6 +68,11 @@ class Rule:
             )
         if self.regex_period < 0:
             raise ValueError("regex_period must be >= 0")
+        if not 0 <= self.delay < 1 << 15:
+            # The sparse lowering packs (produce | delay << 16) into one
+            # int32; any realistic delay is orders of magnitude smaller.
+            raise ValueError(
+                f"delay must be in [0, 2^15), got {self.delay}")
 
     @property
     def is_forgetting(self) -> bool:
@@ -72,6 +85,8 @@ class Rule:
         if self.covering:
             e += "(>=)"
         rhs = f"a^{self.produce}" if self.produce else "λ"
+        if self.delay:
+            rhs += f"; {self.delay}"
         return f"σ{self.neuron}: {e}/a^{self.consume} -> {rhs}"
 
 
@@ -117,6 +132,11 @@ class SNPSystem:
     @property
     def num_rules(self) -> int:
         return len(self.rules)
+
+    @property
+    def max_delay(self) -> int:
+        """Largest per-rule firing delay (0 for a paper-style system)."""
+        return max((r.delay for r in self.rules), default=0)
 
     def rules_of(self, neuron: int) -> List[Rule]:
         return [r for r in self.rules if r.neuron == neuron]

@@ -29,6 +29,15 @@ is folded in as one extra MXU matmul against the static 0/1 halo
 in-adjacency: ``C' = C + halo·H_adj + S·M_local``.  Dummy padding rules
 are never applicable (``app = 0``), so their rows contribute nothing.
 
+**Delayed semantics** (DESIGN.md "Delayed semantics"): the same grid also
+runs the ``semantics="delays"`` tier.  ``M`` is swapped for the stacked
+``(n, 4m)`` weight matrix ``W`` so the accumulated contraction ``S·W``
+yields each fired rule's ``[consume | produce·(d=0) | delay |
+produce·(d>0)]`` into a VMEM accumulator; after the last rule tile one
+combine stage applies the closed-neuron algebra (reopen-pending fanout
+over the 0/1 adjacency, reception gate, countdown/pending update) and
+writes ``(bb, bt, 3m)`` state rows ``[spikes | countdown | pending]``.
+
 TPU is the compilation *target*; correctness is validated in
 ``interpret=True`` mode against :mod:`repro.kernels.snp_step.ref`.
 """
@@ -49,32 +58,45 @@ _CompilerParams = getattr(pltpu, "CompilerParams",
 __all__ = ["snp_step_pallas"]
 
 
-def _make_kernel(has_halo: bool):
-    """Body specialized to whether a shard halo input is present (keeps
-    the ref list static for ``pallas_call``)."""
+def _make_kernel(has_halo: bool, has_delay: bool = False):
+    """Body specialized to whether a shard halo input is present and
+    whether the step runs the delayed-semantics tier (keeps the ref list
+    static for ``pallas_call``).  The two are mutually exclusive: no
+    backend shards ``semantics="delays"`` (plan.py refuses)."""
+    assert not (has_halo and has_delay)
 
     def kernel(*refs):
         it = iter(refs)
-        c_ref = next(it)        # (bb, m)  f32 — configurations
+        c_ref = next(it)        # (bb, m)  f32 — configurations (spikes)
         rank_ref = next(it)     # (bb, bn) f32 — rank among applicable
         app_ref = next(it)      # (bb, bn) f32 — applicability mask
         stride_ref = next(it)   # (bb, m)  i32 — radix strides (clamped)
         choices_ref = next(it)  # (bb, m)  i32 — per-neuron choice counts
         psi_ref = next(it)      # (bb, 1)  f32 — number of valid branches
         onehot_ref = next(it)   # (m, bn)  f32 — neuron→rule incidence
-        mat_ref = next(it)      # (bn, m)  f32 — M_Π block
-        env_ref = next(it)      # (bn, 1)  f32 — emission weights
+        mat_ref = next(it)      # (bn, m)  f32 — M_Π block; (bn, 4m) W
+        #                         block under delays (delayed_weight_matrix)
+        if not has_delay:
+            env_ref = next(it)  # (bn, 1)  f32 — emission weights
         if has_halo:
             halo_ref = next(it)  # (bb, bt, H) f32 — remote fired produce
             hadj_ref = next(it)  # (H, m)      f32 — halo 0/1 in-adjacency
-        out_ref = next(it)      # (bb, bt, m) f32 — accumulated over k
+        if has_delay:
+            cd_ref = next(it)    # (bb, m) f32 — countdowns
+            pd_ref = next(it)    # (bb, m) f32 — pending spikes
+            adj_ref = next(it)   # (m, m)  f32 — 0/1 synapse adjacency
+            outoh_ref = next(it)  # (m, 1) f32 — output-neuron one-hot
+        out_ref = next(it)      # (bb, bt, m|3m) f32 — accumulated over k
         valid_ref = next(it)    # (bb, bt) i32
         emis_ref = next(it)     # (bb, bt) f32 (accumulated over k)
         digit_ref = next(it)    # (bb, bt, m) f32 scratch, persists across k
+        if has_delay:
+            acc_ref = next(it)  # (bb, bt, 4m) f32 scratch — S·W accumulator
 
         j = pl.program_id(1)   # branch-tile index
         k = pl.program_id(2)   # rule-tile index (innermost, accumulated)
-        bb, bt, m = out_ref.shape
+        bb, bt, _ = out_ref.shape
+        m = c_ref.shape[-1]
 
         @pl.when(k == 0)
         def _init():
@@ -84,17 +106,20 @@ def _make_kernel(has_halo: bool):
             choices = choices_ref[...].reshape(bb, 1, m)
             digits = (t // stride) % choices                 # (bb, bt, m) i32
             digit_ref[...] = digits.astype(jnp.float32)
-            # Output starts at C (broadcast over branches) plus, for a
-            # shard, the halo contribution; S·M accumulates in over k.
-            base = jnp.broadcast_to(
-                c_ref[...].reshape(bb, 1, m), (bb, bt, m))
-            if has_halo:
-                base = base + jax.lax.dot_general(
-                    halo_ref[...], hadj_ref[...],
-                    (((2,), (0,)), ((), ())),
-                    preferred_element_type=jnp.float32,
-                )
-            out_ref[...] = base
+            if has_delay:
+                acc_ref[...] = jnp.zeros((bb, bt, 4 * m), jnp.float32)
+            else:
+                # Output starts at C (broadcast over branches) plus, for a
+                # shard, the halo contribution; S·M accumulates in over k.
+                base = jnp.broadcast_to(
+                    c_ref[...].reshape(bb, 1, m), (bb, bt, m))
+                if has_halo:
+                    base = base + jax.lax.dot_general(
+                        halo_ref[...], hadj_ref[...],
+                        (((2,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32,
+                    )
+                out_ref[...] = base
             emis_ref[...] = jnp.zeros((bb, bt), jnp.float32)
             tf = t.reshape(1, bt).astype(jnp.float32)
             valid_ref[...] = (tf < psi_ref[...]).astype(jnp.int32)
@@ -110,16 +135,60 @@ def _make_kernel(has_halo: bool):
         s = app_ref[...].reshape(bb, 1, -1) * (
             digits_r == rank_ref[...].reshape(bb, 1, -1)
         ).astype(jnp.float32)                                 # (bb, bt, bn)
-        out_ref[...] += jax.lax.dot_general(
+        if not has_delay:
+            out_ref[...] += jax.lax.dot_general(
+                s, mat_ref[...],
+                (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            emis_ref[...] += jax.lax.dot_general(
+                s, env_ref[...],
+                (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ).reshape(bb, bt)
+            return
+
+        # Delayed tier: accumulate the stacked contraction S·W — per
+        # (branch, neuron) the fired rule's [consume | produce·(d=0) | d |
+        # produce·(d>0)] — then combine once after the last rule tile
+        # (matches core.semantics.delayed_next_configs bit-for-bit).
+        acc_ref[...] += jax.lax.dot_general(
             s, mat_ref[...],
             (((2,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
-        emis_ref[...] += jax.lax.dot_general(
-            s, env_ref[...],
-            (((2,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        ).reshape(bb, bt)
+
+        @pl.when(k == pl.num_programs(2) - 1)
+        def _combine():
+            acc = acc_ref[...]
+            cons_f = acc[..., :m]
+            emit_fired = acc[..., m:2 * m]
+            d_f = acc[..., 2 * m:3 * m]
+            prod_pend = acc[..., 3 * m:]
+            cd = cd_ref[...].reshape(bb, 1, m)
+            pd = pd_ref[...].reshape(bb, 1, m)
+
+            reopen = cd == 1.0
+            emit = emit_fired + jnp.where(reopen, pd, 0.0)
+            incoming = jax.lax.dot_general(
+                emit, adj_ref[...],
+                (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            fired_del = d_f > 0.0
+            cd_next = jnp.where(fired_del, d_f, jnp.maximum(cd - 1.0, 0.0))
+            gate = cd_next == 0.0
+            spikes = c_ref[...].reshape(bb, 1, m) - cons_f \
+                + jnp.where(gate, incoming, 0.0)
+            pd_next = jnp.where(fired_del, prod_pend,
+                                jnp.where(reopen, 0.0, pd))
+            out_ref[...] = jnp.concatenate(
+                [spikes, cd_next, pd_next], axis=-1)
+            emis_ref[...] = jax.lax.dot_general(
+                emit, outoh_ref[...],
+                (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ).reshape(bb, bt)
 
     return kernel
 
@@ -138,9 +207,13 @@ def snp_step_pallas(
     psi: jnp.ndarray,        # (B,) float32
     onehot: jnp.ndarray,     # (n, m) int8 — rule→neuron incidence
     M: jnp.ndarray,          # (n, m) int32
-    env: jnp.ndarray,        # (n,) int32
+    env: jnp.ndarray,        # (n,) int32 — ignored under delays
     halo: jnp.ndarray = None,   # (B, T, H) int32 — shard halo produce
     hadj: jnp.ndarray = None,   # (H, m) int8 — halo 0/1 in-adjacency
+    cd: jnp.ndarray = None,     # (B, m) int32 — countdowns (delays tier)
+    pd: jnp.ndarray = None,     # (B, m) int32 — pending spikes
+    adj: jnp.ndarray = None,    # (m, m) int32 — 0/1 synapse adjacency
+    outoh: jnp.ndarray = None,  # (m,) int32 — output-neuron one-hot
     *,
     max_branches: int,
     block_b: int,
@@ -152,7 +225,11 @@ def snp_step_pallas(
     — the block shape is *required* here: the grid/tile choice belongs to
     the caller (ultimately a :class:`~repro.core.plan.KernelConfig` on
     the plan, DESIGN.md §3 "Planner & autotuner"), not the kernel.
-    ``halo``/``hadj`` select the shard body (module docstring)."""
+    ``halo``/``hadj`` select the shard body (module docstring);
+    ``cd``/``pd``/``adj``/``outoh`` select the delayed-semantics body,
+    with ``M`` carrying the stacked (n, 4m) weight matrix
+    (:func:`repro.core.semantics.delayed_weight_matrix`) and the output
+    widening to ``(B, T, 3m)`` state rows."""
     B, m = configs.shape
     n = rank.shape[1]
     T = max_branches
@@ -160,6 +237,10 @@ def snp_step_pallas(
         "ops.py must pad shapes to block multiples"
     )
     has_halo = halo is not None
+    has_delay = cd is not None
+    assert not (has_halo and has_delay), \
+        "sharded delayed lowering is unsupported (plan.py refuses it)"
+    out_m = 3 * m if has_delay else m
     grid = (B // block_b, T // block_t, n // block_n)
 
     in_specs = [
@@ -170,8 +251,7 @@ def snp_step_pallas(
         pl.BlockSpec((block_b, m), lambda i, j, k: (i, 0)),
         pl.BlockSpec((block_b, 1), lambda i, j, k: (i, 0)),
         pl.BlockSpec((m, block_n), lambda i, j, k: (0, k)),
-        pl.BlockSpec((block_n, m), lambda i, j, k: (k, 0)),
-        pl.BlockSpec((block_n, 1), lambda i, j, k: (k, 0)),
+        pl.BlockSpec((block_n, M.shape[-1]), lambda i, j, k: (k, 0)),
     ]
     operands = [
         configs.astype(jnp.float32),
@@ -181,9 +261,11 @@ def snp_step_pallas(
         choices.astype(jnp.int32),
         psi.reshape(B, 1).astype(jnp.float32),
         onehot.T.astype(jnp.float32),   # (m, n)
-        M.astype(jnp.float32),
-        env.reshape(n, 1).astype(jnp.float32),
+        M.astype(jnp.float32),          # (n, m); (n, 4m) W under delays
     ]
+    if not has_delay:
+        in_specs += [pl.BlockSpec((block_n, 1), lambda i, j, k: (k, 0))]
+        operands += [env.reshape(n, 1).astype(jnp.float32)]
     if has_halo:
         H = halo.shape[-1]
         in_specs += [
@@ -191,24 +273,41 @@ def snp_step_pallas(
             pl.BlockSpec((H, m), lambda i, j, k: (0, 0)),
         ]
         operands += [halo.astype(jnp.float32), hadj.astype(jnp.float32)]
+    if has_delay:
+        in_specs += [
+            pl.BlockSpec((block_b, m), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((block_b, m), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((m, m), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((m, 1), lambda i, j, k: (0, 0)),
+        ]
+        operands += [
+            cd.astype(jnp.float32),
+            pd.astype(jnp.float32),
+            adj.astype(jnp.float32),
+            outoh.reshape(m, 1).astype(jnp.float32),
+        ]
+
+    scratch_shapes = [pltpu.VMEM((block_b, block_t, m), jnp.float32)]
+    if has_delay:
+        scratch_shapes += [pltpu.VMEM((block_b, block_t, 4 * m),
+                                      jnp.float32)]
 
     out, valid, emis = pl.pallas_call(
-        _make_kernel(has_halo),
+        _make_kernel(has_halo, has_delay),
         grid=grid,
         in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((block_b, block_t, m), lambda i, j, k: (i, j, 0)),
+            pl.BlockSpec((block_b, block_t, out_m),
+                         lambda i, j, k: (i, j, 0)),
             pl.BlockSpec((block_b, block_t), lambda i, j, k: (i, j)),
             pl.BlockSpec((block_b, block_t), lambda i, j, k: (i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B, T, m), jnp.float32),
+            jax.ShapeDtypeStruct((B, T, out_m), jnp.float32),
             jax.ShapeDtypeStruct((B, T), jnp.int32),
             jax.ShapeDtypeStruct((B, T), jnp.float32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((block_b, block_t, m), jnp.float32),
-        ],
+        scratch_shapes=scratch_shapes,
         compiler_params=None if interpret else _CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),

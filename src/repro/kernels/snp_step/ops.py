@@ -23,9 +23,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.matrix import CompiledSNP
+from repro.core.matrix import CompiledSNP, is_delayed
 from repro.core.plan import KernelConfig
-from repro.core.semantics import branch_info
+from repro.core.semantics import (branch_info, delayed_branch_info,
+                                  delayed_weight_matrix, split_state)
 
 from .kernel import snp_step_pallas
 
@@ -86,11 +87,16 @@ def snp_step(
     unset axes fall back to :meth:`KernelConfig.dense_default`.
 
     Bit-identical to :func:`repro.kernels.snp_step.ref.snp_step_ref` for all
-    spike counts < 2^24 (f32-exact integer range).
+    spike counts < 2^24 (f32-exact integer range).  A delayed ``comp``
+    (``semantics="delays"``; 3m-wide state rows) routes through the
+    kernel's delay stage and returns ``(B, T, 3m)`` successors,
+    bit-identical to :func:`repro.core.semantics.delayed_next_configs`.
     """
-    B, m = configs.shape
+    B = configs.shape[0]
     n = comp.num_rules
+    m = comp.num_neurons
     T = max_branches
+    delayed = is_delayed(comp)
 
     block_b, block_t, block_n = _resolve_blocks(
         kernel, block_b, block_t, block_n)
@@ -98,15 +104,35 @@ def snp_step(
     block_t = min(block_t, T)
     block_n = min(block_n, _round_up(n, 128))
 
-    info = branch_info(configs, comp)
+    if delayed:
+        info = delayed_branch_info(configs, comp)
+        spikes, cd, pd = split_state(configs)
+    else:
+        info = branch_info(configs, comp)
+        spikes, cd, pd = configs, None, None
     stride = jnp.minimum(info.stride, 2.0 ** 30).astype(jnp.int32)
     # clamp choices>=1 so the kernel's % never sees 0 (already >=1 by defn)
 
     Bp, Tp, Np = (_round_up(B, block_b), _round_up(T, block_t),
                   _round_up(n, block_n))
 
+    if delayed:
+        weights = _pad(delayed_weight_matrix(comp), rows=Np)   # (Np, 4m)
+        extra = dict(
+            cd=_pad(cd, rows=Bp),
+            pd=_pad(pd, rows=Bp),
+            adj=comp.adjacency,
+            # all-zero one-hot when the system has no output neuron
+            # (out_neuron == m) — emissions then stay 0, matching the
+            # reference's zero-padded gather.
+            outoh=(jnp.arange(m) == comp.out_neuron).astype(jnp.int32),
+        )
+    else:
+        weights = _pad(comp.M, rows=Np)
+        extra = {}
+
     out, valid, emis = snp_step_pallas(
-        _pad(configs, rows=Bp),
+        _pad(spikes, rows=Bp),
         _pad(_pad(info.rank, cols=Np, value=-1), rows=Bp),
         _pad(_pad(info.app, cols=Np), rows=Bp),
         # padded configs: stride 1 / choices 1 / psi 0 -> no valid branches
@@ -114,11 +140,12 @@ def snp_step(
         _pad(info.choices, rows=Bp, value=1),
         _pad(info.psi, rows=Bp),
         _pad(comp.neuron_onehot, rows=Np),          # (n, m) pad rules
-        _pad(comp.M, rows=Np),
+        weights,
         _pad(comp.env_produce, rows=Np),
         max_branches=Tp,
         block_b=block_b, block_t=block_t, block_n=block_n,
         interpret=interpret,
+        **extra,
     )
     out = out[:B, :T]
     valid = valid[:B, :T] & info.alive[:, None]

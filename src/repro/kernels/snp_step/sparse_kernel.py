@@ -68,17 +68,21 @@ _CompilerParams = getattr(pltpu, "CompilerParams",
 __all__ = ["snp_step_sparse_pallas"]
 
 
-def _make_kernel(has_coo: bool, has_halo: bool):
+def _make_kernel(has_coo: bool, has_halo: bool, has_delay: bool = False):
     """ELL body specialized to the encoding metadata actually present
-    (specialization keeps the ref list static for ``pallas_call``)."""
+    (specialization keeps the ref list static for ``pallas_call``).
+    ``has_delay`` selects the delayed-semantics tier; it is mutually
+    exclusive with ``has_halo`` (plan.py refuses sharded delays)."""
+    assert not (has_halo and has_delay)
 
     def kernel(*refs):
         it = iter(refs)
-        c_ref = next(it)        # (bb, m)     i32 — configurations
+        c_ref = next(it)        # (bb, m)     i32 — configurations (spikes)
         stride_ref = next(it)   # (bb, m)     f32 — radix strides (may +inf)
         choices_ref = next(it)  # (bb, m)     i32 — per-neuron choices (>=1)
         psi_ref = next(it)      # (bb, 1)     f32 — number of valid branches
         tab_ref = next(it)      # (bb, m, R)  i32 — produce | consume << 16
+        #                         (emit-now payload packed_e under delays)
         inidx_ref = next(it)    # (m, Kin)    i32 — extended-space indices
         outn_ref = next(it)     # (1,)        i32 — emission gather index
         if has_coo:
@@ -87,12 +91,17 @@ def _make_kernel(has_coo: bool, has_halo: bool):
             hub_ref = next(it)      # (m,)     i32 — neuron -> hub slot
         if has_halo:
             halo_ref = next(it)     # (bb, bt, H) i32 — remote produce
-        out_ref = next(it)      # (bb, bt, m) i32 — successor configs
+        if has_delay:
+            dtab_ref = next(it)     # (bb, m, R) i32 — produce | d << 16
+            cd_ref = next(it)       # (bb, m)    i32 — countdowns
+            pd_ref = next(it)       # (bb, m)    i32 — pending spikes
+        out_ref = next(it)      # (bb, bt, m|3m) i32 — successor configs
         valid_ref = next(it)    # (bb, bt)    i32
         emis_ref = next(it)     # (bb, bt)    i32
 
         j = pl.program_id(1)   # branch-tile index
-        bb, bt, m = out_ref.shape
+        bb, bt, _ = out_ref.shape
+        m = c_ref.shape[-1]
         R = tab_ref.shape[2]
         Kin = inidx_ref.shape[1]
 
@@ -111,8 +120,23 @@ def _make_kernel(has_coo: bool, has_halo: bool):
         for d in range(R):  # static R, unrolled
             packed_f = jnp.where(
                 digits == d, tab[:, :, d].reshape(bb, 1, m), packed_f)
-        prod_f = packed_f & 0xFFFF
+        prod_f = packed_f & 0xFFFF   # emit-now produce under delays
         cons_f = packed_f >> 16
+
+        if has_delay:
+            # Second rank table: the fired *delayed* action (nonzero iff
+            # the fired rule has d > 0, since d >= 1 sets bit 16+).
+            dtab = dtab_ref[...]
+            packed_d = jnp.zeros((bb, bt, m), jnp.int32)
+            for d in range(R):  # static R, unrolled
+                packed_d = jnp.where(
+                    digits == d, dtab[:, :, d].reshape(bb, 1, m), packed_d)
+            cd = cd_ref[...].reshape(bb, 1, m)
+            pd = pd_ref[...].reshape(bb, 1, m)
+            reopen = cd == 1
+            # The vector riding the in-adjacency is the emit-now vector:
+            # fired d=0 produce plus reopening neurons' pending spikes.
+            prod_f = prod_f + jnp.where(reopen, pd, 0)
 
         # Extended produce space the in-adjacency indexes into: pure ELL is
         # [local | zero]; a shard adds the received halo produce between
@@ -124,9 +148,9 @@ def _make_kernel(has_coo: bool, has_halo: bool):
         parts.append(jnp.zeros((bb, bt, 1), jnp.int32))
         prod_ext = jnp.concatenate(parts, axis=-1)
         in_idx = inidx_ref[...]
-        delta = -cons_f
+        incoming = jnp.zeros((bb, bt, m), jnp.int32)
         for k in range(Kin):  # static K_in, unrolled
-            delta = delta + jnp.take(prod_ext, in_idx[:, k], axis=-1)
+            incoming = incoming + jnp.take(prod_ext, in_idx[:, k], axis=-1)
 
         if has_coo:
             # COO segment-sum stage (module docstring): tail sources are
@@ -140,9 +164,25 @@ def _make_kernel(has_coo: bool, has_halo: bool):
                     - jnp.take(cum0, bounds[:-1], axis=-1))
             tail_pad = jnp.concatenate(
                 [tail, jnp.zeros((bb, bt, 1), jnp.int32)], axis=-1)
-            delta = delta + jnp.take(tail_pad, hub_ref[...], axis=-1)
+            incoming = incoming + jnp.take(tail_pad, hub_ref[...], axis=-1)
 
-        out_ref[...] = c_ref[...].reshape(bb, 1, m) + delta
+        if not has_delay:
+            out_ref[...] = c_ref[...].reshape(bb, 1, m) - cons_f + incoming
+        else:
+            # Closed-neuron algebra (core.semantics.sparse_delayed_
+            # next_configs, bit-for-bit): reception gated on the post-
+            # update countdown, pending landing consumed on reopen.
+            fired_del = packed_d != 0
+            prod_pend = packed_d & 0xFFFF
+            d_f = packed_d >> 16
+            cd_next = jnp.where(fired_del, d_f, jnp.maximum(cd - 1, 0))
+            gate = cd_next == 0
+            spikes = c_ref[...].reshape(bb, 1, m) - cons_f \
+                + jnp.where(gate, incoming, 0)
+            pd_next = jnp.where(fired_del, prod_pend,
+                                jnp.where(reopen, 0, pd))
+            out_ref[...] = jnp.concatenate(
+                [spikes, cd_next, pd_next], axis=-1)
         tfv = t.reshape(1, bt).astype(jnp.float32)
         valid_ref[...] = (tfv < psi_ref[...]).astype(jnp.int32)
         emis_ref[...] = jnp.take(prod_ext, outn_ref[0], axis=-1)
@@ -166,6 +206,9 @@ def snp_step_sparse_pallas(
     coo_bounds: jnp.ndarray = None,  # (Hn+1,) int32 — per-hub run offsets
     hub_slot: jnp.ndarray = None,    # (m,) int32 — neuron -> hub slot
     halo: jnp.ndarray = None,        # (B, T, H) int32 — sharded halo produce
+    dtab: jnp.ndarray = None,        # (B, m, R) int32 — delayed-action table
+    cd: jnp.ndarray = None,          # (B, m) int32 — countdowns (delays)
+    pd: jnp.ndarray = None,          # (B, m) int32 — pending spikes
     *,
     max_branches: int,
     block_b: int,
@@ -178,7 +221,10 @@ def snp_step_sparse_pallas(
     :class:`~repro.core.plan.KernelConfig` on the plan, DESIGN.md §3
     "Planner & autotuner"), not the kernel.  ``coo_*``/``hub_slot``
     select the COO segment-sum stage (hybrid plans), ``halo`` the
-    extended-index shard stage — both default to the pure-ELL body."""
+    extended-index shard stage — both default to the pure-ELL body.
+    ``dtab``/``cd``/``pd`` select the delayed-semantics body (``tab``
+    then carries the emit-now payload ``packed_e``) and the output widens
+    to ``(B, T, 3m)`` state rows."""
     B, m = configs.shape
     R = tab.shape[2]
     Kin = in_idx.shape[1]
@@ -188,6 +234,10 @@ def snp_step_sparse_pallas(
     )
     has_coo = coo_src is not None and coo_src.shape[0] > 0
     has_halo = halo is not None
+    has_delay = dtab is not None
+    assert not (has_halo and has_delay), \
+        "sharded delayed lowering is unsupported (plan.py refuses it)"
+    out_m = 3 * m if has_delay else m
     grid = (B // block_b, T // block_t)
 
     in_specs = [
@@ -223,18 +273,27 @@ def snp_step_sparse_pallas(
         in_specs.append(
             pl.BlockSpec((block_b, block_t, H), lambda i, j: (i, j, 0)))
         operands.append(halo.astype(jnp.int32))
+    if has_delay:
+        in_specs += [
+            pl.BlockSpec((block_b, m, R), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_b, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, m), lambda i, j: (i, 0)),
+        ]
+        operands += [dtab.astype(jnp.int32), cd.astype(jnp.int32),
+                     pd.astype(jnp.int32)]
 
     out, valid, emis = pl.pallas_call(
-        _make_kernel(has_coo, has_halo),
+        _make_kernel(has_coo, has_halo, has_delay),
         grid=grid,
         in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((block_b, block_t, m), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_b, block_t, out_m),
+                         lambda i, j: (i, j, 0)),
             pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
             pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B, T, m), jnp.int32),
+            jax.ShapeDtypeStruct((B, T, out_m), jnp.int32),
             jax.ShapeDtypeStruct((B, T), jnp.int32),
             jax.ShapeDtypeStruct((B, T), jnp.int32),
         ],

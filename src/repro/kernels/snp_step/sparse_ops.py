@@ -32,9 +32,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.matrix import CompiledSparseSNP
+from repro.core.matrix import CompiledSparseSNP, is_delayed
 from repro.core.plan import KernelConfig
-from repro.core.semantics import packed_rule_table, sparse_branch_info
+from repro.core.semantics import (delayed_packed_actions, packed_rule_table,
+                                  sparse_branch_info,
+                                  sparse_delayed_branch_info, split_state)
 
 from .sparse_kernel import snp_step_sparse_pallas
 
@@ -99,10 +101,16 @@ def snp_step_sparse(
 
     Bit-identical to :func:`repro.core.semantics.sparse_next_configs` (and
     hence to the dense oracle on valid entries for spike counts < 2^24),
-    for pure-ELL and hybrid ELL+COO encodings alike.
+    for pure-ELL and hybrid ELL+COO encodings alike.  A delayed ``comp``
+    (``semantics="delays"``; 3m-wide state rows) routes through the
+    kernel's delay stage and returns ``(B, T, 3m)`` successors,
+    bit-identical to
+    :func:`repro.core.semantics.sparse_delayed_next_configs`.
     """
-    B, m = configs.shape
+    B = configs.shape[0]
+    m = comp.num_neurons
     T = max_branches
+    delayed = is_delayed(comp)
     block_b, block_t = _resolve_blocks(kernel, block_b, block_t)
 
     if comp.coo_src.shape[0] and (comp.coo_bounds is None
@@ -120,13 +128,21 @@ def snp_step_sparse(
     block_b = min(block_b, max(B, 1))
     block_t = min(block_t, T)
 
-    info = sparse_branch_info(configs, comp)
-    tab = packed_rule_table(info, comp)                      # (B, m, R)
+    if delayed:
+        spikes, cd, pd = split_state(configs)
+        info = sparse_delayed_branch_info(configs, comp)
+        packed_e, packed_d = delayed_packed_actions(comp)
+        tab = packed_rule_table(info, comp, packed_e)         # (B, m, R)
+        dtab = packed_rule_table(info, comp, packed_d)
+    else:
+        spikes, cd, pd, dtab = configs, None, None, None
+        info = sparse_branch_info(configs, comp)
+        tab = packed_rule_table(info, comp)                   # (B, m, R)
 
     Bp, Tp = _round_up(B, block_b), _round_up(T, block_t)
 
     out, valid, emis = snp_step_sparse_pallas(
-        _pad_bt(configs, Bp),
+        _pad_bt(spikes, Bp),
         # padded configs: stride 1 / choices 1 / psi 0 -> no valid branches
         _pad_bt(info.stride, Bp, value=1),
         _pad_bt(info.choices.astype(jnp.int32), Bp, value=1),
@@ -137,6 +153,9 @@ def snp_step_sparse(
         coo_src=comp.coo_src if comp.coo_src.shape[0] else None,
         coo_bounds=comp.coo_bounds if comp.coo_src.shape[0] else None,
         hub_slot=comp.hub_slot if comp.coo_src.shape[0] else None,
+        dtab=_pad_bt(dtab, Bp) if delayed else None,
+        cd=_pad_bt(cd, Bp) if delayed else None,
+        pd=_pad_bt(pd, Bp) if delayed else None,
         max_branches=Tp,
         block_b=block_b, block_t=block_t,
         interpret=interpret,

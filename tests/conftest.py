@@ -1,0 +1,101 @@
+"""Shared fixtures for the cross-backend equivalence suites.
+
+The kernel-lowering registry (``StepBackend.supported_encodings``,
+semantics-aware since the delays tier) is the single source of truth for
+which ``(backend, encoding, semantics)`` cells exist.  The
+:func:`lowering_cell` fixture walks that declaration, so a newly
+registered backend, encoding, or semantics tier is oracle-checked by the
+equivalence suites with zero test changes — the consolidation of the
+per-file ``SYSTEMS``/``_assert_same_step`` copies that
+``test_backend.py`` / ``test_kernel_lowering.py`` / ``test_sparse.py``
+used to carry (``import conftest`` to reach the helpers from a test
+module).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import SystemPlan, available_backends, get_backend, paper_pi
+from repro.core.generators import (nd_chain, power_law, random_system,
+                                   ring_lattice, with_delays)
+
+# Shared equivalence workloads: (system, max_branches).  Suites pick the
+# subset that matches their cost budget by name.
+EQUIV_SYSTEMS = {
+    "paper-pi": (paper_pi(True), 16),
+    "nd-chain-4": (nd_chain(4), 32),
+    "random-16": (random_system(16, 2, 0.2, seed=4), 32),
+    "random-17": (random_system(17, 3, 0.3, seed=3), 32),
+    "ring-lattice-12": (ring_lattice(12, 3, seed=1), 16),
+    "power-law-40": (power_law(40, 3, seed=3), 16),
+}
+
+# Concrete single-device plans per declared encoding.  hub_threshold=1 is
+# the hub-tail-only extreme: the entire hub in-adjacency rides the COO
+# segment-sum stage.
+ENCODING_PLANS = {
+    "dense": (SystemPlan(encoding="dense"),),
+    "ell": (SystemPlan(encoding="ell"),),
+    "hybrid": (SystemPlan(encoding="hybrid", hub_threshold=1),
+               SystemPlan(encoding="hybrid", hub_threshold=4)),
+}
+
+SEMANTICS = ("no_delays", "delays")
+
+
+def delayed_variant(system):
+    """The delay pattern the delayed equivalence cells run under: mixed
+    per-rule delays d = k mod 3 (some instant, some closing)."""
+    return with_delays(system, lambda k, r: k % 3)
+
+
+def random_states(system, semantics, batch, seed, high=4):
+    """A batch of random state rows of the right width for ``semantics``
+    — under delays, arbitrary countdown/pending too (the lowerings must
+    agree on the whole state space, not just the reachable slice)."""
+    rng = np.random.default_rng(seed)
+    m = system.num_neurons
+    parts = [rng.integers(0, high, size=(batch, m))]
+    if semantics == "delays":
+        parts += [rng.integers(0, 3, size=(batch, m)),
+                  rng.integers(0, 3, size=(batch, m))]
+    return np.concatenate(parts, axis=1).astype(np.int32)
+
+
+def lowering_cells():
+    """Every realizable single-device ``(backend, plan)`` cell of the
+    registry, across both semantics tiers."""
+    cells = []
+    for semantics in SEMANTICS:
+        for name in sorted(available_backends()):
+            be = get_backend(name)
+            for enc in be.supported_encodings(semantics=semantics):
+                for plan in ENCODING_PLANS.get(enc, ()):
+                    p = dataclasses.replace(plan, semantics=semantics)
+                    tag = f"{semantics}-{name}-{enc}"
+                    if enc == "hybrid":
+                        tag += f"-h{plan.hub_threshold}"
+                    cells.append(pytest.param((name, p), id=tag))
+    return cells
+
+
+@pytest.fixture(params=lowering_cells())
+def lowering_cell(request):
+    """(backend name, concrete SystemPlan) — one registry cell."""
+    return request.param
+
+
+def assert_same_step(a, b):
+    """Bit-identity of two expanded steps on their valid entries."""
+    va, vb = np.asarray(a.valid), np.asarray(b.valid)
+    np.testing.assert_array_equal(va, vb)
+    np.testing.assert_array_equal(np.asarray(a.overflow),
+                                  np.asarray(b.overflow))
+    np.testing.assert_array_equal(
+        np.where(va[..., None], np.asarray(a.configs), 0),
+        np.where(vb[..., None], np.asarray(b.configs), 0))
+    np.testing.assert_array_equal(
+        np.where(va, np.asarray(a.emissions), 0),
+        np.where(vb, np.asarray(b.emissions), 0))

@@ -1,0 +1,164 @@
+"""Pure-Python oracle for the *delayed* SNP semantics.
+
+A deliberately naive, dict-and-int, host-side implementation of the
+general SNP transition (rules with firing delays, arXiv 1212.2529) in the
+style of the paper's Algorithm 2: enumerate every nondeterministic rule
+combination with ``itertools.product``, apply each one with plain loops
+over neurons and synapses.  No jax, no matrices, no shared code with
+``src/repro`` beyond the :class:`~repro.core.system.SNPSystem`
+specification layer — so a differential test against it exercises every
+layer of the vectorized implementation at once.
+
+State here is a triple of int tuples ``(spikes, countdown, pending)``;
+:func:`flatten` maps it onto the engine's flat ``3m`` row layout
+``[spikes | countdown | pending]`` for bit-for-bit comparison.
+
+Semantics (mirrors DESIGN.md "Delayed semantics"):
+
+* a neuron with ``countdown > 0`` is **closed**: none of its rules are
+  applicable, and spikes sent to it are **lost**;
+* ``countdown == 1`` means the neuron reopens *this* transition: its
+  pending spikes go out on its synapses (and to the environment if it is
+  the output neuron) now, and it can receive again this step — but it
+  cannot fire until the next step;
+* firing a rule with delay ``d > 0`` consumes immediately, closes the
+  neuron (``countdown := d``) and stores ``pending := produce``; firing
+  with ``d == 0`` emits immediately (the paper's delay-free semantics).
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Dict, Iterable, List, Set, Tuple
+
+from repro.core.system import Rule, SNPSystem
+
+State = Tuple[Tuple[int, ...], Tuple[int, ...], Tuple[int, ...]]
+
+__all__ = ["applicable", "initial_state", "flatten", "successors",
+           "explore", "run_deterministic"]
+
+
+def applicable(spikes: int, r: Rule) -> bool:
+    """Membership of ``a^spikes`` in ``L(E)`` plus the consume bound —
+    same contract as ``repro.core.semantics.applicability`` but scalar."""
+    if spikes < max(r.regex_base, r.consume):
+        return False
+    if r.covering:
+        return True
+    if r.regex_period > 0:
+        return (spikes - r.regex_base) % r.regex_period == 0
+    return spikes == r.regex_base
+
+
+def initial_state(system: SNPSystem) -> State:
+    m = system.num_neurons
+    return (tuple(system.initial_spikes), (0,) * m, (0,) * m)
+
+
+def flatten(state: State) -> Tuple[int, ...]:
+    """The engine's flat row layout: ``[spikes | countdown | pending]``."""
+    return state[0] + state[1] + state[2]
+
+
+def successors(state: State, system: SNPSystem
+               ) -> Set[Tuple[State, int]]:
+    """All ``(next_state, emission)`` of one synchronous delayed step.
+
+    Empty iff the state halts: no rule applicable anywhere *and* no
+    countdown running (a closed neuron forces the deterministic
+    countdown-decrement step even when nothing can fire).
+    """
+    spikes, cd, pd = state
+    m = system.num_neurons
+    per_neuron: List[List] = []
+    for i in range(m):
+        if cd[i] > 0:  # closed: rules suspended
+            per_neuron.append([None])
+            continue
+        apps = [r for r in system.rules
+                if r.neuron == i and applicable(spikes[i], r)]
+        per_neuron.append(apps if apps else [None])
+    if all(c == [None] for c in per_neuron) and not any(cd):
+        return set()
+
+    syn = set(system.synapses)
+    out: Set[Tuple[State, int]] = set()
+    for combo in itertools.product(*per_neuron):
+        ns = list(spikes)
+        ncd = [max(c - 1, 0) for c in cd]
+        npd = list(pd)
+        emit = [0] * m  # what each neuron puts on its synapses this step
+        for i in range(m):
+            if cd[i] == 1:  # reopening: pending spikes go out now
+                emit[i] += pd[i]
+                npd[i] = 0
+        for r in combo:
+            if r is None:
+                continue
+            ns[r.neuron] -= r.consume
+            if r.delay == 0:
+                emit[r.neuron] += r.produce
+            else:  # close for d steps; spikes land on reopen
+                ncd[r.neuron] = r.delay
+                npd[r.neuron] = r.produce
+        emission = emit[system.output_neuron] \
+            if system.output_neuron >= 0 else 0
+        for i in range(m):
+            if not emit[i]:
+                continue
+            for j in range(m):
+                # closed receivers lose the spikes (ncd is the *post*
+                # countdown: a neuron that just reopened receives, a
+                # neuron that just fired a delayed rule does not)
+                if (i, j) in syn and ncd[j] == 0:
+                    ns[j] += emit[i]
+        out.add(((tuple(ns), tuple(ncd), tuple(npd)), emission))
+    return out
+
+
+def explore(system: SNPSystem, max_steps: int
+            ) -> Tuple[Set[Tuple[int, ...]], bool]:
+    """BFS over the delayed computation tree (paper Alg. 1, host-side):
+    returns (flat reachable states incl. the initial one, exhausted?)."""
+    init = flatten(initial_state(system))
+    seen: Set[Tuple[int, ...]] = {init}
+    frontier: Set[State] = {initial_state(system)}
+    exhausted = False
+    for _ in range(max_steps):
+        nxt: Set[State] = set()
+        for s in frontier:
+            for succ, _ in successors(s, system):
+                if flatten(succ) not in seen:
+                    seen.add(flatten(succ))
+                    nxt.add(succ)
+        if not nxt:
+            exhausted = True
+            break
+        frontier = nxt
+    return seen, exhausted
+
+
+def run_deterministic(system: SNPSystem, steps: int
+                      ) -> Tuple[List[Tuple[int, ...]], List[int]]:
+    """One trajectory of a *deterministic* delayed system (every state has
+    at most one successor): returns (flat states after each step,
+    emissions).  Raises if a state branches — use :func:`successors`
+    directly for nondeterministic systems."""
+    state = initial_state(system)
+    states: List[Tuple[int, ...]] = []
+    emissions: List[int] = []
+    for _ in range(steps):
+        succ = successors(state, system)
+        if len(succ) > 1:
+            raise ValueError(
+                f"system {system.name!r} branches ({len(succ)} successors) "
+                "— not deterministic")
+        if not succ:  # halted: hold the state (engine serving convention)
+            states.append(flatten(state))
+            emissions.append(0)
+            continue
+        (state, emis), = succ
+        states.append(flatten(state))
+        emissions.append(emis)
+    return states, emissions

@@ -15,19 +15,18 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+import conftest
 from repro.core import (available_backends, compile_system, explore,
                         get_backend, paper_pi, register_backend, run_trace,
                         run_traces)
 from repro.core.backend import (PallasBackend, RefBackend, SparseBackend,
                                 SparsePallasBackend)
-from repro.core.generators import nd_chain, random_system
+from repro.core.generators import nd_chain
 from repro.serve.snp_service import SNPTraceService, TraceRequest
 
-SYSTEMS = {
-    "paper-pi": (paper_pi(True), 16),
-    "nd-chain-4": (nd_chain(4), 32),
-    "random-16": (random_system(16, 2, 0.2, seed=4), 32),
-}
+# consumer-equivalence workloads: the cheap subset of the shared fixtures
+SYSTEMS = {k: conftest.EQUIV_SYSTEMS[k]
+           for k in ("paper-pi", "nd-chain-4", "random-16")}
 
 NON_REF = [b for b in available_backends() if b != "ref"]
 
@@ -79,15 +78,7 @@ def test_backends_agree_on_step_out(name):
     ref, be = get_backend("ref"), get_backend(name)
     a = ref.expand(cfgs, ref.compile(system), 8)
     b = be.expand(cfgs, be.compile(system), 8)
-    va, vb = np.asarray(a.valid), np.asarray(b.valid)
-    np.testing.assert_array_equal(va, vb)
-    np.testing.assert_array_equal(np.asarray(a.overflow), np.asarray(b.overflow))
-    np.testing.assert_array_equal(
-        np.where(va[..., None], np.asarray(a.configs), 0),
-        np.where(vb[..., None], np.asarray(b.configs), 0))
-    np.testing.assert_array_equal(
-        np.where(va, np.asarray(a.emissions), 0),
-        np.where(vb, np.asarray(b.emissions), 0))
+    conftest.assert_same_step(a, b)
     assert b.spiking is None  # only ref materializes S
 
 

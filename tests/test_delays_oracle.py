@@ -1,0 +1,153 @@
+"""Differential tests: the delayed-semantics engine vs the pure-Python
+oracle (:mod:`tests.oracle`).
+
+Every test drives the real entry points (``explore`` / ``run_trace`` with
+``SystemPlan(semantics="delays")``) and compares *flat state rows*
+bit-for-bit against the oracle's host-side enumeration — plus hand-built
+scenarios where the expected states are written out literally, so the
+oracle itself is pinned down and can't drift along with the engine.
+"""
+
+import numpy as np
+import pytest
+
+import oracle
+from repro.core import (SystemPlan, Rule, SNPSystem, explore, paper_pi,
+                        run_trace, with_delays)
+
+BACKENDS = ("ref", "pallas", "sparse", "sparse_pallas")
+
+
+def _plan(backend):
+    enc = "dense" if backend in ("ref", "pallas") else "ell"
+    return SystemPlan(semantics="delays", encoding=enc)
+
+
+def engine_reachable(system, backend, max_steps=10, max_branches=64):
+    res = explore(system, max_steps=max_steps, max_branches=max_branches,
+                  backend=backend, plan=_plan(backend))
+    rows = np.asarray(res.configs[:res.num_discovered])
+    return set(map(tuple, rows.tolist())), bool(res.exhausted)
+
+
+# ---------------------------------------------------------------------------
+# Hand-built scenarios (expected states written out literally)
+# ---------------------------------------------------------------------------
+
+def test_pending_lands_on_reopen_and_d_step_closure():
+    # n0 fires a d=2 rule: closed for exactly 2 steps, its spike lands on
+    # n1 when it reopens — not before, not after.
+    sysd = SNPSystem(
+        num_neurons=2, initial_spikes=(1, 0),
+        rules=(Rule(neuron=0, consume=1, produce=1, regex_base=1, delay=2),),
+        synapses=((0, 1),), output_neuron=1, name="reopen")
+    states, emis = oracle.run_deterministic(sysd, 4)
+    assert states == [
+        (0, 0, 2, 0, 1, 0),   # fired: consumed now, closed, pending stored
+        (0, 0, 1, 0, 1, 0),   # still closed (countdown 2 -> 1)
+        (0, 1, 0, 0, 0, 0),   # reopened: pending landed on n1
+        (0, 1, 0, 0, 0, 0),   # halted (n1 has no rules)
+    ]
+    assert emis == [0, 0, 0, 0]
+    for backend in BACKENDS:
+        out = run_trace(sysd, steps=4, backend=backend, plan=_plan(backend))
+        assert np.asarray(out.configs).tolist() == [list(s) for s in states]
+
+
+def test_spikes_into_closed_neuron_are_lost():
+    # n1 closes itself (d=3 forgetting rule) in the same step n0 spikes at
+    # it — the spike is lost.  The zero-delay control receives it.
+    rules = (Rule(neuron=0, consume=1, produce=1, regex_base=2, delay=0),
+             Rule(neuron=1, consume=1, produce=0, regex_base=1, delay=3))
+    sysd = SNPSystem(num_neurons=2, initial_spikes=(2, 1), rules=rules,
+                     synapses=((0, 1),), name="loss")
+    states, _ = oracle.run_deterministic(sysd, 4)
+    assert states == [
+        (1, 0, 0, 3, 0, 0),   # n0's spike vanished into closed n1
+        (1, 0, 0, 2, 0, 0),
+        (1, 0, 0, 1, 0, 0),
+        (1, 0, 0, 0, 0, 0),   # reopened; nothing pending (forgetting rule)
+    ]
+    # zero-delay control: same wiring, n1's rule instant — spike arrives
+    # (n1 forgets its own initial spike in step 1, then holds n0's).
+    sys0 = with_delays(sysd, 0)
+    states0, _ = oracle.run_deterministic(sys0, 2)
+    assert states0[0] == (1, 1, 0, 0, 0, 0)
+    for backend in BACKENDS:
+        out = run_trace(sysd, steps=4, backend=backend, plan=_plan(backend))
+        assert np.asarray(out.configs).tolist() == [list(s) for s in states]
+
+
+def test_closed_neuron_suspends_applicability():
+    # While closed, n0 holds spikes that match its rule but cannot fire;
+    # the step is the deterministic countdown decrement (one successor).
+    sysd = SNPSystem(
+        num_neurons=2, initial_spikes=(2, 0),
+        rules=(Rule(neuron=0, consume=1, produce=1, regex_base=1,
+                    regex_period=1, covering=True, delay=2),),
+        synapses=((0, 1),), name="suspend")
+    s1 = ((1, 0), (2, 0), (1, 0))
+    succ = oracle.successors(s1, sysd)
+    assert succ == {(((1, 0), (1, 0), (1, 0)), 0)}  # no fire, just decrement
+    # ...and on the reopen step the pending lands on n1; n0 can only
+    # fire again the step after (rules stay suspended while reopening).
+    states, _ = oracle.run_deterministic(sysd, 3)
+    assert states == [
+        (1, 0, 2, 0, 1, 0),
+        (1, 0, 1, 0, 1, 0),
+        (1, 1, 0, 0, 0, 0),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Differential: engine (all four backends) vs oracle BFS
+# ---------------------------------------------------------------------------
+
+def _delay_variants():
+    base = paper_pi()
+    return [
+        with_delays(base, 0),                     # all-zero: delay-free tier
+        with_delays(base, 1),                     # uniform closure
+        with_delays(base, lambda k, r: k % 3),    # mixed per-rule delays
+        with_delays(base, (2, 0, 1, 0, 3)),       # explicit vector
+    ]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("variant", range(4))
+def test_paper_pi_with_delays_matches_oracle(backend, variant):
+    sysd = _delay_variants()[variant]
+    want, want_done = oracle.explore(sysd, max_steps=8)
+    got, got_done = engine_reachable(sysd, backend, max_steps=8)
+    assert got == want
+    assert got_done == want_done
+
+
+def test_zero_delay_oracle_matches_no_delays_engine():
+    # The oracle with all delays zero, projected onto the spikes slice,
+    # is exactly the delay-free engine's reachable set.
+    base = paper_pi()
+    want, _ = oracle.explore(with_delays(base, 0), max_steps=8)
+    m = base.num_neurons
+    assert all(not any(row[m:]) for row in want)  # cd/pd stay zero
+    res = explore(base, max_steps=8, backend="ref")
+    rows = np.asarray(res.configs[:res.num_discovered])
+    assert set(map(tuple, rows.tolist())) == {row[:m] for row in want}
+
+
+def test_deterministic_emissions_match_oracle():
+    # Delayed emission timing: the output neuron's spike reaches the
+    # environment when it reopens, d steps after firing.
+    sysd = SNPSystem(
+        num_neurons=2, initial_spikes=(1, 1),
+        rules=(Rule(neuron=0, consume=1, produce=1, regex_base=1, delay=0),
+               Rule(neuron=1, consume=1, produce=1, regex_base=1,
+                    regex_period=1, delay=2)),
+        synapses=((0, 1),), output_neuron=1, name="emit-delayed")
+    states, emis = oracle.run_deterministic(sysd, 6)
+    assert emis[0] == 0          # fired with d=2: nothing out yet
+    assert emis[2] == 1          # lands on reopen, two steps later
+    for backend in BACKENDS:
+        out = run_trace(sysd, steps=6, backend=backend, plan=_plan(backend))
+        assert np.asarray(out.configs).tolist() == [list(s) for s in states]
+        assert np.asarray(out.emissions).tolist() == emis

@@ -21,28 +21,13 @@ import pytest
 
 import jax.numpy as jnp
 
-from repro.core import (SystemPlan, available_backends, get_backend,
-                        paper_pi, supports_sharded)
-from repro.core.generators import power_law, random_system, ring_lattice
+import conftest
+from repro.core import (SystemPlan, available_backends, compile_sharded,
+                        get_backend, paper_pi, supports_sharded)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-SYSTEMS = {
-    "paper-pi": (paper_pi(True), 16),
-    "random-17": (random_system(17, 3, 0.3, seed=3), 32),
-    "ring-lattice-12": (ring_lattice(12, 3, seed=1), 16),
-    "power-law-40": (power_law(40, 3, seed=3), 16),
-}
-
-# Concrete single-device plans per declared encoding.  hub_threshold=1 is
-# the hub-tail-only extreme: the entire hub in-adjacency rides the COO
-# segment-sum stage.
-PLANS = {
-    "dense": (SystemPlan(encoding="dense"),),
-    "ell": (SystemPlan(encoding="ell"),),
-    "hybrid": (SystemPlan(encoding="hybrid", hub_threshold=1),
-               SystemPlan(encoding="hybrid", hub_threshold=4)),
-}
+SYSTEM_NAMES = ("paper-pi", "random-17", "ring-lattice-12", "power-law-40")
 
 
 def _run(ndev: int, body: str) -> subprocess.CompletedProcess:
@@ -53,19 +38,6 @@ def _run(ndev: int, body: str) -> subprocess.CompletedProcess:
         [sys.executable, "-c", textwrap.dedent(body)],
         env=env, capture_output=True, text=True, timeout=600,
     )
-
-
-def _assert_same_step(a, b):
-    va, vb = np.asarray(a.valid), np.asarray(b.valid)
-    np.testing.assert_array_equal(va, vb)
-    np.testing.assert_array_equal(np.asarray(a.overflow),
-                                  np.asarray(b.overflow))
-    np.testing.assert_array_equal(
-        np.where(va[..., None], np.asarray(a.configs), 0),
-        np.where(vb[..., None], np.asarray(b.configs), 0))
-    np.testing.assert_array_equal(
-        np.where(va, np.asarray(a.emissions), 0),
-        np.where(vb, np.asarray(b.emissions), 0))
 
 
 # ---------------------------------------------------------------------------
@@ -87,30 +59,56 @@ def test_lowering_registry_declarations():
     assert "hybrid" not in get_backend("pallas").supported_encodings()
 
 
+def test_lowering_registry_semantics_dimension():
+    """The delays tier narrows every built-in's declaration: same native
+    encodings, no 'sharded' (the halo exchange carries spike counts
+    only), never silently widened."""
+    for name in available_backends():
+        sup = get_backend(name).supported_encodings(semantics="delays")
+        assert sup, name
+        assert "sharded" not in sup, name
+    assert get_backend("ref").supported_encodings(semantics="delays") \
+        == ("dense",)
+    assert get_backend("sparse_pallas").supported_encodings(
+        semantics="delays") == ("ell", "hybrid")
+
+
+def test_unlowerable_semantics_combinations_raise():
+    """Combinations outside the registry raise — no silent downgrade."""
+    sysd = conftest.delayed_variant(paper_pi(True))
+    # delayed rules under the paper's delay-free semantics
+    with pytest.raises(ValueError, match="delay"):
+        get_backend("ref").compile(sysd)
+    # sharded × delays: refused at plan construction and at compile
+    with pytest.raises(ValueError, match="shard"):
+        SystemPlan.for_system(sysd, num_shards=2, semantics="delays")
+    with pytest.raises(ValueError, match="delays"):
+        compile_sharded(sysd, SystemPlan(num_shards=2, semantics="delays"))
+
+
 # ---------------------------------------------------------------------------
-# backend × encoding (single device): bit-identity to ref
+# backend × encoding × semantics (single device): bit-identity to ref
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("name", sorted(available_backends()))
-@pytest.mark.parametrize("system_name", sorted(SYSTEMS))
-def test_backend_encoding_matrix_matches_ref(name, system_name):
-    """Walk every (backend, declared encoding, plan) cell and assert the
-    expanded step equals the dense oracle bit-for-bit on valid entries —
-    the interpret-mode kernels included."""
-    system, T = SYSTEMS[system_name]
+@pytest.mark.parametrize("system_name", SYSTEM_NAMES)
+def test_backend_encoding_matrix_matches_ref(lowering_cell, system_name):
+    """Walk every (backend, declared encoding, plan, semantics) cell of
+    the registry (the shared ``lowering_cell`` fixture) and assert the
+    expanded step equals the ref oracle bit-for-bit on valid entries —
+    the interpret-mode kernels and the delayed tier included."""
+    name, plan = lowering_cell
+    system, T = conftest.EQUIV_SYSTEMS[system_name]
+    if plan.semantics == "delays":
+        system = conftest.delayed_variant(system)
     be = get_backend(name)
     ref = get_backend("ref")
-    rng = np.random.default_rng(abs(hash((name, system_name))) % 2**31)
-    cfgs = jnp.asarray(
-        rng.integers(0, 4, size=(5, system.num_neurons)), jnp.int32)
-    want = ref.expand(cfgs, ref.compile(system), T)
-    cells = 0
-    for enc in be.supported_encodings():
-        for plan in PLANS.get(enc, ()):
-            comp = be.compile(system, plan=plan)
-            _assert_same_step(want, be.expand(cfgs, comp, T))
-            cells += 1
-    assert cells >= 1
+    ref_plan = SystemPlan(encoding="dense", semantics=plan.semantics)
+    cfgs = jnp.asarray(conftest.random_states(
+        system, plan.semantics, batch=5,
+        seed=abs(hash((name, system_name))) % 2**31))
+    want = ref.expand(cfgs, ref.compile(system, plan=ref_plan), T)
+    conftest.assert_same_step(
+        want, be.expand(cfgs, be.compile(system, plan=plan), T))
 
 
 # ---------------------------------------------------------------------------

@@ -14,6 +14,7 @@ import pytest
 
 import jax.numpy as jnp
 
+from conftest import assert_same_step as _assert_same_step
 from repro.core import (compile_system, compile_system_sparse, explore,
                         get_backend, paper_pi, successor_set)
 from repro.core.generators import (counter, nd_chain, power_law,
@@ -52,17 +53,8 @@ def _brute_force_M(system):
     return M, tuple(order)
 
 
-def _assert_same_step(a, b):
-    va, vb = np.asarray(a.valid), np.asarray(b.valid)
-    np.testing.assert_array_equal(va, vb)
-    np.testing.assert_array_equal(np.asarray(a.overflow),
-                                  np.asarray(b.overflow))
-    np.testing.assert_array_equal(
-        np.where(va[..., None], np.asarray(a.configs), 0),
-        np.where(vb[..., None], np.asarray(b.configs), 0))
-    np.testing.assert_array_equal(
-        np.where(va, np.asarray(a.emissions), 0),
-        np.where(vb, np.asarray(b.emissions), 0))
+# _assert_same_step lives in conftest.py (shared by the equivalence
+# suites); imported above under its historical local name.
 
 
 # ---------------------------------------------------------------------------

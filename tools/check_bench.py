@@ -11,8 +11,8 @@ a hole.  Two checks against a baseline:
 1. **Structure** — the *key structure* (never the timings) may only grow:
 
    * a **tier** is the first ``/``-segment of a row name (``snp_step``,
-     ``snp_step_large``, ``hybrid``, ``hybrid_kernel``, ``explore``,
-     ``serve``, ``serve_fault``, ...);
+     ``snp_step_large``, ``hybrid``, ``hybrid_kernel``, ``delays``,
+     ``explore``, ``serve``, ``serve_fault``, ...);
    * a **backend/mode key** is any later segment from the known
      vocabulary (step-backend registry names, plan encodings, serve
      modes; ``meshN`` normalizes to ``mesh`` so the faked device count
@@ -62,6 +62,8 @@ KNOWN_KEYS = {
     "ell", "hybrid",
     # serve modes ("meshN" is normalized separately)
     "sync", "async",
+    # semantics tiers (delays tier rows)
+    "no_delays", "delays",
     # planner tier row kinds (auto tier)
     "auto", "best", "worst",
 }
