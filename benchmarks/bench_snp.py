@@ -270,6 +270,76 @@ def delays_rows(quick: bool = False):
     return out
 
 
+def explore_rows(quick: bool = False):
+    """Explore dedup tier: end-to-end BFS throughput, sorted vs hash
+    visited set (DESIGN.md §2).
+
+    The legacy dedup re-sorts the full capacity-``V`` visited arrays
+    every wave (``O((V+C)·log(V+C))`` regardless of how few slots are
+    occupied); the hash table probes only the ``C`` wave candidates
+    (``O(C·probe)``).  Per (system, caps) point the ``sorted`` row is the
+    baseline and the ``hash`` row's derived field is the waves/sec
+    speedup; both report ``syncsN`` — the number of host↔device round
+    trips the whole run performed (the fused ``lax.while_loop`` drivers
+    make exactly one dispatch when not checkpointing).  ``counter`` is
+    the dedup-bound extreme (one new config per wave, deep BFS);
+    unbounded power-law adds expansion cost at m in {512, 2048, 8192}.
+    The ``explore/partition`` rows price the degree-weighted LPT
+    assignment against the contiguous slicing and report the resulting
+    per-shard degree-load stats (EXPERIMENTS.md §Explore)."""
+    from repro.core.engine import explore
+    from repro.core.generators import counter
+    from repro.core.plan import partition_neurons, partition_stats
+    from repro.runtime.faults import FaultInjector
+
+    reps = 1 if quick else 3
+    sp = get_backend("sparse")
+    cases = [("counter", counter(12), "ref", None,
+              dict(max_steps=96, frontier_cap=16, visited_cap=16384,
+                   max_branches=8))]
+    sizes = (512,) if quick else (512, 2048, 8192)
+    for m in sizes:
+        system = power_law(m, 4, seed=2)            # no max_in: real hubs
+        cases.append(("power_law", system, sp, SystemPlan.for_system(system),
+                      dict(max_steps=8, frontier_cap=16,
+                           visited_cap=65536, max_branches=8)))
+    out = []
+    for tag, system, backend, plan, kw in cases:
+        us_sorted = None
+        for dedup in ("sorted", "hash"):
+            arg = "sort" if dedup == "sorted" else "hash"
+            explore(system, dedup=arg, backend=backend, plan=plan,
+                    **kw)                            # compile
+            inj = FaultInjector()
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                r = explore(system, dedup=arg, backend=backend, plan=plan,
+                            fault_injector=inj, **kw)
+            us = (time.perf_counter() - t0) / reps * 1e6
+            syncs = inj.calls // reps
+            rate = max(r.steps, 1) / (us / 1e6)
+            name = (f"explore/{tag}/{dedup}/m{system.num_neurons}"
+                    f"_F{kw['frontier_cap']}_T{kw['max_branches']}"
+                    f"_V{kw['visited_cap']}")
+            derived = (f"{rate:.1f}waves/s,syncs{syncs}"
+                       if us_sorted is None
+                       else f"{us_sorted / us:.2f}x_sorted,syncs{syncs}")
+            if us_sorted is None:
+                us_sorted = us
+            out.append((name, us, derived))
+    # degree-weighted vs contiguous shard assignment: cost of the
+    # partition itself + the per-shard degree-load stats it buys
+    psys = power_law(sizes[-1], 4, seed=2)
+    for part in ("contiguous", "degree"):
+        t0 = time.perf_counter()
+        *_, occ = partition_neurons(psys, 8, part)
+        us = (time.perf_counter() - t0) * 1e6
+        st = partition_stats(occ)
+        out.append((f"explore/partition/{part}/m{psys.num_neurons}_S8",
+                    us, f"occ_max{st['max']:.0f},imb{st['imbalance']:.2f}"))
+    return out
+
+
 def auto_rows(quick: bool = False):
     """Planner tier: what ``mode="auto"`` actually costs vs a fixed
     backend choice, at the standard-sweep shapes.
@@ -351,6 +421,7 @@ def main(path: str = "BENCH_snp.json", quick: bool = False) -> None:
                                       + hybrid_rows(quick)
                                       + hybrid_kernel_rows(quick)
                                       + delays_rows(quick)
+                                      + explore_rows(quick)
                                       + auto_rows(quick)
                                       + bench_tree.rows(quick))
         ],

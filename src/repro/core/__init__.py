@@ -22,6 +22,10 @@ Public API:
   bit-identical to the historical encodings.
 * :func:`repro.core.engine.explore` — computation-tree BFS (paper Alg. 1)
   as one on-device ``lax.while_loop``.
+* :mod:`repro.core.hashtable` — device-resident open-addressing hash
+  table (batched insert-if-absent in one jitted call) backing the BFS
+  visited set: ``O(wave·probe)`` dedup instead of re-sorting the visited
+  arrays every wave, on one chip and per shard in the distributed runs.
 * :func:`repro.core.engine.run_traces` — batched trajectory serving.
 * :mod:`repro.core.distributed` — multi-chip workloads (shard_map):
   ``explore_distributed`` (hash-partitioned BFS) and
@@ -40,16 +44,19 @@ from .backend import (PallasBackend, RefBackend, SparseBackend,
                       resolve_entry, resolve_entry_info, resolve_kernel,
                       supported_under, supports_sharded)
 from .engine import (ExploreResult, TraceOut, emission_gaps, explore,
-                     run_trace, run_traces, successor_set)
+                     resolve_dedup, run_trace, run_traces, successor_set)
 from .failover import (DEGRADE_ORDER, DegradeEvent, add_degrade_listener,
                        degrade_candidates, remove_degrade_listener,
                        run_with_failover)
 from .generators import with_delays
+from .hashtable import (HashTable, first_occurrence, insert_if_absent,
+                        insert_unique, lookup, make_table, table_slots)
 from .matrix import (CompiledSNP, CompiledSparseSNP, compile_system,
                      compile_system_sparse, is_compiled, is_delayed)
 from .plan import (DenseShardArrays, KernelConfig, ShardedCompiled,
                    SystemPlan, auto_hub_threshold, compile_sharded,
-                   is_sharded, lower_shard_dense)
+                   is_sharded, lower_shard_dense, partition_neurons,
+                   partition_stats)
 from .semantics import (applicability, branch_info, delayed_next_configs,
                         next_configs, sparse_delayed_next_configs,
                         sparse_next_configs, spiking_vectors, split_state)
@@ -61,7 +68,9 @@ __all__ = [
     "compile_system_sparse", "is_compiled", "is_delayed",
     "SystemPlan", "KernelConfig", "ShardedCompiled", "DenseShardArrays",
     "auto_hub_threshold", "compile_sharded", "is_sharded",
-    "lower_shard_dense",
+    "lower_shard_dense", "partition_neurons", "partition_stats",
+    "HashTable", "make_table", "table_slots", "lookup", "first_occurrence",
+    "insert_unique", "insert_if_absent",
     "applicability", "branch_info", "next_configs", "sparse_next_configs",
     "spiking_vectors", "split_state", "delayed_next_configs",
     "sparse_delayed_next_configs", "with_delays",
@@ -72,6 +81,6 @@ __all__ = [
     "resolve_kernel", "supported_under", "supports_sharded",
     "DEGRADE_ORDER", "DegradeEvent", "add_degrade_listener",
     "degrade_candidates", "remove_degrade_listener", "run_with_failover",
-    "explore", "ExploreResult", "TraceOut", "successor_set",
+    "explore", "resolve_dedup", "ExploreResult", "TraceOut", "successor_set",
     "emission_gaps", "run_trace", "run_traces",
 ]

@@ -569,10 +569,17 @@ def choice_to_plan(choice: TunedChoice, system: SNPSystem, *,
     if num_shards > 1:
         if "sharded" not in sup:
             return None
+        # Hub regime: spread the heavy in-degree neurons across shards
+        # (same degree test as the hybrid-encoding flip below).
+        in_deg = _in_degrees(system)
+        h = auto_hub_threshold(in_deg)
+        kin = int(in_deg.max()) if in_deg.size else 0
+        part = "degree" if kin > 2 * h else "contiguous"
         # Per-shard lowerings are ELL-only (compile_sharded).
         return SystemPlan(encoding="ell", num_shards=num_shards,
                           mode=mode, backend=choice.backend,
-                          kernel=choice.kernel(), semantics=semantics)
+                          kernel=choice.kernel(), semantics=semantics,
+                          partition=part)
     encoding, hub = choice.encoding, choice.hub_threshold
     if encoding == "auto" and sup[0] == "ell":
         in_deg = _in_degrees(system)

@@ -71,6 +71,8 @@ from .backend import (BackendLike, PallasBackend, SparsePallasBackend,
 from .engine import ExploreResult, TraceOut, _traces_scan
 from .failover import run_with_failover
 from .hashing import SENTINEL, config_hash, zobrist_hash
+from .hashtable import (HashTable, _base_slot, _canonical, first_occurrence,
+                        insert_unique, lookup, table_slots)
 from .matrix import CompiledAny, is_compiled
 from .plan import (DenseShardArrays, ShardArrays, ShardedCompiled,
                    SystemPlan, compile_sharded, is_sharded, shard_view)
@@ -82,12 +84,14 @@ __all__ = ["explore_distributed", "run_traces_distributed"]
 
 
 # ---------------------------------------------------------------------------
-# Checkpoint/resume for the host-driven per-step loops.  Both exploration
-# schemes advance device state one BFS level per host iteration, which is
-# a natural checkpoint boundary: the state tuple is snapshotted every
-# ``checkpoint_every`` levels through the atomic-rename machinery and a
-# re-invoked run restores the latest snapshot (re-sharded onto the live
-# mesh via each template leaf's sharding) and continues bit-identically.
+# Checkpoint/resume for the fused device loops.  Both exploration schemes
+# run their BFS as one ``lax.while_loop`` under shard_map; the absolute
+# step and the convergence scalar ride the carry, so chunking the loop on
+# absolute step bounds (``checkpoint_every`` levels per device call) is
+# bit-identical to an uninterrupted run.  The state tuple is snapshotted
+# between chunks through the atomic-rename machinery and a re-invoked run
+# restores the latest snapshot (re-sharded onto the live mesh via each
+# template leaf's sharding) and continues bit-identically.
 # ---------------------------------------------------------------------------
 
 
@@ -113,6 +117,37 @@ def _save_loop_state(checkpoint_dir, step: int, state: tuple) -> None:
                                                        tuple(state)))
 
 
+def _run_fused_loop(loop_fn, lead, state, *, max_steps, checkpoint_dir,
+                    checkpoint_every, fault_injector):
+    """Drive a fused BFS while-loop to convergence.
+
+    Without checkpointing this is ONE device call covering all
+    ``max_steps`` levels: the convergence poll is the while-loop predicate
+    on device, so no host transfer happens between BFS levels.  With
+    ``checkpoint_dir`` the same executable is called per chunk
+    (``checkpoint_every`` absolute levels each; ``bound`` is a traced
+    scalar) — bit-identical to the uninterrupted run, with only the two
+    loop scalars read back between chunks.  ``state`` is the loop carry
+    with ``step`` at ``[-2]`` and the convergence count at ``[-1]``."""
+    if checkpoint_dir is None:
+        if fault_injector is not None:
+            fault_injector.on_device_call()
+        return loop_fn(*lead, *state, jnp.asarray(max_steps, jnp.int32))
+    state, _ = _restore_loop_state(checkpoint_dir, state)
+    step, total_new = (int(x) for x in jax.device_get(
+        (state[-2], state[-1])))
+    while step < max_steps and total_new > 0:
+        bound = min(step + checkpoint_every, max_steps)
+        if fault_injector is not None:
+            fault_injector.on_device_call()
+        state = loop_fn(*lead, *state, jnp.asarray(bound, jnp.int32))
+        step, total_new = (int(x) for x in jax.device_get(
+            (state[-2], state[-1])))
+        if step < max_steps and total_new > 0:
+            _save_loop_state(checkpoint_dir, step, state)
+    return state
+
+
 def _flat_mesh(mesh: Optional[Mesh]) -> Tuple[Mesh, str]:
     """Resolve ``mesh`` to a 1-D mesh + axis name, flattening N-d meshes
     (SNP serving and exploration are pure data parallelism, so every mesh
@@ -124,11 +159,15 @@ def _flat_mesh(mesh: Optional[Mesh]) -> Tuple[Mesh, str]:
     return Mesh(mesh.devices.reshape(-1), ("x",)), "x"
 
 
-def _device_step(comp, frontier, frontier_valid, visited_hi, visited_lo,
-                 archive, archive_n, flags, *, axis, ndev, max_branches,
-                 send_cap, backend):
-    """Per-device body (runs under shard_map over ``axis``).  ``ndev`` is
-    the static mesh size (it sizes bincounts and send buffers)."""
+def _dense_body(comp, carry, *, axis, ndev, max_branches, send_cap,
+                visited_cap, backend):
+    """One BFS level of the dense-row scheme (runs inside the fused
+    ``lax.while_loop`` under shard_map over ``axis``).  ``ndev`` is the
+    static mesh size (it sizes bincounts and send buffers); dedup is the
+    per-device hash-table shard (``core.hashtable``), so a level costs
+    ``O(R·probe)`` gathers instead of re-sorting the visited shard."""
+    (frontier, frontier_valid, vhi, vlo, vpay, vcount, archive, archive_n,
+     flags, step, _) = carry
     F, m = frontier.shape
     T = max_branches
     K = F * T
@@ -171,26 +210,13 @@ def _device_step(comp, frontier, frontier_valid, visited_hi, visited_lo,
     recv_val = jax.lax.all_to_all(send_val, axis, 0, 0, tiled=True)
     rhi = jax.lax.all_to_all(send_hi, axis, 0, 0, tiled=True)
     rlo = jax.lax.all_to_all(send_lo, axis, 0, 0, tiled=True)
-    R = ndev * C
 
-    # --- dedup received candidates against the local visited shard --------
+    # --- dedup received candidates against the local table shard ----------
     rvalid = recv_val == 1
-    rhi = jnp.where(rvalid, rhi, SENTINEL)
-    rlo = jnp.where(rvalid, rlo, SENTINEL)
-    V = visited_hi.shape[0]
-    all_hi = jnp.concatenate([visited_hi, rhi])
-    all_lo = jnp.concatenate([visited_lo, rlo])
-    payload = jnp.concatenate(
-        [jnp.full((V,), R, jnp.int32), jnp.arange(R, dtype=jnp.int32)])
-    is_cand = jnp.concatenate(
-        [jnp.zeros((V,), jnp.int32), rvalid.astype(jnp.int32)])
-    s_hi, s_lo, s_cand, s_payload = jax.lax.sort(
-        (all_hi, all_lo, is_cand, payload), num_keys=3)
-    eq_prev = jnp.concatenate([
-        jnp.zeros((1,), bool),
-        (s_hi[1:] == s_hi[:-1]) & (s_lo[1:] == s_lo[:-1])])
-    new_sorted = (s_cand == 1) & ~eq_prev
-    new_mask = jnp.zeros((R,), bool).at[s_payload].set(new_sorted, mode="drop")
+    table = HashTable(vhi, vlo, vpay, vcount[0])
+    found, _ = lookup(table, rhi, rlo, rvalid)
+    first, ovf_f = first_occurrence(rhi, rlo, rvalid)
+    new_mask = rvalid & first & ~found
 
     n_new = jnp.sum(new_mask, dtype=jnp.int32)
     sel = jnp.argsort(~new_mask, stable=True)[:F]
@@ -199,14 +225,12 @@ def _device_step(comp, frontier, frontier_valid, visited_hi, visited_lo,
     next_frontier = recv_cfg[sel]
     frontier_ovf = n_new > F
 
-    ins_hi = jnp.where(ins, rhi[sel], SENTINEL)
-    ins_lo = jnp.where(ins, rlo[sel], SENTINEL)
-    visited_n = jnp.sum(visited_hi != SENTINEL) + jnp.sum(
-        (visited_hi == SENTINEL) & (visited_lo != SENTINEL))
-    m_hi, m_lo = jax.lax.sort(
-        (jnp.concatenate([visited_hi, ins_hi]),
-         jnp.concatenate([visited_lo, ins_lo])), num_keys=2)
-    visited_ovf = (visited_n + n_ins) > V
+    # only the selected prefix becomes visited (payload = archive row), so
+    # excess discoveries regenerate later — same soundness as the engine
+    table, _, ovf_i = insert_unique(
+        table, rhi[sel], rlo[sel], ins,
+        (archive_n + jnp.arange(F)).astype(jnp.int32))
+    visited_ovf = ovf_f | ovf_i | (vcount[0] + n_ins > visited_cap)
 
     arch_idx = jnp.where(ins, archive_n + jnp.arange(F), archive.shape[0])
     archive = archive.at[arch_idx].set(next_frontier, mode="drop")
@@ -215,8 +239,32 @@ def _device_step(comp, frontier, frontier_valid, visited_hi, visited_lo,
     flags = flags | jnp.stack([branch_ovf | send_ovf, frontier_ovf,
                                visited_ovf])
     total_new = jax.lax.psum(n_ins, axis)
-    return (next_frontier, ins, m_hi[:V], m_lo[:V], archive, archive_n,
-            flags, total_new)
+    return (next_frontier, ins, table.slots_hi, table.slots_lo,
+            table.slot_payload, table.count[None], archive, archive_n,
+            flags, step + 1, total_new)
+
+
+def _dense_loop(comp, frontier, fvalid, vhi, vlo, vpay, vcount, archive,
+                archive_n, flags, step, total_new, bound, *, axis, ndev,
+                max_branches, send_cap, visited_cap, backend):
+    """The whole dense-row BFS (up to ``bound`` absolute levels) as one
+    ``lax.while_loop`` under shard_map: the historical host-side
+    ``int(total_new) == 0`` poll is now the loop predicate on the
+    psum-replicated convergence scalar, so the run performs **zero host
+    transfers** between BFS levels.  ``bound`` is a traced replicated
+    scalar — chunked (checkpointing) calls reuse one executable."""
+    carry = (frontier, fvalid, vhi, vlo, vpay, vcount, archive, archive_n,
+             flags, step, total_new)
+
+    def cond(c):
+        return (c[-2] < bound) & (c[-1] > 0)
+
+    def body(c):
+        return _dense_body(comp, c, axis=axis, ndev=ndev,
+                           max_branches=max_branches, send_cap=send_cap,
+                           visited_cap=visited_cap, backend=backend)
+
+    return jax.lax.while_loop(cond, body, carry)
 
 
 # ---------------------------------------------------------------------------
@@ -230,9 +278,8 @@ def _psum_u32(x, axis):
     return jax.lax.bitcast_convert_type(s, jnp.uint32)
 
 
-def _sharded_step(arrs: ShardArrays, dense, frontier, fvalid, visited_hi,
-                  visited_lo, archive, archive_n, flags, *, axis, ndev,
-                  mloc, hmax, max_branches, backend):
+def _sharded_body(arrs: ShardArrays, dense, carry, *, axis, ndev,
+                  mloc, hmax, max_branches, visited_cap, backend):
     """Per-device body of the neuron-axis-sharded BFS level.
 
     Device ``d`` holds only the ``(F, mloc)`` neuron slice of the
@@ -254,16 +301,20 @@ def _sharded_step(arrs: ShardArrays, dense, frontier, fvalid, visited_hi,
        (``pallas``/``sparse_pallas`` — DESIGN.md §3 "Kernel lowering");
        the collective stays out here, so kernel bodies hold no
        collectives and the halo values are backend-independent;
-    4. global hashes from additive per-slice partials (one psum); each
-       device dedups the candidates it hash-owns against its local
-       visited shard and the verdicts are psum-combined;
+    4. global hashes from additive per-slice partials (one psum) — the
+       zobrist positions are the shard's ``global_idx`` column map, so a
+       degree-permuted partition hashes identically to a contiguous one;
+       each device dedups the candidates it hash-owns against its local
+       hash-table shard and the verdicts are psum-combined;
     5. every device appends the same selected candidates (its slice of
        them) to its archive shard.
     """
+    (frontier, fvalid, vhi, vlo, vpay, vcount, archive, archive_n, flags,
+     step, _) = carry
     F = frontier.shape[0]
     T = max_branches
     K = F * T
-    V = visited_hi.shape[0]
+    V = visited_cap
     A = archive.shape[0]
     S = ndev
     idx = jax.lax.axis_index(axis)
@@ -356,29 +407,18 @@ def _sharded_step(arrs: ShardArrays, dense, frontier, fvalid, visited_hi,
     branch_ovf = jnp.any((psi > float(T)) & fvalid)
 
     # --- global hashes from additive slice partials -----------------------
-    hi, lo = zobrist_hash(cand, offset=idx * mloc)
+    hi, lo = zobrist_hash(cand, positions=arrs.global_idx[0])
     hi = jnp.where(valid, _psum_u32(hi, axis), SENTINEL)
     lo = jnp.where(valid, _psum_u32(lo, axis), SENTINEL)
 
-    # --- dedup: each device judges the candidates it hash-owns ------------
+    # --- dedup: each device judges the candidates it hash-owns against
+    # its local table shard; verdicts psum-combine to the global new-mask
     owner = jnp.where(valid, (hi % np.uint32(S)).astype(jnp.int32), S)
     mine = owner == idx
-    chi = jnp.where(mine, hi, SENTINEL)
-    clo = jnp.where(mine, lo, SENTINEL)
-    all_hi = jnp.concatenate([visited_hi, chi])
-    all_lo = jnp.concatenate([visited_lo, clo])
-    payload = jnp.concatenate(
-        [jnp.full((V,), K, jnp.int32), jnp.arange(K, dtype=jnp.int32)])
-    is_cand = jnp.concatenate(
-        [jnp.zeros((V,), jnp.int32), mine.astype(jnp.int32)])
-    s_hi, s_lo, s_cand, s_payload = jax.lax.sort(
-        (all_hi, all_lo, is_cand, payload), num_keys=3)
-    eq_prev = jnp.concatenate([
-        jnp.zeros((1,), bool),
-        (s_hi[1:] == s_hi[:-1]) & (s_lo[1:] == s_lo[:-1])])
-    new_sorted = (s_cand == 1) & ~eq_prev
-    new_local = jnp.zeros((K,), bool).at[s_payload].set(
-        new_sorted, mode="drop")
+    table = HashTable(vhi, vlo, vpay, vcount[0])
+    found, _ = lookup(table, hi, lo, mine)
+    first, ovf_f = first_occurrence(hi, lo, mine)
+    new_local = mine & first & ~found
     new_mask = jax.lax.psum(new_local.astype(jnp.int32), axis) > 0
 
     # --- replicated selection + per-device state updates ------------------
@@ -390,31 +430,46 @@ def _sharded_step(arrs: ShardArrays, dense, frontier, fvalid, visited_hi,
     next_frontier = cand[sel]
 
     sel_mine = mine[sel] & ins
-    ins_hi = jnp.where(sel_mine, hi[sel], SENTINEL)
-    ins_lo = jnp.where(sel_mine, lo[sel], SENTINEL)
-    visited_n = jnp.sum(visited_hi != SENTINEL) + jnp.sum(
-        (visited_hi == SENTINEL) & (visited_lo != SENTINEL))
     n_mine = jnp.sum(sel_mine, dtype=jnp.int32)
-    m_hi, m_lo = jax.lax.sort(
-        (jnp.concatenate([visited_hi, ins_hi]),
-         jnp.concatenate([visited_lo, ins_lo])), num_keys=2)
-    visited_ovf = (visited_n + n_mine) > V
+    table, _, ovf_i = insert_unique(
+        table, hi[sel], lo[sel], sel_mine,
+        (archive_n + jnp.arange(F)).astype(jnp.int32))
+    visited_ovf = ovf_f | ovf_i | ((vcount[0] + n_mine) > V)
 
     arch_idx = jnp.where(ins, archive_n + jnp.arange(F), A)
     archive = archive.at[arch_idx].set(next_frontier, mode="drop")
     archive_n = jnp.minimum(archive_n + n_ins, A)
 
     flags = flags | jnp.stack([branch_ovf, n_new > F, visited_ovf])[None, :]
-    return (next_frontier, ins, m_hi[:V], m_lo[:V], archive, archive_n,
-            flags, n_ins)
+    # n_ins is already the replicated global count (selection is replicated)
+    return (next_frontier, ins, table.slots_hi, table.slots_lo,
+            table.slot_payload, table.count[None], archive, archive_n,
+            flags, step + 1, n_ins)
 
 
-def _sharded_step_dense(arrs, dense, *state, **kw):
-    return _sharded_step(arrs, dense, *state, **kw)
+def _sharded_loop(arrs, dense, carry, bound, **kw):
+    """Fused neuron-sharded BFS: one ``lax.while_loop`` over levels with
+    the psum-replicated new-config count as the convergence predicate —
+    zero host transfers until the frontier drains or ``bound`` absolute
+    levels (same contract as :func:`_dense_loop`)."""
+
+    def cond(c):
+        return (c[-2] < bound) & (c[-1] > 0)
+
+    def body(c):
+        return _sharded_body(arrs, dense, c, **kw)
+
+    return jax.lax.while_loop(cond, body, carry)
 
 
-def _sharded_step_nodense(arrs, *state, **kw):
-    return _sharded_step(arrs, None, *state, **kw)
+def _sharded_loop_dense(arrs, dense, *args, **kw):
+    *state, bound = args
+    return _sharded_loop(arrs, dense, tuple(state), bound, **kw)
+
+
+def _sharded_loop_nodense(arrs, *args, **kw):
+    *state, bound = args
+    return _sharded_loop(arrs, None, tuple(state), bound, **kw)
 
 
 def _explore_neuron_sharded(
@@ -427,36 +482,19 @@ def _explore_neuron_sharded(
     """Host driver for the neuron-axis-sharded BFS.  ``frontier_cap`` is
     the *global* frontier width (its membership bookkeeping is replicated;
     only the neuron slices are per-device), ``visited_cap`` stays per
-    device (hash-owned shards, as in the dense-row scheme).  ``backend``
-    (already resolved + ``lower``-ed into ``comp``) selects the per-shard
-    step — jnp sparse math or a fused kernel (DESIGN.md §3)."""
+    device (hash-owned table shards, as in the dense-row scheme).
+    ``backend`` (already resolved + ``lower``-ed into ``comp``) selects
+    the per-shard step — jnp sparse math or a fused kernel (DESIGN.md
+    §3).  All state is allocated device-side inside one jitted init (no
+    host arrays scale with ``S·V``), and the BFS itself is the fused
+    while-loop of :func:`_sharded_loop` — the host only syncs at chunk
+    boundaries (checkpointing) or at final readout."""
     S, mloc = comp.num_shards, comp.shard_size
     F, V, T = frontier_cap, visited_cap, max_branches
     A = S * V   # global archive rows; each device stores its (A, mloc) slice
+    SL = table_slots(V)
     arrs = comp.arrays
-
-    if init is None:
-        init_full = np.asarray(arrs.init_loc).reshape(-1)
-    else:
-        init_full = np.zeros((S * mloc,), np.int32)
-        init_full[: comp.num_neurons] = np.asarray(init, np.int32)
-    hi0, lo0 = zobrist_hash(jnp.asarray(init_full))
-    hi0, lo0 = int(np.asarray(hi0)), int(np.asarray(lo0))
-    owner0 = hi0 % S
-    init_slices = init_full.reshape(S, mloc)
-
-    frontier = np.zeros((S * F, mloc), np.int32)
-    archive = np.zeros((S * A, mloc), np.int32)
-    for d in range(S):
-        frontier[d * F] = init_slices[d]
-        archive[d * A] = init_slices[d]
-    fvalid = np.zeros((F,), bool)
-    fvalid[0] = True
-    vhi = np.full((S * V,), int(SENTINEL), np.uint32)
-    vlo = np.full((S * V,), int(SENTINEL), np.uint32)
-    vhi[owner0 * V] = hi0
-    vlo[owner0 * V] = lo0
-    flags = np.zeros((S, 3), bool)
+    m = comp.num_neurons
 
     shard = NamedSharding(mesh, P(axis))
     repl = NamedSharding(mesh, P())
@@ -465,7 +503,7 @@ def _explore_neuron_sharded(
         regex_base=P(axis), regex_period=P(axis), covering=P(axis),
         seg_start=P(axis), seg_count=P(axis), rule_slots=P(),
         in_idx=P(axis), send_idx=P(axis), out_local=P(axis),
-        init_loc=P(axis))
+        init_loc=P(axis), global_idx=P(axis))
 
     def put(tree, specs):
         return jax.device_put(
@@ -473,18 +511,48 @@ def _explore_neuron_sharded(
                                is_leaf=lambda x: isinstance(x, P)))
 
     arrs_dev = put(arrs, comp_specs)
-    state = (
-        jax.device_put(frontier, shard),
-        jax.device_put(jnp.asarray(fvalid), repl),
-        jax.device_put(vhi, shard), jax.device_put(vlo, shard),
-        jax.device_put(archive, shard),
-        jax.device_put(jnp.asarray(1, jnp.int32), repl),
-        jax.device_put(flags, shard),
-    )
+
+    def _init(init_cols, gidx):
+        # column-space init vector + one zobrist over the global position
+        # map == the psum of the per-device slice hashes the loop computes
+        hi0, lo0 = zobrist_hash(init_cols, positions=gidx)
+        hic, loc = _canonical(hi0[None], lo0[None], jnp.ones((1,), bool))
+        owner0 = (hic[0] % np.uint32(S)).astype(jnp.int32)
+        base0 = _base_slot(hic, loc, SL).astype(jnp.int32)[0]
+        init_slices = init_cols.reshape(S, mloc)
+        frontier = jnp.zeros((S * F, mloc), jnp.int32).at[
+            jnp.arange(S) * F].set(init_slices)
+        fvalid = jnp.zeros((F,), bool).at[0].set(True)
+        vhi = jnp.full((S * SL,), SENTINEL, jnp.uint32).at[
+            owner0 * SL + base0].set(hic[0])
+        vlo = jnp.full((S * SL,), SENTINEL, jnp.uint32).at[
+            owner0 * SL + base0].set(loc[0])
+        vpay = jnp.full((S * SL,), -1, jnp.int32).at[
+            owner0 * SL + base0].set(0)
+        vcount = jnp.zeros((S,), jnp.int32).at[owner0].set(1)
+        archive = jnp.zeros((S * A, mloc), jnp.int32).at[
+            jnp.arange(S) * A].set(init_slices)
+        return (frontier, fvalid, vhi, vlo, vpay, vcount, archive,
+                jnp.asarray(1, jnp.int32), jnp.zeros((S, 3), bool),
+                jnp.asarray(0, jnp.int32), jnp.asarray(1, jnp.int32))
+
+    state_shardings = (shard, repl, shard, shard, shard, shard, shard,
+                       repl, shard, repl, repl)
+    gidx = arrs.global_idx.reshape(-1)
+    if init is None:
+        init_cols = arrs.init_loc.reshape(-1)
+    else:
+        pad = S * mloc - m
+        init_g = jnp.concatenate(
+            [jnp.asarray(init, jnp.int32), jnp.zeros((pad,), jnp.int32)])
+        init_cols = init_g[gidx]
+    state = jax.jit(_init, out_shardings=state_shardings)(init_cols, gidx)
 
     kw = dict(axis=axis, ndev=S, mloc=mloc, hmax=comp.halo_width,
-              max_branches=T, backend=backend)
-    state_in = (P(axis), P(), P(axis), P(axis), P(axis), P(), P(axis))
+              max_branches=T, visited_cap=V, backend=backend)
+    state_in = (P(axis), P(), P(axis), P(axis), P(axis), P(axis), P(axis),
+                P(), P(axis), P(), P())
+    state_out = state_in
     # The dense operands are the largest arrays in the scheme — only ship
     # them to devices when the selected backend's step actually consumes
     # them (a pre-lowered comp may carry them for a different backend).
@@ -493,52 +561,47 @@ def _explore_neuron_sharded(
         # encodings (one slice per device).
         dense_specs = DenseShardArrays(
             M_local=P(axis), onehot=P(axis), hadj=P(axis))
-        body = functools.partial(_sharded_step_dense, **kw)
-        in_specs = (comp_specs, dense_specs) + state_in
+        body = functools.partial(_sharded_loop_dense, **kw)
+        in_specs = (comp_specs, dense_specs) + state_in + (P(),)
         lead = (arrs_dev, put(comp.dense, dense_specs))
     else:
-        body = functools.partial(_sharded_step_nodense, **kw)
-        in_specs = (comp_specs,) + state_in
+        body = functools.partial(_sharded_loop_nodense, **kw)
+        in_specs = (comp_specs,) + state_in + (P(),)
         lead = (arrs_dev,)
 
-    step_fn = jax.jit(
+    loop_fn = jax.jit(
         shard_map(
             body,
             mesh=mesh,
             in_specs=in_specs,
-            out_specs=(P(axis), P(), P(axis), P(axis), P(axis), P(),
-                       P(axis), P()),
+            out_specs=state_out,
             check_rep=False,
         ))
 
-    state, steps = _restore_loop_state(checkpoint_dir, state)
-    drained = False
-    for _ in range(steps, max_steps):
-        if fault_injector is not None:
-            fault_injector.on_device_call()
-        (f, fv, hi, lo, arc, an, fl, total_new) = step_fn(*lead, *state)
-        state = (f, fv, hi, lo, arc, an, fl)
-        steps += 1
-        if int(total_new) == 0:
-            drained = True
-            break
-        if checkpoint_dir is not None and steps % checkpoint_every == 0:
-            _save_loop_state(checkpoint_dir, steps, state)
+    state = _run_fused_loop(
+        loop_fn, lead, state, max_steps=max_steps,
+        checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+        fault_injector=fault_injector)
 
-    _, _, _, _, archive, archive_n, flags = state
+    (_, _, _, _, _, _, archive, archive_n, flags, step,
+     total_new) = jax.device_get(state)
     n = int(archive_n)
-    m = comp.num_neurons
     if n:
-        arc = np.asarray(archive).reshape(S, A, mloc)
-        configs = np.concatenate(list(arc), axis=1)[:n, :m]
+        # columns back to global neuron order via the partition's
+        # column→neuron map (identity for contiguous shards)
+        cols = np.concatenate(list(archive.reshape(S, A, mloc)),
+                              axis=1)[:n]
+        configs = np.zeros((n, S * mloc), np.int32)
+        configs[:, jax.device_get(gidx)] = cols
+        configs = configs[:, :m]
     else:
         configs = np.zeros((0, m), np.int32)
-    flags = np.asarray(flags).reshape(S, 3).any(axis=0)
+    flags = flags.reshape(S, 3).any(axis=0)
     return ExploreResult(
         configs=configs,
         num_discovered=n,
-        steps=steps,
-        exhausted=drained and not flags.any(),
+        steps=int(step),
+        exhausted=int(total_new) == 0 and not flags.any(),
         branch_overflow=bool(flags[0]),
         frontier_overflow=bool(flags[1]),
         visited_overflow=bool(flags[2]),
@@ -637,78 +700,68 @@ def explore_distributed(
     F, V, T = frontier_cap, visited_cap, max_branches
     C = send_cap if send_cap is not None else max(16, (F * T) // max(ndev, 1))
 
+    SL = table_slots(V)
     c0 = comp.init_config if init is None else jnp.asarray(init, jnp.int32)
-    hi0, lo0 = config_hash(c0)
-    owner0 = int(np.asarray(hi0)) % ndev
 
-    # global state, sharded on the leading device axis
+    # global state, sharded on the leading device axis; everything is
+    # allocated (and the init config hashed + table-inserted) inside one
+    # jitted init — no host-side O(ndev·V) arrays, no host hashing.
     shard = NamedSharding(mesh, P(axis))
     repl = NamedSharding(mesh, P())
 
-    frontier = np.zeros((ndev * F, m), np.int32)
-    fvalid = np.zeros((ndev * F,), bool)
-    vhi = np.full((ndev * V,), int(SENTINEL), np.uint32)
-    vlo = np.full((ndev * V,), int(SENTINEL), np.uint32)
-    archive = np.zeros((ndev * V, m), np.int32)
-    arch_n = np.zeros((ndev,), np.int32)
-    frontier[owner0 * F] = np.asarray(c0)
-    fvalid[owner0 * F] = True
-    vhi[owner0 * V] = int(np.asarray(hi0))
-    vlo[owner0 * V] = int(np.asarray(lo0))
-    archive[owner0 * V] = np.asarray(c0)
-    arch_n[owner0] = 1
-    flags = np.zeros((ndev, 3), bool)
+    def _init(c0):
+        hi0, lo0 = config_hash(c0)
+        hic, loc = _canonical(hi0[None], lo0[None], jnp.ones((1,), bool))
+        owner0 = (hic[0] % np.uint32(ndev)).astype(jnp.int32)
+        base0 = _base_slot(hic, loc, SL).astype(jnp.int32)[0]
+        frontier = jnp.zeros((ndev * F, m), jnp.int32).at[owner0 * F].set(c0)
+        fvalid = jnp.zeros((ndev * F,), bool).at[owner0 * F].set(True)
+        vhi = jnp.full((ndev * SL,), SENTINEL, jnp.uint32).at[
+            owner0 * SL + base0].set(hic[0])
+        vlo = jnp.full((ndev * SL,), SENTINEL, jnp.uint32).at[
+            owner0 * SL + base0].set(loc[0])
+        vpay = jnp.full((ndev * SL,), -1, jnp.int32).at[
+            owner0 * SL + base0].set(0)
+        vcount = jnp.zeros((ndev,), jnp.int32).at[owner0].set(1)
+        archive = jnp.zeros((ndev * V, m), jnp.int32).at[owner0 * V].set(c0)
+        arch_n = jnp.zeros((ndev,), jnp.int32).at[owner0].set(1)
+        return (frontier, fvalid, vhi, vlo, vpay, vcount, archive, arch_n,
+                jnp.zeros((ndev, 3), bool), jnp.asarray(0, jnp.int32),
+                jnp.asarray(1, jnp.int32))
 
-    state = (
-        jax.device_put(frontier, shard), jax.device_put(fvalid, shard),
-        jax.device_put(vhi, shard), jax.device_put(vlo, shard),
-        jax.device_put(archive, shard), jax.device_put(arch_n, shard),
-        jax.device_put(flags, shard),
-    )
+    state_shardings = (shard,) * 9 + (repl, repl)
+    state = jax.jit(_init, out_shardings=state_shardings)(c0)
 
-    step_fn = jax.jit(
+    state_in = (P(axis),) * 9 + (P(), P())
+    loop_fn = jax.jit(
         shard_map(
-            functools.partial(_device_step, axis=axis, ndev=ndev,
-                              max_branches=T, send_cap=C, backend=be),
+            functools.partial(_dense_loop, axis=axis, ndev=ndev,
+                              max_branches=T, send_cap=C, visited_cap=V,
+                              backend=be),
             mesh=mesh,
-            in_specs=(P(), P(axis), P(axis), P(axis), P(axis), P(axis),
-                      P(axis), P(axis)),
-            out_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis),
-                       P(axis), P()),
+            in_specs=(P(),) + state_in + (P(),),
+            out_specs=state_in,
             # pallas_call has no replication rule; every output spec is
             # explicit anyway, so the check adds nothing here.
             check_rep=False,
-        ),
-        static_argnames=(),
-    )
+        ))
 
-    state, steps = _restore_loop_state(checkpoint_dir, state)
-    drained = False
-    for _ in range(steps, max_steps):
-        if fault_injector is not None:
-            fault_injector.on_device_call()
-        (f, fv, hi, lo, arc, an, fl, total_new) = step_fn(comp, *state)
-        # shard_map flattens per-device scalars: archive_n comes back (ndev,)
-        state = (f, fv, hi, lo, arc, an, fl)
-        steps += 1
-        if int(total_new) == 0:
-            drained = True
-            break
-        if checkpoint_dir is not None and steps % checkpoint_every == 0:
-            _save_loop_state(checkpoint_dir, steps, state)
+    state = _run_fused_loop(
+        loop_fn, (comp,), state, max_steps=max_steps,
+        checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+        fault_injector=fault_injector)
 
-    frontier, fvalid, vhi, vlo, archive, arch_n, flags = state
-    arch_n = np.asarray(arch_n)
-    archive = np.asarray(archive)
+    (_, _, _, _, _, _, archive, arch_n, flags, step,
+     total_new) = jax.device_get(state)
     configs = np.concatenate([
         archive[d * V: d * V + int(arch_n[d])] for d in range(ndev)
     ]) if arch_n.sum() else np.zeros((0, m), np.int32)
-    flags = np.asarray(flags).reshape(ndev, 3).any(axis=0)
+    flags = flags.reshape(ndev, 3).any(axis=0)
     return ExploreResult(
         configs=configs,
         num_discovered=int(arch_n.sum()),
-        steps=steps,
-        exhausted=drained and not flags.any(),
+        steps=int(step),
+        exhausted=int(total_new) == 0 and not flags.any(),
         branch_overflow=bool(flags[0]),
         frontier_overflow=bool(flags[1]),
         visited_overflow=bool(flags[2]),

@@ -53,12 +53,15 @@ from .backend import (BackendLike, compile_with_plan, get_backend,
                       lower_with_backend, resolve_entry_info)
 from .failover import run_with_failover
 from .hashing import SENTINEL, config_hash
+from .hashtable import (HashTable, first_occurrence, insert_unique, lookup,
+                        make_table)
 from .matrix import CompiledAny, is_compiled
 from .plan import SystemPlan
 from .system import SNPSystem
 
 __all__ = ["ExploreState", "ExploreResult", "TraceOut", "explore",
-           "successor_set", "emission_gaps", "run_trace", "run_traces"]
+           "resolve_dedup", "successor_set", "emission_gaps", "run_trace",
+           "run_traces"]
 
 
 def _resolve_comp(system, be, plan: Optional[SystemPlan]) -> CompiledAny:
@@ -76,10 +79,20 @@ def _resolve_comp(system, be, plan: Optional[SystemPlan]) -> CompiledAny:
 
 
 class ExploreState(NamedTuple):
+    """Full BFS device state.  The visited-set representation depends on
+    the (static) ``dedup`` mode: ``"hash"`` stores open-addressing table
+    slots (``visited_hi/lo/payload`` are ``(S,)`` with ``S =
+    table_slots(V)``, ``visited_n`` the live-key count), ``"sort"`` the
+    historical lexicographically-sorted ``(V,)`` hash arrays (payload is
+    a zero-length placeholder).  Either way the state is one pytree, so
+    checkpoint snapshots carry the dedup structure with no special
+    casing — a resume rebuilds the table bit-identically."""
+
     frontier: jnp.ndarray       # (F, m) int32
     frontier_n: jnp.ndarray     # () int32 — valid prefix length
-    visited_hi: jnp.ndarray     # (V,) uint32, sorted (with lo) lexicographically
-    visited_lo: jnp.ndarray     # (V,) uint32
+    visited_hi: jnp.ndarray     # (V,)|(S,) uint32 — see docstring
+    visited_lo: jnp.ndarray     # (V,)|(S,) uint32
+    visited_payload: jnp.ndarray  # (S,)|(0,) int32 — archive row per slot
     visited_n: jnp.ndarray      # () int32
     archive: jnp.ndarray        # (V, m) int32 — discovery order
     archive_n: jnp.ndarray      # () int32
@@ -105,47 +118,40 @@ class ExploreResult:
 
 
 def _init_state(comp: CompiledAny, frontier_cap: int, visited_cap: int,
-                init: Optional[jnp.ndarray] = None) -> ExploreState:
+                init: Optional[jnp.ndarray] = None,
+                dedup: str = "hash") -> ExploreState:
     # State row width: m for the paper's systems, 3m under delayed
     # semantics ([spikes | countdown | pending] — DESIGN.md).
     m = getattr(comp, "state_width", comp.num_neurons)
     c0 = comp.init_config if init is None else jnp.asarray(init, jnp.int32)
     frontier = jnp.zeros((frontier_cap, m), jnp.int32).at[0].set(c0)
     hi0, lo0 = config_hash(c0)
-    vhi = jnp.full((visited_cap,), SENTINEL, jnp.uint32).at[0].set(hi0)
-    vlo = jnp.full((visited_cap,), SENTINEL, jnp.uint32).at[0].set(lo0)
+    if dedup == "hash":
+        table, _, _ = insert_unique(
+            make_table(visited_cap), hi0[None], lo0[None],
+            jnp.ones((1,), bool), jnp.zeros((1,), jnp.int32))
+        vhi, vlo, vpay = table.slots_hi, table.slots_lo, table.slot_payload
+    else:
+        vhi = jnp.full((visited_cap,), SENTINEL, jnp.uint32).at[0].set(hi0)
+        vlo = jnp.full((visited_cap,), SENTINEL, jnp.uint32).at[0].set(lo0)
+        vpay = jnp.zeros((0,), jnp.int32)
     archive = jnp.zeros((visited_cap, m), jnp.int32).at[0].set(c0)
     false = jnp.asarray(False)
     return ExploreState(
         frontier=frontier, frontier_n=jnp.asarray(1, jnp.int32),
-        visited_hi=vhi, visited_lo=vlo, visited_n=jnp.asarray(1, jnp.int32),
+        visited_hi=vhi, visited_lo=vlo, visited_payload=vpay,
+        visited_n=jnp.asarray(1, jnp.int32),
         archive=archive, archive_n=jnp.asarray(1, jnp.int32),
         step=jnp.asarray(0, jnp.int32),
         branch_overflow=false, frontier_overflow=false, visited_overflow=false,
     )
 
 
-def _explore_step(state: ExploreState, comp: CompiledAny,
-                  max_branches: int, backend) -> ExploreState:
-    """One BFS level: expand, hash, dedup, compact.  Traceable; the body of
-    the on-device while_loop in :func:`_explore_loop`."""
-    F, m = state.frontier.shape
-    V = state.visited_hi.shape[0]
-    T = max_branches
-
-    live = jnp.arange(F) < state.frontier_n
-    out = backend.expand(state.frontier, comp, T)
-
-    cand = out.configs.reshape(F * T, m)
-    cand_valid = (out.valid & live[:, None]).reshape(F * T)
-    branch_ovf = jnp.any(out.overflow & live)
-
-    hi, lo = config_hash(cand)
-    hi = jnp.where(cand_valid, hi, SENTINEL)
-    lo = jnp.where(cand_valid, lo, SENTINEL)
-
-    # --- sort-based dedup: visited entries and candidates in one keyspace.
-    K = F * T
+def _sort_dedup_verdict(state: ExploreState, hi, lo, cand_valid, V: int):
+    """Historical sort-based dedup: visited entries and candidates in one
+    keyspace, one ``lax.sort`` per wave — ``O((V+K)·log(V+K))``.  Returns
+    the per-candidate new-mask (first occurrence of an unseen hash)."""
+    K = hi.shape[0]
     all_hi = jnp.concatenate([state.visited_hi, hi])
     all_lo = jnp.concatenate([state.visited_lo, lo])
     # candidates carry their index as payload; visited carry K (dropped).
@@ -167,9 +173,50 @@ def _explore_step(state: ExploreState, comp: CompiledAny,
     ])
     new_sorted = (s_cand == 1) & ~eq_prev
     # scatter back to candidate order (payload == K for visited -> dropped)
-    new_mask = (
-        jnp.zeros((K,), bool).at[s_payload].set(new_sorted, mode="drop")
-    )
+    return jnp.zeros((K,), bool).at[s_payload].set(new_sorted, mode="drop")
+
+
+def _explore_step(state: ExploreState, comp: CompiledAny,
+                  max_branches: int, backend,
+                  dedup: str = "hash") -> ExploreState:
+    """One BFS level: expand, hash, dedup, compact.  Traceable; the body of
+    the on-device while_loop in :func:`_explore_loop`.
+
+    ``dedup="hash"`` (default) resolves the wave against the
+    device-resident open-addressing table in ``O(K·probe)`` gathers —
+    lookup (no writes), intra-wave first-occurrence on a scratch table,
+    then insertion of only the ``n_ins`` selected candidates, so excess
+    discoveries beyond the frontier cap are *not* marked visited and
+    regenerate later, exactly like the sorted path.  ``dedup="sort"``
+    keeps the historical full-sort (the bench baseline).  Both produce
+    bit-identical archives outside the visited-overflow regime (where the
+    drop *policy* differs: sorted merge drops the largest hashes, the
+    table drops probe-bound losers — both sound, both flagged)."""
+    F, m = state.frontier.shape
+    V = state.archive.shape[0]
+    T = max_branches
+
+    live = jnp.arange(F) < state.frontier_n
+    out = backend.expand(state.frontier, comp, T)
+
+    cand = out.configs.reshape(F * T, m)
+    cand_valid = (out.valid & live[:, None]).reshape(F * T)
+    branch_ovf = jnp.any(out.overflow & live)
+
+    hi, lo = config_hash(cand)
+    hi = jnp.where(cand_valid, hi, SENTINEL)
+    lo = jnp.where(cand_valid, lo, SENTINEL)
+
+    probe_ovf = jnp.asarray(False)
+    if dedup == "hash":
+        table = HashTable(state.visited_hi, state.visited_lo,
+                          state.visited_payload, state.visited_n)
+        found, _ = lookup(table, hi, lo, cand_valid)
+        first, ovf_f = first_occurrence(hi, lo, cand_valid)
+        new_mask = cand_valid & first & ~found
+        probe_ovf = ovf_f
+    else:
+        new_mask = _sort_dedup_verdict(state, hi, lo, cand_valid, V)
 
     n_new = jnp.sum(new_mask, dtype=jnp.int32)
     # new candidates first (stable), then everything else
@@ -180,16 +227,29 @@ def _explore_step(state: ExploreState, comp: CompiledAny,
     next_frontier = cand[sel]
     ins_mask = take < n_ins
 
-    # --- visited merge (entries beyond capacity fall off the sorted tail)
-    ins_hi = jnp.where(ins_mask, hi[sel], SENTINEL)
-    ins_lo = jnp.where(ins_mask, lo[sel], SENTINEL)
-    m_hi, m_lo = jax.lax.sort(
-        (jnp.concatenate([state.visited_hi, ins_hi]),
-         jnp.concatenate([state.visited_lo, ins_lo])),
-        num_keys=2,
-    )
-    visited_n = jnp.minimum(state.visited_n + n_ins, V)
-    visited_ovf = state.visited_overflow | (state.visited_n + n_ins > V)
+    if dedup == "hash":
+        # --- table insert of the selected prefix only (payload = archive row)
+        table, _, ovf_i = insert_unique(
+            table, hi[sel], lo[sel], ins_mask,
+            (state.archive_n + take).astype(jnp.int32))
+        probe_ovf = probe_ovf | ovf_i
+        m_hi, m_lo, m_pay = table.slots_hi, table.slots_lo, table.slot_payload
+        visited_n = table.count
+        visited_ovf = (state.visited_overflow | probe_ovf
+                       | (state.visited_n + n_ins > V))
+    else:
+        # --- visited merge (entries beyond capacity fall off the sorted tail)
+        ins_hi = jnp.where(ins_mask, hi[sel], SENTINEL)
+        ins_lo = jnp.where(ins_mask, lo[sel], SENTINEL)
+        m_hi, m_lo = jax.lax.sort(
+            (jnp.concatenate([state.visited_hi, ins_hi]),
+             jnp.concatenate([state.visited_lo, ins_lo])),
+            num_keys=2,
+        )
+        m_hi, m_lo = m_hi[:V], m_lo[:V]
+        m_pay = state.visited_payload
+        visited_n = jnp.minimum(state.visited_n + n_ins, V)
+        visited_ovf = state.visited_overflow | (state.visited_n + n_ins > V)
 
     # --- archive append in discovery order
     arch_idx = jnp.where(ins_mask, state.archive_n + take, V)
@@ -199,7 +259,8 @@ def _explore_step(state: ExploreState, comp: CompiledAny,
     return ExploreState(
         frontier=next_frontier,
         frontier_n=n_ins,
-        visited_hi=m_hi[:V], visited_lo=m_lo[:V], visited_n=visited_n,
+        visited_hi=m_hi, visited_lo=m_lo, visited_payload=m_pay,
+        visited_n=visited_n,
         archive=archive, archive_n=archive_n,
         step=state.step + 1,
         branch_overflow=state.branch_overflow | branch_ovf,
@@ -209,9 +270,10 @@ def _explore_step(state: ExploreState, comp: CompiledAny,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("max_steps", "max_branches", "backend"))
+    jax.jit, static_argnames=("max_steps", "max_branches", "backend", "dedup"))
 def _explore_loop(state: ExploreState, comp: CompiledAny, max_steps: int,
-                  max_branches: int, backend) -> ExploreState:
+                  max_branches: int, backend,
+                  dedup: str = "hash") -> ExploreState:
     """Entire BFS as one on-device ``lax.while_loop``: runs until the
     frontier drains or ``max_steps`` levels, with zero host round-trips."""
 
@@ -219,14 +281,15 @@ def _explore_loop(state: ExploreState, comp: CompiledAny, max_steps: int,
         return (s.step < max_steps) & (s.frontier_n > 0)
 
     def body(s: ExploreState):
-        return _explore_step(s, comp, max_branches, backend)
+        return _explore_step(s, comp, max_branches, backend, dedup)
 
     return jax.lax.while_loop(cond, body, state)
 
 
 def _explore_chunked(comp, be, state: ExploreState, *, max_steps: int,
                      max_branches: int, checkpoint_dir: Optional[str],
-                     checkpoint_every: int, fault_injector) -> ExploreState:
+                     checkpoint_every: int, fault_injector,
+                     dedup: str = "hash") -> ExploreState:
     """Drive :func:`_explore_loop` with optional checkpoint/resume.
 
     Without a ``checkpoint_dir`` this is the historical single
@@ -245,7 +308,7 @@ def _explore_chunked(comp, be, state: ExploreState, *, max_steps: int,
     if checkpoint_dir is None:
         if fault_injector is not None:
             fault_injector.on_device_call()
-        return _explore_loop(state, comp, max_steps, max_branches, be)
+        return _explore_loop(state, comp, max_steps, max_branches, be, dedup)
     from repro.checkpoint.checkpoint import (latest_step, restore_checkpoint,
                                              save_checkpoint)
     if checkpoint_every < 1:
@@ -255,15 +318,38 @@ def _explore_chunked(comp, be, state: ExploreState, *, max_steps: int,
         restored, _, _ = restore_checkpoint(checkpoint_dir, host)
         state = ExploreState(*(jnp.asarray(x) for x in restored))
     while True:
-        step = int(state.step)
-        if not (step < max_steps and int(state.frontier_n) > 0):
+        step, fn = (int(x) for x in
+                    jax.device_get((state.step, state.frontier_n)))
+        if not (step < max_steps and fn > 0):
             return state
         if fault_injector is not None:
             fault_injector.on_device_call()
         bound = min(max_steps, step + checkpoint_every)
-        state = _explore_loop(state, comp, bound, max_branches, be)
+        state = _explore_loop(state, comp, bound, max_branches, be, dedup)
         save_checkpoint(checkpoint_dir, int(state.step),
                         jax.tree.map(np.asarray, state))
+
+
+def resolve_dedup(dedup: str, *, frontier_cap: int, visited_cap: int,
+                  max_branches: int) -> str:
+    """Resolve ``"auto"`` to a concrete dedup scheme for this workload
+    shape (both schemes produce bit-identical archives outside
+    visited-overflow, so this only moves wall-time).
+
+    The sorted path re-sorts the full capacity-``V`` archive beside the
+    wave every level — its cost grows with ``visited_cap`` even when few
+    configurations are visited — while the hash table's probe loops cost
+    roughly a flat per-wave amount on top of ``O(K·probe)`` work
+    (``K = frontier_cap · max_branches``).  Measured on CPU the table
+    overtakes the sort once the visited capacity clears ~16k entries and
+    dominates the wave (EXPERIMENTS.md §Explore); below that the sort's
+    three fused ops beat the table's dispatch-bound probe loops."""
+    if dedup == "auto":
+        wave = frontier_cap * max_branches
+        return "hash" if visited_cap >= max(16384, 8 * wave) else "sort"
+    if dedup not in ("hash", "sort"):
+        raise ValueError(f"unknown dedup mode {dedup!r}")
+    return dedup
 
 
 def explore(
@@ -279,6 +365,7 @@ def explore(
     checkpoint_dir: Optional[str] = None,
     checkpoint_every: int = 32,
     fault_injector=None,
+    dedup: str = "auto",
 ) -> ExploreResult:
     """BFS-explore the computation tree (paper Algorithm 1).
 
@@ -318,7 +405,22 @@ def explore(
     compile, lower, or run time degrades down the encoding-compatible
     chain (:mod:`repro.core.failover`) with a warning — a backend the
     caller *named* raises instead.
+
+    ``dedup`` selects the visited-set structure: ``"hash"`` keeps a
+    device-resident open-addressing table — ``O(K·probe)`` per wave
+    regardless of visited size — while ``"sort"`` is the historical
+    full-sort path, ``O((V+K)·log(V+K))`` per wave (kept as the bench
+    baseline and a differential-testing oracle).  ``"auto"`` (default)
+    applies :func:`resolve_dedup`: the sort's per-wave cost scales with
+    the visited *capacity* while the table's is roughly flat, so the
+    table wins once ``visited_cap`` dominates the wave size
+    ``frontier_cap · max_branches`` (measured crossover — EXPERIMENTS.md
+    §Explore) and the sort keeps small/wave-dominated workloads.
+    Archives are bit-identical between the two outside visited-overflow
+    (see :func:`_explore_step`).
     """
+    dedup = resolve_dedup(dedup, frontier_cap=frontier_cap,
+                          visited_cap=visited_cap, max_branches=max_branches)
     # Branch work per step is bounded by frontier_cap × max_branches.
     be, plan, planned = resolve_entry_info(
         system, backend, plan, workload=(frontier_cap, max_branches))
@@ -328,23 +430,26 @@ def explore(
 
     def attempt(be, plan):
         comp = _resolve_comp(system, be, plan)
-        state = _init_state(comp, frontier_cap, visited_cap, init_arr)
+        state = _init_state(comp, frontier_cap, visited_cap, init_arr, dedup)
         return _explore_chunked(
             comp, be, state, max_steps=max_steps, max_branches=max_branches,
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
-            fault_injector=fault_injector)
+            fault_injector=fault_injector, dedup=dedup)
 
     state = run_with_failover(attempt, be, plan, degradable=planned)
-    # single host sync: everything below reads the final device state
-    n = int(state.archive_n)
-    drained = int(state.frontier_n) == 0
-    ovf = (bool(state.branch_overflow), bool(state.frontier_overflow),
-           bool(state.visited_overflow))
+    # single host sync: one explicit device_get of the final state (the
+    # explicit form keeps the whole call legal under a d2h transfer guard)
+    arch, n, fn, step, b_ovf, f_ovf, v_ovf = jax.device_get(
+        (state.archive, state.archive_n, state.frontier_n, state.step,
+         state.branch_overflow, state.frontier_overflow,
+         state.visited_overflow))
+    n = int(n)
+    ovf = (bool(b_ovf), bool(f_ovf), bool(v_ovf))
     return ExploreResult(
-        configs=np.asarray(state.archive[:n]),
+        configs=arch[:n],
         num_discovered=n,
-        steps=int(state.step),
-        exhausted=drained and not any(ovf),
+        steps=int(step),
+        exhausted=int(fn) == 0 and not any(ovf),
         branch_overflow=ovf[0],
         frontier_overflow=ovf[1],
         visited_overflow=ovf[2],

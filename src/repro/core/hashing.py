@@ -76,8 +76,8 @@ _ZV1 = np.uint32(0x27D4EB2F)
 _ZV2 = np.uint32(0x165667B1)
 
 
-def zobrist_hash(configs: jnp.ndarray,
-                 offset=0) -> tuple[jnp.ndarray, jnp.ndarray]:
+def zobrist_hash(configs: jnp.ndarray, offset=0,
+                 positions=None) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Sum-combinable (Zobrist-style) 2 x uint32 hash of config *slices*.
 
     Each (global position, value) pair is mixed through the murmur
@@ -93,11 +93,21 @@ def zobrist_hash(configs: jnp.ndarray,
     (DESIGN.md §2).  Weaker ordering structure than :func:`config_hash`'s
     polynomial lanes, but each summand is fully avalanched, so collisions
     stay at the 2^-64 birthday level.
+
+    ``positions`` (shape ``(k,)``, overrides ``offset``) gives the global
+    neuron index of each column explicitly — the degree-weighted
+    partition scatters neurons across shards, so a shard's columns are no
+    longer a contiguous range.  ``positions=offset + arange(k)`` is
+    exactly the ``offset`` form, so contiguous shards hash bit-identically
+    through either spelling.
     """
     x = configs.astype(jnp.uint32)
     k = configs.shape[-1]
-    pos = jnp.arange(k, dtype=jnp.uint32) + \
-        jnp.asarray(offset, dtype=jnp.uint32) + jnp.uint32(1)
+    if positions is not None:
+        pos = jnp.asarray(positions).astype(jnp.uint32) + jnp.uint32(1)
+    else:
+        pos = jnp.arange(k, dtype=jnp.uint32) + \
+            jnp.asarray(offset, dtype=jnp.uint32) + jnp.uint32(1)
     hi = jnp.sum(_fmix32((pos * _Z1) ^ (x * _ZV1)), axis=-1,
                  dtype=jnp.uint32)
     lo = jnp.sum(_fmix32((pos * _Z2) + (x * _ZV2) + _GOLDEN), axis=-1,

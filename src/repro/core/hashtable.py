@@ -1,0 +1,281 @@
+"""Device-resident open-addressing hash table for BFS frontier dedup.
+
+The sort-based dedup the engine launched with re-sorts the *entire*
+visited-hash set against every candidate wave — ``O((V+C)·log(V+C))`` per
+BFS level even when the wave only carries ``C = F·T`` candidates.  This
+module replaces it with a power-of-two-sized open-addressing table
+(linear probing) whose per-wave cost is ``O(C · probe)`` gathers and
+scatters, independent of how many configurations are already visited —
+the structure the sparse follow-up work keeps device-resident so the
+whole BFS can run as one jitted loop (DESIGN.md §2 "Device-resident
+dedup").
+
+Layout: three parallel arrays of ``S = 2^k`` slots —
+
+* ``slots_hi`` / ``slots_lo`` — the two uint32 lanes of the stored 64-bit
+  config hash (:func:`repro.core.hashing.config_hash` /
+  :func:`~repro.core.hashing.zobrist_hash`);
+* ``slot_payload`` — caller payload (the engine stores the archive row of
+  the inserted configuration, making the table a hash *map*).
+
+An empty slot holds ``(SENTINEL, SENTINEL)`` in both lanes.  A *real* key
+equal to that pair (probability 2^-64) is remapped to
+``(SENTINEL, SENTINEL - 1)`` before probing — deterministic on both the
+insert and lookup sides, so the remap is invisible except for an equally
+improbable alias with the remap target (the same birthday-level risk the
+64-bit hash already carries).
+
+Probing is linear from a mixed base slot, bounded by ``max_probes``;
+every batched operation is a single ``lax.while_loop`` whose carry is the
+pending-candidate mask, so resolved candidates stop paying.  A candidate
+that exhausts its probe budget resolves conservatively (lookup: absent;
+insert: not inserted) and raises the operation's **overflow flag**, which
+the engine folds into its ``visited_overflow`` reporting — bounded probes
+are never a silent drop.
+
+Batched-duplicate discipline (what makes archives bit-identical to the
+sort-based path): within one wave, only the *lowest-indexed* candidate of
+an equal-hash group counts as new — exactly the verdict the sorted path's
+``(hash, is_cand, payload)`` sort produced.  Claim races are resolved by
+scatter-min on the candidate index, and a claim loser re-checks the slot
+it lost (the winner's key may be its own) before probing onward.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hashing import SENTINEL, _fmix32
+
+__all__ = ["HashTable", "table_slots", "make_table", "lookup",
+           "first_occurrence", "insert_unique", "insert_if_absent"]
+
+_MIX = np.uint32(0x9E3779B1)
+
+
+class HashTable(NamedTuple):
+    """Open-addressing hash table state (a pytree — rides ``jit``,
+    ``lax.while_loop`` carries and checkpoint snapshots unchanged)."""
+
+    slots_hi: jnp.ndarray      # (S,) uint32 — SENTINEL when empty (with lo)
+    slots_lo: jnp.ndarray      # (S,) uint32
+    slot_payload: jnp.ndarray  # (S,) int32 — caller payload (-1 when empty)
+    count: jnp.ndarray         # () int32 — live keys
+
+    @property
+    def num_slots(self) -> int:
+        return self.slots_hi.shape[0]
+
+
+def table_slots(capacity: int) -> int:
+    """Power-of-two slot count for ``capacity`` keys at load factor
+    <= 0.5 (linear probing stays O(1) expected below that)."""
+    if capacity < 1:
+        raise ValueError(f"capacity must be >= 1, got {capacity}")
+    return max(16, 1 << (2 * capacity - 1).bit_length())
+
+
+def make_table(capacity: int) -> HashTable:
+    """An empty table sized for ``capacity`` keys (``table_slots`` slots)."""
+    s = table_slots(capacity)
+    return HashTable(
+        slots_hi=jnp.full((s,), SENTINEL, jnp.uint32),
+        slots_lo=jnp.full((s,), SENTINEL, jnp.uint32),
+        slot_payload=jnp.full((s,), -1, jnp.int32),
+        count=jnp.asarray(0, jnp.int32),
+    )
+
+
+def _default_probes(num_slots: int) -> int:
+    # Expected probe length at load 0.5 is ~2.5; 64 covers pathological
+    # clustering with margin while keeping the worst-case loop bounded.
+    return min(num_slots, 64)
+
+
+def _canonical(hi, lo, valid):
+    """Invalid lanes -> the empty marker; a real key equal to the empty
+    marker -> ``(SENTINEL, SENTINEL - 1)`` (module docstring)."""
+    hi = jnp.asarray(hi, jnp.uint32)
+    lo = jnp.asarray(lo, jnp.uint32)
+    collide = (hi == SENTINEL) & (lo == SENTINEL)
+    lo = jnp.where(valid & collide, lo - np.uint32(1), lo)
+    hi = jnp.where(valid, hi, SENTINEL)
+    lo = jnp.where(valid, lo, SENTINEL)
+    return hi, lo
+
+
+def _base_slot(hi, lo, num_slots: int):
+    """uint32 base slot: both lanes avalanched together so probe chains of
+    distinct keys decorrelate even when one lane collides."""
+    mask = np.uint32(num_slots - 1)
+    return _fmix32(hi ^ (lo * _MIX)) & mask
+
+
+def lookup(table: HashTable, hi, lo, valid,
+           max_probes: Optional[int] = None
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched membership probe (no writes).
+
+    Returns ``(found, payload)``: ``found[i]`` iff key ``i`` is stored
+    (``valid[i]`` required), ``payload[i]`` its stored payload (-1
+    otherwise).  A probe chain that exhausts ``max_probes`` occupied,
+    non-matching slots resolves as absent — sound, because ``insert``
+    bounds its probes identically, so no stored key lives beyond the
+    bound."""
+    S = table.num_slots
+    D = _default_probes(S) if max_probes is None else min(max_probes, S)
+    hi, lo = _canonical(hi, lo, valid)
+    base = _base_slot(hi, lo, S)
+    mask = np.uint32(S - 1)
+    K = hi.shape[0]
+
+    def cond(c):
+        p, pending, _, _ = c
+        return (p < D) & jnp.any(pending)
+
+    def body(c):
+        p, pending, found, payload = c
+        slot = ((base + p.astype(jnp.uint32)) & mask).astype(jnp.int32)
+        cur_hi = table.slots_hi[slot]
+        cur_lo = table.slots_lo[slot]
+        match = pending & (cur_hi == hi) & (cur_lo == lo)
+        empty = (cur_hi == SENTINEL) & (cur_lo == SENTINEL)
+        found = found | match
+        payload = jnp.where(match, table.slot_payload[slot], payload)
+        pending = pending & ~match & ~empty
+        return p + 1, pending, found, payload
+
+    _, _, found, payload = jax.lax.while_loop(
+        cond, body,
+        (jnp.asarray(0, jnp.int32), jnp.asarray(valid, bool),
+         jnp.zeros((K,), bool), jnp.full((K,), -1, jnp.int32)))
+    return found, payload
+
+
+def _claim_loop(slots_hi, slots_lo, payloads, hi, lo, pending0,
+                payload_vals, max_probes: int):
+    """Shared batched claim-insert loop (runs on the real table for
+    ``insert_unique``, on a per-wave scratch for ``first_occurrence``).
+
+    Per iteration each pending candidate gathers its current slot and
+    either (a) matches the stored key — resolved as a duplicate, (b) wins
+    an empty-slot claim (scatter-min on candidate index) — resolved as
+    inserted, (c) loses a claim — re-checks the *same* slot next
+    iteration (the winner may hold its key), or (d) sees an occupied
+    foreign key — advances one probe.  Candidates whose probe counter
+    reaches ``max_probes`` resolve as overflowed.
+
+    Returns ``(slots_hi, slots_lo, payloads, won, dup, overflow)``.
+    """
+    S = slots_hi.shape[0]
+    K = hi.shape[0]
+    mask = np.uint32(S - 1)
+    base = _base_slot(hi, lo, S)
+    idx = jnp.arange(K, dtype=jnp.int32)
+    # every advance or claim-loss consumes an iteration; a loss is
+    # followed by a resolution or an advance, so 2*D + 1 bounds the loop
+    iter_cap = 2 * max_probes + 1
+
+    def cond(c):
+        it, pending = c[0], c[1]
+        return (it < iter_cap) & jnp.any(pending)
+
+    def body(c):
+        it, pending, probe, won, dup, ovf, s_hi, s_lo, s_pay = c
+        slot = ((base + probe.astype(jnp.uint32)) & mask).astype(jnp.int32)
+        cur_hi = s_hi[slot]
+        cur_lo = s_lo[slot]
+        match = pending & (cur_hi == hi) & (cur_lo == lo)
+        empty = (cur_hi == SENTINEL) & (cur_lo == SENTINEL)
+        try_claim = pending & ~match & empty
+        claim = jnp.full((S,), K, jnp.int32).at[slot].min(
+            jnp.where(try_claim, idx, K))
+        win = try_claim & (claim[slot] == idx)
+        wslot = jnp.where(win, slot, S)
+        s_hi = s_hi.at[wslot].set(hi, mode="drop")
+        s_lo = s_lo.at[wslot].set(lo, mode="drop")
+        s_pay = s_pay.at[wslot].set(payload_vals, mode="drop")
+        # occupied-by-foreign-key -> advance; claim losers hold position
+        advance = pending & ~match & ~empty
+        probe = probe + advance.astype(jnp.int32)
+        out = probe >= max_probes
+        return (it + 1, pending & ~match & ~win & ~out, probe,
+                won | win, dup | match, ovf | (pending & out),
+                s_hi, s_lo, s_pay)
+
+    init = (jnp.asarray(0, jnp.int32), jnp.asarray(pending0, bool),
+            jnp.zeros((K,), jnp.int32), jnp.zeros((K,), bool),
+            jnp.zeros((K,), bool), jnp.zeros((K,), bool),
+            slots_hi, slots_lo, payloads)
+    (_, _, _, won, dup, ovf, s_hi, s_lo, s_pay) = jax.lax.while_loop(
+        cond, body, init)
+    return s_hi, s_lo, s_pay, won, dup, jnp.any(ovf)
+
+
+def first_occurrence(hi, lo, valid,
+                     max_probes: Optional[int] = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``first[i]`` iff candidate ``i`` is the lowest-indexed holder of
+    its key within the batch (the sorted path's intra-wave verdict).
+    Runs the claim loop on a throwaway scratch table sized ``O(K)`` —
+    per-wave cost never scales with the visited-set size.  Returns
+    ``(first, overflow)``."""
+    K = int(hi.shape[0])
+    S = table_slots(max(K, 1))
+    D = _default_probes(S) if max_probes is None else min(max_probes, S)
+    hi, lo = _canonical(hi, lo, valid)
+    s_hi = jnp.full((S,), SENTINEL, jnp.uint32)
+    s_lo = jnp.full((S,), SENTINEL, jnp.uint32)
+    s_pay = jnp.zeros((S,), jnp.int32)
+    _, _, _, won, _, ovf = _claim_loop(
+        s_hi, s_lo, s_pay, hi, lo, jnp.asarray(valid, bool),
+        jnp.zeros_like(hi, jnp.int32), D)
+    return won, ovf
+
+
+def insert_unique(table: HashTable, hi, lo, mask, payload=None,
+                  max_probes: Optional[int] = None
+                  ) -> Tuple[HashTable, jnp.ndarray, jnp.ndarray]:
+    """Insert masked keys (expected distinct and absent — the engine
+    inserts only selected first-occurrence candidates that failed
+    ``lookup``).  A key found present anyway (possible only when a
+    bounded lookup under-reported) is left in place and reported as not
+    inserted.  Returns ``(table, inserted, overflow)``."""
+    if payload is None:
+        payload = jnp.arange(hi.shape[0], dtype=jnp.int32)
+    D = (_default_probes(table.num_slots) if max_probes is None
+         else min(max_probes, table.num_slots))
+    hi, lo = _canonical(hi, lo, mask)
+    s_hi, s_lo, s_pay, won, _, ovf = _claim_loop(
+        table.slots_hi, table.slots_lo, table.slot_payload, hi, lo,
+        jnp.asarray(mask, bool), jnp.asarray(payload, jnp.int32), D)
+    new_count = table.count + jnp.sum(won, dtype=jnp.int32)
+    return (HashTable(s_hi, s_lo, s_pay, new_count), won, ovf)
+
+
+def insert_if_absent(table: HashTable, hi, lo, valid, payload=None,
+                     max_probes: Optional[int] = None
+                     ) -> Tuple[HashTable, jnp.ndarray, jnp.ndarray]:
+    """One-call batched insert-if-absent: membership lookup, intra-batch
+    first-occurrence, then insertion of the genuinely-new keys.  Returns
+    ``(table, is_new, overflow)`` where ``is_new[i]`` iff key ``i`` was
+    absent *and* is its batch group's first occurrence (it is now
+    stored).  The engine uses the three phases directly so it can cap
+    insertions at the frontier width between phases; this wrapper is the
+    uncapped composition (property tests, small callers)."""
+    found, _ = lookup(table, hi, lo, valid, max_probes)
+    first, ovf_f = first_occurrence(hi, lo, valid, max_probes)
+    is_new = jnp.asarray(valid, bool) & first & ~found
+    table, inserted, ovf_i = insert_unique(table, hi, lo, is_new, payload,
+                                           max_probes)
+    return table, inserted, ovf_f | ovf_i
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def _jit_make(capacity: int) -> HashTable:
+    return make_table(capacity)

@@ -53,11 +53,14 @@ __all__ = [
     "compile_sharded",
     "is_sharded",
     "lower_shard_dense",
+    "partition_neurons",
+    "partition_stats",
 ]
 
 _ENCODINGS = ("auto", "dense", "ell", "hybrid")
 _MODES = ("auto", "measure", "static")
 _SEMANTICS = ("no_delays", "delays")
+_PARTITIONS = ("contiguous", "degree")
 
 # Dummy padding rules (sharded lowering) use this regex base: applicability
 # requires spikes == 2^24, which the engine's spike-count contract
@@ -148,6 +151,14 @@ class SystemPlan:
       DESIGN.md "Delayed semantics").  A backend that cannot realize an
       encoding under the requested tier raises at compile time
       (``supported_encodings(semantics=...)``), never downgrades.
+    * ``partition`` — how neurons map to shards when ``num_shards > 1``:
+      ``"contiguous"`` (the historical ``mloc``-sized slices, bit-identical
+      layout) or ``"degree"`` (hub-aware greedy bin-packing: neurons are
+      placed heaviest-degree-first onto the least-loaded shard, so the
+      hubs of a power-law graph spread across devices instead of piling
+      onto whichever slice they fall in — :func:`partition_neurons`).
+      Per-shard occupancy lands on ``ShardedCompiled.occupancy`` so the
+      planner can report imbalance (:func:`partition_stats`).
 
     Frozen and hashable, so a plan can ride through
     ``jit(static_argnames=...)`` with the backend.
@@ -160,6 +171,7 @@ class SystemPlan:
     backend: Optional[str] = None
     kernel: Optional[KernelConfig] = None
     semantics: str = "no_delays"
+    partition: str = "contiguous"
 
     def __post_init__(self) -> None:
         if self.encoding not in _ENCODINGS:
@@ -182,6 +194,9 @@ class SystemPlan:
             raise ValueError(
                 f"plan kernel must be a KernelConfig or None, "
                 f"got {type(self.kernel).__name__}")
+        if self.partition not in _PARTITIONS:
+            raise ValueError(
+                f"unknown partition {self.partition!r}; one of {_PARTITIONS}")
 
     @staticmethod
     def default() -> "SystemPlan":
@@ -234,8 +249,11 @@ class SystemPlan:
         if num_shards == 1 and kin > 2 * h:
             return SystemPlan(encoding="hybrid", hub_threshold=h,
                               mode=mode, semantics=semantics)
+        # Heavy-tailed graph over >1 shard: spread the hubs (the same
+        # degree test that triggers hybrid single-device).
+        part = "degree" if (num_shards > 1 and kin > 2 * h) else "contiguous"
         return SystemPlan(encoding="ell", num_shards=num_shards, mode=mode,
-                          semantics=semantics)
+                          semantics=semantics, partition=part)
 
     def resolved_hub_threshold(self, system: SNPSystem) -> Optional[int]:
         """The hub threshold ``compile_system_sparse`` should cap ELL rows
@@ -300,6 +318,9 @@ class ShardArrays(NamedTuple):
     send_idx: jnp.ndarray       # (S, S, Hmax) i32 — local ids, pad mloc
     out_local: jnp.ndarray      # (S,) i32 — local output neuron or mloc
     init_loc: jnp.ndarray       # (S, mloc) i32 — C_0 slices (zero padded)
+    global_idx: jnp.ndarray     # (S, mloc) i32 — global neuron id per
+    #   column (pads get the unused ids m..S·mloc-1); feeds zobrist
+    #   positions + archive reassembly under any partition
 
 
 class ShardView(NamedTuple):
@@ -364,15 +385,100 @@ class ShardedCompiled:
     num_shards: int             # S
     halo_width: int             # Hmax
     dense: Optional[DenseShardArrays] = None
+    occupancy: Optional[np.ndarray] = None   # (S,) degree weight per shard
 
     @property
     def init_config(self) -> jnp.ndarray:
-        """Full (m,) initial configuration, reassembled from the slices."""
-        return self.arrays.init_loc.reshape(-1)[: self.num_neurons]
+        """Full (m,) initial configuration, reassembled from the slices
+        via the column→global-neuron map (identity for contiguous
+        partitions, a scatter for degree-weighted ones)."""
+        flat = self.arrays.init_loc.reshape(-1)
+        gidx = self.arrays.global_idx.reshape(-1)
+        return jnp.zeros_like(flat).at[gidx].set(flat)[: self.num_neurons]
 
 
 def is_sharded(obj) -> bool:
     return isinstance(obj, ShardedCompiled)
+
+
+def _degree_weights(system: SNPSystem) -> np.ndarray:
+    """Per-neuron work weight: in-degree + out-degree + 1.  Degree drives
+    both the gather width a neuron costs per step (in-adjacency rows) and
+    the halo traffic it can induce (out-synapses crossing shards); the +1
+    floors isolated neurons at one slot of work."""
+    syn = np.asarray(system.synapses, np.int64).reshape(-1, 2)
+    w = np.ones((system.num_neurons,), np.int64)
+    if syn.size:
+        w += np.bincount(syn[:, 0], minlength=system.num_neurons)
+        w += np.bincount(syn[:, 1], minlength=system.num_neurons)
+    return w
+
+
+def partition_neurons(system: SNPSystem, num_shards: int,
+                      partition: str = "contiguous"
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                 np.ndarray]:
+    """Neuron→shard assignment: ``(shard_of (m,), local_of (m,),
+    global_idx (S, mloc), occupancy (S,))``.
+
+    ``"contiguous"`` is the historical slicing (neuron ``j`` → shard
+    ``j // mloc``).  ``"degree"`` is LPT-style greedy bin-packing under
+    the hard capacity ``mloc``: neurons in descending degree-weight order
+    (ties by index — deterministic) each go to the least-loaded shard
+    with a free slot (ties to the lowest shard id).  On a power-law
+    graph the hubs land on *different* shards, so per-shard occupancy
+    (summed :func:`_degree_weights`) flattens instead of tracking
+    whichever contiguous slice the hubs fell into.
+
+    ``global_idx[d, c]`` is the global neuron a shard column holds; pad
+    columns take the unused ids ``m..S·mloc-1`` so every column has a
+    distinct global position (the zobrist position space stays injective,
+    and pads — always zero spikes — contribute a constant to every
+    hash)."""
+    if partition not in _PARTITIONS:
+        raise ValueError(
+            f"unknown partition {partition!r}; one of {_PARTITIONS}")
+    S, m = num_shards, system.num_neurons
+    mloc = -(-m // S)
+    w = _degree_weights(system)
+    if partition == "contiguous":
+        ids = np.arange(m, dtype=np.int64)
+        shard_of = (ids // mloc).astype(np.int32)
+        local_of = (ids % mloc).astype(np.int32)
+        global_idx = np.arange(S * mloc, dtype=np.int32).reshape(S, mloc)
+    else:
+        shard_of = np.zeros((m,), np.int32)
+        local_of = np.zeros((m,), np.int32)
+        load = np.zeros((S,), np.int64)
+        cnt = np.zeros((S,), np.int64)
+        for j in np.argsort(-w, kind="stable"):
+            free = np.flatnonzero(cnt < mloc)
+            d = int(free[np.argmin(load[free])])
+            shard_of[j] = d
+            local_of[j] = cnt[d]
+            load[d] += w[j]
+            cnt[d] += 1
+        global_idx = np.zeros((S, mloc), np.int32)
+        global_idx[shard_of, local_of] = np.arange(m, dtype=np.int32)
+        pad = m
+        for d in range(S):
+            for c in range(int(cnt[d]), mloc):
+                global_idx[d, c] = pad
+                pad += 1
+    occupancy = np.zeros((S,), np.int64)
+    np.add.at(occupancy, shard_of, w)
+    return shard_of, local_of, global_idx, occupancy
+
+
+def partition_stats(occupancy: np.ndarray) -> dict:
+    """Imbalance summary of a shard assignment: max / mean per-shard
+    occupancy and their ratio (1.0 = perfectly level).  The planner and
+    the ``explore/partition`` bench tier report these."""
+    occ = np.asarray(occupancy, np.float64)
+    mean = float(occ.mean()) if occ.size else 0.0
+    mx = float(occ.max()) if occ.size else 0.0
+    return {"max": mx, "mean": mean,
+            "imbalance": (mx / mean) if mean else 1.0}
 
 
 def compile_sharded(system: SNPSystem, plan: SystemPlan) -> ShardedCompiled:
@@ -416,10 +522,20 @@ def compile_sharded(system: SNPSystem, plan: SystemPlan) -> ShardedCompiled:
     low = _lower(system)
     n = low.neuron.shape[0]
     mloc = -(-m // S)
+    # Neuron→shard assignment: everything below speaks shard_of/local_of,
+    # so contiguous slices and degree-weighted packing share one lowering
+    # (contiguous reduces to the historical // mloc arithmetic exactly).
+    shard_of, local_of, global_idx, occupancy = partition_neurons(
+        system, S, plan.partition)
 
     # -- rules, re-indexed to local neurons, padded with dummies ----------
-    rule_shard = low.neuron.astype(np.int64) // mloc
-    counts = np.bincount(rule_shard, minlength=S)
+    # Grouped by shard, sorted by *local* neuron (stable): the segment
+    # tables index rules by local id, and under a degree partition local
+    # order no longer matches the lowering's global-neuron sort.
+    r_shard = shard_of[low.neuron]
+    r_local = local_of[low.neuron]
+    rorder = np.lexsort((r_local, r_shard))
+    counts = np.bincount(r_shard, minlength=S)
     nloc = int(max(1, counts.max()))
     starts = np.cumsum(counts) - counts
 
@@ -432,8 +548,8 @@ def compile_sharded(system: SNPSystem, plan: SystemPlan) -> ShardedCompiled:
     seg_count = np.zeros((S, mloc), np.int32)
     for d in range(S):
         k = int(counts[d])
-        sl = slice(int(starts[d]), int(starts[d]) + k)
-        rn[d, :k] = low.neuron[sl] - d * mloc
+        sl = rorder[int(starts[d]): int(starts[d]) + k]
+        rn[d, :k] = r_local[sl]
         cons[d, :k] = low.consume[sl]
         prod[d, :k] = low.produce[sl]
         base[d, :k] = low.regex_base[sl]
@@ -445,7 +561,7 @@ def compile_sharded(system: SNPSystem, plan: SystemPlan) -> ShardedCompiled:
 
     # -- halo metadata: which locals each shard ships to each peer --------
     src, dst = low.src.astype(np.int64), low.dst.astype(np.int64)
-    ssh, dsh = src // mloc, dst // mloc
+    ssh, dsh = shard_of[src], shard_of[dst]
     halo = {}
     hmax = 1
     for o in range(S):
@@ -456,9 +572,12 @@ def compile_sharded(system: SNPSystem, plan: SystemPlan) -> ShardedCompiled:
             if need.size:
                 halo[(o, d)] = need
                 hmax = max(hmax, int(need.size))
+    # slot p of the (o, d) halo carries the p-th *globally-sorted* needed
+    # source; its local id on shard o is local_of[need[p]] (not ascending
+    # under a degree partition — the order just has to match in_idx below)
     send_idx = np.full((S, S, hmax), mloc, np.int32)
     for (o, d), need in halo.items():
-        send_idx[o, d, : need.size] = need - o * mloc
+        send_idx[o, d, : need.size] = local_of[need]
 
     # -- in-adjacency in extended [local | halo | zero] index space -------
     in_deg = np.bincount(dst, minlength=m)
@@ -469,22 +588,23 @@ def compile_sharded(system: SNPSystem, plan: SystemPlan) -> ShardedCompiled:
         order = np.lexsort((src, dst))
         s_s, d_s = src[order], dst[order]
         slot = _ragged_arange(in_deg)
-        e_dsh, e_ssh = d_s // mloc, s_s // mloc
-        ext = np.where(e_ssh == e_dsh, s_s - e_dsh * mloc, -1)
+        e_dsh, e_ssh = shard_of[d_s], shard_of[s_s]
+        ext = np.where(e_ssh == e_dsh, local_of[s_s], -1)
         for (o, d), need in halo.items():
             sel = (e_ssh == o) & (e_dsh == d)
             if sel.any():
                 pos = np.searchsorted(need, s_s[sel])
                 ext[sel] = mloc + o * hmax + pos
-        in_idx[e_dsh, d_s - e_dsh * mloc, slot] = ext
+        in_idx[e_dsh, local_of[d_s], slot] = ext
 
     out_local = np.full((S,), mloc, np.int32)
     if system.output_neuron >= 0:
-        out_local[system.output_neuron // mloc] = \
-            system.output_neuron % mloc
+        out_local[shard_of[system.output_neuron]] = \
+            local_of[system.output_neuron]
 
-    init = np.zeros((S * mloc,), np.int32)
-    init[:m] = np.asarray(system.initial_spikes, np.int32)
+    init_loc = np.zeros((S, mloc), np.int32)
+    init_loc[shard_of, local_of] = np.asarray(system.initial_spikes,
+                                              np.int32)
 
     arrays = ShardArrays(
         rule_neuron=jnp.asarray(rn), consume=jnp.asarray(cons),
@@ -494,11 +614,12 @@ def compile_sharded(system: SNPSystem, plan: SystemPlan) -> ShardedCompiled:
         rule_slots=jnp.arange(R, dtype=jnp.int32),
         in_idx=jnp.asarray(in_idx), send_idx=jnp.asarray(send_idx),
         out_local=jnp.asarray(out_local),
-        init_loc=jnp.asarray(init.reshape(S, mloc)),
+        init_loc=jnp.asarray(init_loc),
+        global_idx=jnp.asarray(global_idx),
     )
     return ShardedCompiled(arrays=arrays, plan=plan, num_neurons=m,
                            num_rules=n, shard_size=mloc, num_shards=S,
-                           halo_width=hmax)
+                           halo_width=hmax, occupancy=occupancy)
 
 
 def lower_shard_dense(comp: ShardedCompiled) -> ShardedCompiled:

@@ -29,7 +29,8 @@ __all__ = ["ShardingPlan", "make_plan", "neuron_axis"]
 
 
 def neuron_axis(num_shards: int, *, encoding: str = "ell",
-                hub_threshold: Optional[int] = None) -> SystemPlan:
+                hub_threshold: Optional[int] = None,
+                partition: str = "contiguous") -> SystemPlan:
     """A :class:`~repro.core.plan.SystemPlan` that partitions the SNP
     neuron axis over ``num_shards`` devices — the plan
     ``explore_distributed`` consumes for its neuron-axis-sharded frontier
@@ -39,9 +40,12 @@ def neuron_axis(num_shards: int, *, encoding: str = "ell",
     registry declares ``"sharded"`` steps the shards — including the
     fused kernels (DESIGN.md §3 "Kernel lowering").  ``encoding="hybrid"``
     combined with ``num_shards > 1`` is refused at compile time (the
-    per-shard encodings are ELL; hub tails inflate the halo instead)."""
+    per-shard encodings are ELL; hub tails inflate the halo instead).
+    ``partition="degree"`` spreads hub neurons across shards by greedy
+    degree-weighted bin-packing instead of contiguous slices
+    (:func:`repro.core.plan.partition_neurons`)."""
     return SystemPlan(encoding=encoding, hub_threshold=hub_threshold,
-                      num_shards=num_shards)
+                      num_shards=num_shards, partition=partition)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -270,14 +274,15 @@ class ShardingPlan:
 
     # ---- SNP partition planning ---------------------------------------------
     def neuron_axis(self, *, encoding: str = "ell",
-                    hub_threshold: Optional[int] = None) -> SystemPlan:
+                    hub_threshold: Optional[int] = None,
+                    partition: str = "contiguous") -> SystemPlan:
         """Neuron-axis :class:`~repro.core.plan.SystemPlan` sized to this
         plan's mesh: all devices (model/TP axes included — SNP exploration
         is pure data parallelism) contribute one neuron shard each.  Pair
         it with :meth:`trace_mesh`'s flattening convention and pass to
         ``explore_distributed(plan=...)``."""
         return neuron_axis(int(self.mesh.devices.size), encoding=encoding,
-                           hub_threshold=hub_threshold)
+                           hub_threshold=hub_threshold, partition=partition)
 
     # ---- SNP trace serving --------------------------------------------------
     def trace_mesh(self) -> Mesh:

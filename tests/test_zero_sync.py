@@ -1,0 +1,195 @@
+"""Zero-host-sync distributed BFS + degree-weighted partitioning.
+
+The fused ``lax.while_loop`` drivers must perform **no host transfer
+between BFS levels**: without checkpointing, one device call covers the
+whole run, and ``jax.transfer_guard_device_to_host("disallow")`` around
+the call proves no implicit device→host readback happens before the
+final (explicit ``jax.device_get``) readout.  The 8-device subprocess
+variants re-check under a real mesh, including empty neuron shards
+(m < ndev) and the overflow regime; the degree-weighted partition cells
+assert both equivalence and the occupancy win it exists for.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import compile_sharded, explore, partition_stats, paper_pi
+from repro.core.distributed import explore_distributed
+from repro.core.generators import power_law, random_system
+from repro.runtime.faults import FaultInjector
+from repro.sharding import neuron_axis
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(ndev: int, body: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(body)],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+
+
+# ---------------------------------------------------------------------------
+# in-process (1-device mesh): the guards hold on any device count
+# ---------------------------------------------------------------------------
+
+
+def test_dense_explore_zero_host_transfers_inprocess():
+    import jax
+    comp_kw = dict(max_steps=12, frontier_cap=32, visited_cap=512,
+                   max_branches=16)
+    system = paper_pi(True)
+    want = explore(system, dedup="sort", **comp_kw)
+    with jax.transfer_guard_device_to_host("disallow"):
+        got = explore_distributed(system, **comp_kw)
+    assert {tuple(r) for r in got.configs} == \
+        {tuple(r) for r in want.configs}
+
+
+def test_dense_explore_is_one_device_call_without_checkpointing():
+    """The whole BFS is ONE fused device program: the fault injector's
+    device-call counter (bumped once per dispatched loop) must read
+    exactly 1 after an un-checkpointed run."""
+    inj = FaultInjector()
+    explore_distributed(paper_pi(True), max_steps=12, frontier_cap=32,
+                        visited_cap=512, max_branches=16,
+                        fault_injector=inj)
+    assert inj.calls == 1
+
+
+def test_checkpointed_run_syncs_only_at_chunk_boundaries(tmp_path):
+    inj = FaultInjector()
+    r = explore_distributed(paper_pi(True), max_steps=12, frontier_cap=32,
+                            visited_cap=512, max_branches=16,
+                            checkpoint_dir=str(tmp_path),
+                            checkpoint_every=4, fault_injector=inj)
+    # ceil(steps / 4) chunks, one device call each
+    assert inj.calls == -(-r.steps // 4)
+
+
+# ---------------------------------------------------------------------------
+# 8-device subprocess: both schemes under the transfer guard
+# ---------------------------------------------------------------------------
+
+
+def test_zero_host_sync_8dev_both_schemes():
+    proc = _run(8, """
+        import jax
+        from repro.core import explore, paper_pi
+        from repro.core.distributed import explore_distributed
+        from repro.core.generators import power_law
+        from repro.runtime.faults import FaultInjector
+        from repro.sharding import neuron_axis
+
+        assert len(jax.devices()) == 8
+        kw = dict(max_steps=12, frontier_cap=64, visited_cap=512,
+                  max_branches=16)
+        system = paper_pi(True)       # m = 3 < 8: most shards are empty
+        want = {tuple(r) for r in explore(system, dedup="sort",
+                                          **kw).configs}
+
+        inj = FaultInjector()
+        with jax.transfer_guard_device_to_host("disallow"):
+            rd = explore_distributed(system, fault_injector=inj, **kw)
+        assert {tuple(r) for r in rd.configs} == want
+        assert inj.calls == 1
+
+        inj = FaultInjector()
+        with jax.transfer_guard_device_to_host("disallow"):
+            rn = explore_distributed(system, plan=neuron_axis(8),
+                                     fault_injector=inj, **kw)
+        assert {tuple(r) for r in rn.configs} == want
+        assert inj.calls == 1
+
+        # overflow regime: flags must still come back, archive sound
+        hard = power_law(26, 3, seed=6)
+        truth = {tuple(r) for r in explore(
+            hard, max_steps=6, frontier_cap=4096, visited_cap=65536,
+            max_branches=64, dedup="sort").configs}
+        with jax.transfer_guard_device_to_host("disallow"):
+            ro = explore_distributed(hard, max_steps=6, frontier_cap=8,
+                                     visited_cap=512, max_branches=64)
+        assert ro.frontier_overflow and not ro.exhausted
+        assert {tuple(r) for r in ro.configs} <= truth
+        print("OK", rd.num_discovered, rn.num_discovered)
+    """)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# degree-weighted shard rebalancing
+# ---------------------------------------------------------------------------
+
+
+def test_degree_partition_flattens_occupancy():
+    """On a heavy-tailed graph LPT packing must strictly lower the max
+    per-shard degree load vs the contiguous slicing (the hubs spread
+    instead of stacking into whichever slice they fell)."""
+    system = power_law(48, 3, seed=3)
+    occ = {}
+    for part in ("contiguous", "degree"):
+        comp = compile_sharded(system, neuron_axis(4, partition=part))
+        occ[part] = partition_stats(comp.occupancy)
+    assert occ["degree"]["max"] < occ["contiguous"]["max"]
+    assert occ["degree"]["imbalance"] < occ["contiguous"]["imbalance"]
+    # mean weight is partition-invariant (same neurons, same weights)
+    assert occ["degree"]["mean"] == pytest.approx(
+        occ["contiguous"]["mean"])
+
+
+def test_degree_partition_is_deterministic():
+    from repro.core import partition_neurons
+    system = power_law(32, 3, seed=1)
+    a = partition_neurons(system, 4, "degree")
+    b = partition_neurons(system, 4, "degree")
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_degree_partition_matches_single_device_4dev():
+    proc = _run(4, """
+        from repro.core import explore
+        from repro.core.generators import power_law, random_system
+        from repro.core.distributed import explore_distributed
+        from repro.sharding import neuron_axis
+
+        for system in (power_law(26, 3, seed=6),
+                       random_system(9, 2, 0.3, seed=1)):
+            # overflow-free caps: under frontier overflow the survivor
+            # choice follows candidate enumeration order, which a
+            # permuted partition legitimately changes
+            kw = dict(max_steps=4, frontier_cap=512, visited_cap=2048,
+                      max_branches=32)
+            want = explore(system, dedup="sort", **kw)
+            got = explore_distributed(
+                system, plan=neuron_axis(4, partition="degree"), **kw)
+            assert not (got.frontier_overflow or want.frontier_overflow)
+            assert {tuple(r) for r in got.configs} == \\
+                {tuple(r) for r in want.configs}, system.name
+            assert got.num_discovered == want.num_discovered
+        print("OK")
+    """)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK" in proc.stdout
+
+
+def test_auto_plan_picks_degree_partition_for_hub_graphs():
+    """SystemPlan.for_system flips to the degree partition when the
+    max in-degree dwarfs the mean (hub regime) on a multi-shard plan."""
+    from repro.core import SystemPlan
+    hubby = power_law(400, 3, seed=0)     # unbounded hub (heavy-tailed)
+    plan = SystemPlan.for_system(hubby, num_shards=4)
+    assert plan.partition == "degree"
+    flat = random_system(16, 2, 0.2, seed=4)
+    assert SystemPlan.for_system(flat, num_shards=4).partition \
+        == "contiguous"
+    assert SystemPlan.for_system(hubby).partition == "contiguous"

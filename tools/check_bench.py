@@ -66,6 +66,8 @@ KNOWN_KEYS = {
     "no_delays", "delays",
     # planner tier row kinds (auto tier)
     "auto", "best", "worst",
+    # explore dedup tier (visited-set scheme) + shard partitions
+    "sorted", "hash", "contiguous", "degree",
 }
 _MESH = re.compile(r"^mesh\d+$")
 
